@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing + the four paper workloads (Table I).
+
+ScanNet/SemanticKITTI/KITTI/nuScenes are substituted by geometry-matched
+synthetic scenes (DESIGN.md §7.5): Seg(i) = indoor RGB-D-like, Seg(o)/Det(k)
+/Det(n) = LiDAR ring scans at three densities. Voxel counts are chosen to
+match the paper's regimes (ScanNet ~50k points -> ~20k voxels etc.) while
+staying CPU-tractable.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.data import pointcloud
+
+BENCHMARKS = {
+    # name: (scene kind, max_voxels, batch)
+    "Seg(i)": ("indoor", 16384, 1),
+    "Seg(o)": ("lidar", 16384, 1),
+    "Det(k)": ("lidar", 8192, 1),
+    "Det(n)": ("lidar", 12288, 1),
+}
+
+
+def workload(name: str, seed: int = 0) -> pointcloud.VoxelBatch:
+    kind, n, b = BENCHMARKS[name]
+    rng = np.random.default_rng(seed)
+    return pointcloud.make_batch(rng, kind, batch_size=b, max_voxels=n)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (s) of a blocking call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,64 @@
+"""Fig. 10: end-to-end framerate / energy vs a dense-serial reference.
+
+The paper's comparison normalizes against peak throughput; we reproduce the
+SpOctA-side numbers with the cycle model over MinkUNet(small/large) and
+SECOND(small/large) layer schedules on the four workloads, reporting:
+
+  * fps for SpOctA (400 MHz, 256 MACs/cycle) with all three optimizations,
+  * speedup vs the same PE array driven serially without OCTENT / pipeline
+    / SPAC (the "prior accelerator" regime the paper beats 1.1-6.9x),
+  * energy per frame from the §VI energy constants.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, workload
+from repro.core import caching, cyclemodel, mapsearch, morton, rulebook
+
+# layer schedules (C_in, C_out) approximating MinkUNet/SECOND backbones
+NETS = {
+    "Seg(i)": [(4, 32)] + [(32, 32)] * 4 + [(32, 64), (64, 64), (64, 96),
+                                            (96, 96)] * 2,
+    "Seg(o)": [(4, 32)] + [(32, 64), (64, 64)] * 3 + [(64, 128),
+                                                      (128, 128)] * 3,
+    "Det(k)": [(4, 16)] * 2 + [(16, 32), (32, 32)] * 2 + [(32, 64),
+                                                          (64, 64)] * 2,
+    "Det(n)": [(4, 16)] * 2 + [(16, 32), (32, 32)] * 3 + [(32, 64),
+                                                          (64, 64)] * 3,
+}
+VALUE_SPARSITY = 0.5      # Fig. 3(b) midpoint
+
+
+def run(full: bool = True) -> list[str]:
+    rows = []
+    names = list(NETS) if full else ["Seg(i)"]
+    for name in names:
+        vb = workload(name)
+        n = int(vb.valid.sum())
+        offs = jnp.asarray(morton.subm3_offsets())
+        kmap = mapsearch.build_kmap_octree(
+            jnp.asarray(vb.coords), jnp.asarray(vb.batch),
+            jnp.asarray(vb.valid), offs, max_blocks=vb.coords.shape[0])
+        n_maps = int((np.asarray(kmap) >= 0).sum())
+        counts = np.asarray(rulebook.tap_counts(jnp.asarray(kmap)))
+
+        ours = base = energy = 0.0
+        for c_in, c_out in NETS[name]:
+            lat = cyclemodel.layer_latency(n, n_maps, c_in, c_out,
+                                           VALUE_SPARSITY)
+            ours += lat.fine_spac
+            # prior regime: serial search + no overlap + dense compute
+            base += (cyclemodel.search_cycles(n).hash_serial
+                     + cyclemodel.dense_compute_cycles(n_maps, c_in, c_out))
+            traffic = caching.weight_traffic(
+                counts, c_in, c_out, capacity_bytes=27 * 32 * 32)
+            energy += cyclemodel.layer_energy_pj(
+                n_maps, c_in, c_out, VALUE_SPARSITY, traffic.bytes_fetched)
+        fps = cyclemodel.FREQ_HZ / ours
+        rows.append(csv_row(
+            f"fig10_overall/{name}", ours / cyclemodel.FREQ_HZ * 1e6,
+            f"fps={fps:.1f};speedup_vs_serial_dense={base / ours:.2f}x;"
+            f"energy_mJ_per_frame={energy * 1e-9:.3f}"))
+    return rows

@@ -1,0 +1,81 @@
+"""Roofline aggregator: dry-run JSONs -> §Roofline table (markdown + CSV).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--tag TAG] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single", tag: str = "") -> list[dict]:
+    recs = []
+    suffix = f"__{tag}" if tag else ""
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        if parts[2] != mesh:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return recs
+
+
+def fmt_s(x) -> str:
+    return f"{x:.3e}" if isinstance(x, (int, float)) else "-"
+
+
+def table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | MODEL/HLO flops | per-dev temp GiB | status |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in recs:
+        if r["status"] == "ok":
+            temp = r.get("memory_analysis", {}).get("temp_size_in_bytes")
+            temp_s = f"{temp / 2**30:.2f}" if temp else "-"
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {fmt_s(r.get('compute_s'))} "
+                f"| {fmt_s(r.get('memory_s'))} | {fmt_s(r.get('collective_s'))} "
+                f"| {r.get('dominant', '-').replace('_s', '')} "
+                f"| {r.get('roofline_fraction', 0):.3f} "
+                f"| {r.get('useful_flops_ratio', 0):.3f} "
+                f"| {temp_s} | ok |")
+        else:
+            reason = r.get("skip_reason") or r.get("error", "")
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                         f"| - | - | {r['status']}: {reason[:60]} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    print(table(recs))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\ncells ok={len(ok)} "
+              f"skip={sum(r['status'] == 'skip' for r in recs)} "
+              f"fail={sum(r['status'] == 'fail' for r in recs)}; "
+              f"dominant terms: {doms}")
+
+
+if __name__ == "__main__":
+    main()

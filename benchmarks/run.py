@@ -1,0 +1,42 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. REPRO_BENCH_FAST=1 runs the
+reduced sweep (CI); the full sweep reproduces every claim band in
+EXPERIMENTS.md §Paper-fidelity.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
+    from benchmarks import (caching_energy, overall_comparison,
+                            search_speedup, sparsity_saving,
+                            weight_distribution)
+
+    suites = [
+        ("fig9a_search", search_speedup.run),
+        ("fig8a_weightdist", weight_distribution.run),
+        ("fig9b_sparsity", sparsity_saving.run),
+        ("fig9c_caching", caching_energy.run),
+        ("fig10_overall", overall_comparison.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn(full=full):
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

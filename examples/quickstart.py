@@ -1,0 +1,59 @@
+"""Quickstart: the SpOctA pipeline on one synthetic LiDAR scan.
+
+Octree-encode -> OCTENT parallel map search -> SPAC sparse conv ->
+non-uniform caching report. Mirrors Fig. 4's dataflow end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import caching, mapsearch, morton, rulebook, sparsity, spconv
+from repro.data import pointcloud
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    vb = pointcloud.make_batch(rng, "lidar", batch_size=1, max_voxels=4096)
+    n = int(vb.valid.sum())
+    print(f"voxelized scan: {n} voxels, grid extent "
+          f"{vb.coords[vb.valid].max(0)}")
+
+    # --- OCTENT map search (paper §IV) -----------------------------------
+    offs = jnp.asarray(morton.subm3_offsets())
+    kmap = mapsearch.build_kmap_octree(
+        jnp.asarray(vb.coords), jnp.asarray(vb.batch), jnp.asarray(vb.valid),
+        offs, max_blocks=4096)
+    n_maps = int((np.asarray(kmap) >= 0).sum())
+    print(f"OCTENT search: {n_maps} IN-OUT maps "
+          f"({n_maps / max(n, 1):.1f} per voxel)")
+
+    # --- weight-distribution skew (Fig. 8a) ------------------------------
+    counts = np.asarray(rulebook.tap_counts(kmap))
+    mid = sum(int(counts[t]) for t in range(27)
+              if caching.tap_partition(t) in ("center", "mid"))
+    print(f"delta_z=0 taps serve {mid / n_maps:.0%} of maps "
+          f"(paper: 45-83% on LiDAR)")
+
+    # --- one Subm3 layer with SPAC (paper §V) -----------------------------
+    st = spconv.SparseTensor(
+        jnp.asarray(vb.coords), jnp.asarray(vb.batch), jnp.asarray(vb.valid),
+        jnp.asarray(vb.feats))
+    params = spconv.init_conv(jax.random.key(0), 27, 4, 32)
+    out = spconv.subm_conv3(st, params, max_blocks=4096)
+    out = spconv.relu(out)
+    stats = sparsity.sparsity_stats(out.feats, kmap, 32)
+    print(f"post-ReLU inherent sparsity: "
+          f"{float(stats.element_sparsity):.0%} elements "
+          f"(paper Fig. 3b: 40-60%)")
+
+    # --- non-uniform caching (paper §V-C) ---------------------------------
+    saving = caching.saving(counts, 64, 64, capacity_bytes=27 * 32 * 32)
+    print(f"non-uniform caching saves {saving:.0%} DRAM energy at C_in=64")
+    print("output features:", out.feats.shape, "finite:",
+          bool(jnp.isfinite(out.feats).all()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""SpOctA core: octree map search, sparse conv, sparsity, caching, cycles."""
+from repro.core import (  # noqa: F401
+    caching,
+    cyclemodel,
+    mapsearch,
+    morton,
+    rulebook,
+    sparsity,
+    spconv,
+)
+from repro.core.spconv import SparseTensor  # noqa: F401

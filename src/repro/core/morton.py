@@ -1,0 +1,162 @@
+"""Octree / Morton encoding (SpOctA eq. 3) and block partitioning.
+
+The paper encodes a voxel coordinate theta = (x, y, z) as an octree code
+
+    Phi = (phi_i, ..., phi_1),   phi_level = {z_l y_l x_l}_2            (eq. 3)
+
+i.e. bit-interleaving with x in the least-significant position of each octal
+digit. SpOctA restricts the search space to 16^3 blocks so a block's octree
+table fits on chip (8 banks x 512 entries, bank = phi_1). We mirror that
+exactly:
+
+  * ``local code``  = 12-bit Morton code of (x & 15, y & 15, z & 15)
+                      -> bank   = phi_1 = code & 7   (lowest octal digit)
+                      -> address = code >> 3          (the 512-entry bank row)
+  * ``block key``   = Morton code of (x >> 4, y >> 4, z >> 4) with the batch
+                      index in the top bits (so maps never cross batch items).
+
+All functions are vectorized, jit-safe and shape-polymorphic over leading
+axes. int32 throughout; see :func:`block_key` for the bit-budget contract.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+BLOCK_BITS = 4               # 16^3 blocks, as in the paper
+BLOCK_SIZE = 1 << BLOCK_BITS
+LOCAL_CODE_BITS = 3 * BLOCK_BITS          # 12-bit within-block code
+BANK_COUNT = 8                            # phi_1 selects one of 8 banks
+BANK_ROWS = 1 << (LOCAL_CODE_BITS - 3)    # 512 rows per bank
+TABLE_SIZE = BANK_COUNT * BANK_ROWS       # 4096 = 16^3
+
+
+def _part1by2(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Spread the low ``bits`` bits of ``v`` so consecutive bits are 3 apart.
+
+    Magic-number bit smearing (works for bits <= 10 in int32).
+    """
+    v = v.astype(jnp.int32) & ((1 << bits) - 1)
+    v = (v | (v << 16)) & 0x030000FF
+    v = (v | (v << 8)) & 0x0300F00F
+    v = (v | (v << 4)) & 0x030C30C3
+    v = (v | (v << 2)) & 0x09249249
+    return v
+
+
+def _compact1by2(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`_part1by2`."""
+    v = v.astype(jnp.int32) & 0x09249249
+    v = (v | (v >> 2)) & 0x030C30C3
+    v = (v | (v >> 4)) & 0x0300F00F
+    v = (v | (v >> 8)) & 0x030000FF
+    v = (v | (v >> 16)) & 0x000003FF
+    return v & ((1 << bits) - 1)
+
+
+def interleave3(coords: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Morton-encode ``coords[..., (x, y, z)]`` -> int32 code, x at bit 0.
+
+    Matches eq. (3): each octal digit is {z y x}.
+    """
+    x, y, z = coords[..., 0], coords[..., 1], coords[..., 2]
+    return (
+        _part1by2(x, bits)
+        | (_part1by2(y, bits) << 1)
+        | (_part1by2(z, bits) << 2)
+    )
+
+
+def deinterleave3(code: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`interleave3`; returns (..., 3) coords."""
+    x = _compact1by2(code, bits)
+    y = _compact1by2(code >> 1, bits)
+    z = _compact1by2(code >> 2, bits)
+    return jnp.stack([x, y, z], axis=-1)
+
+
+def local_code(coords: jnp.ndarray) -> jnp.ndarray:
+    """12-bit within-block octree code (the table address {phi_hi, phi_1})."""
+    return interleave3(coords & (BLOCK_SIZE - 1), BLOCK_BITS)
+
+
+def bank_and_row(code: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a local code into (bank = phi_1, row address) — Fig. 6(a)."""
+    return code & (BANK_COUNT - 1), code >> 3
+
+
+def block_key(coords: jnp.ndarray, batch: jnp.ndarray, grid_bits: int = 7,
+              batch_bits: int = 4) -> jnp.ndarray:
+    """Morton key of the 16^3 block containing each voxel, batch-tagged.
+
+    Bit budget (int32, must stay < 31 bits): 3*grid_bits for the block Morton
+    code + batch_bits on top. Defaults allow a 2048-voxel-per-axis grid
+    (128 blocks/axis) and batch 16. Raise ``grid_bits`` for larger scenes.
+    """
+    assert 3 * grid_bits + batch_bits <= 31, "block key overflows int32"
+    bcode = interleave3(coords >> BLOCK_BITS, grid_bits)
+    return bcode | (batch.astype(jnp.int32) << (3 * grid_bits))
+
+
+def child_octant(coords: jnp.ndarray) -> jnp.ndarray:
+    """phi_1 of the coordinate = which child of its size-2 octree parent.
+
+    Used by Gconv2/Tconv2: the 8 kernel taps of a 2^3 stride-2 kernel are
+    exactly the 8 octants (paper §IV-D1: PNELUT collapses to one column).
+    """
+    return (
+        (coords[..., 0] & 1)
+        | ((coords[..., 1] & 1) << 1)
+        | ((coords[..., 2] & 1) << 2)
+    )
+
+
+# ---------------------------------------------------------------------------
+# PNELUT — Parallel Neighbor-Encoding LUT (Fig. 5(b))
+# ---------------------------------------------------------------------------
+
+def subm3_offsets() -> np.ndarray:
+    """The 27 kernel offsets of Subm3 in weight-index order (x fastest)."""
+    rng = (-1, 0, 1)
+    return np.array(
+        [(dx, dy, dz) for dz in rng for dy in rng for dx in rng],
+        dtype=np.int32,
+    )
+
+
+def build_pnelut() -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build the PNELUT: for each center phi_1 (8) the 27 neighbor queries
+    regrouped by *their* phi_1' (the bank they hit).
+
+    Returns
+    -------
+    lut_offsets : (8, 8, max_rot) int32 — offset indices (into
+        :func:`subm3_offsets`) grouped [center_phi1, neighbor_bank, slot];
+        -1 padding. ``max_rot`` is the bank-conflict depth == the number of
+        query cycles the Query Transmitter needs (8 for Subm3, paper §IV-B2).
+    depth : (8, 8) int32 — valid entries per row.
+    max_rot : int — worst-case row depth (asserted == 8 in tests).
+    """
+    offs = subm3_offsets()
+    groups: list[list[list[int]]] = [[[] for _ in range(8)] for _ in range(8)]
+    for p1 in range(8):
+        cx, cy, cz = p1 & 1, (p1 >> 1) & 1, (p1 >> 2) & 1
+        for oi, (dx, dy, dz) in enumerate(offs):
+            nb = ((cx + dx) & 1) | (((cy + dy) & 1) << 1) | (((cz + dz) & 1) << 2)
+            groups[p1][nb].append(oi)
+    max_rot = max(len(g) for row in groups for g in row)
+    lut = np.full((8, 8, max_rot), -1, dtype=np.int32)
+    depth = np.zeros((8, 8), dtype=np.int32)
+    for p1 in range(8):
+        for b in range(8):
+            for s, oi in enumerate(groups[p1][b]):
+                lut[p1, b, s] = oi
+            depth[p1, b] = len(groups[p1][b])
+    return lut, depth, max_rot
+
+
+def pnelut_query_cycles() -> int:
+    """Query cycles per voxel for Subm3 with 8 parallel banks (paper: 8)."""
+    _, _, max_rot = build_pnelut()
+    return max_rot

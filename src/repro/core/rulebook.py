@@ -1,0 +1,97 @@
+"""Rulebook execution: gather-GEMM-scatter over IN-OUT maps.
+
+The Top Control Unit of Fig. 4 "gathers the needed ifmaps and weights
+according to the IN-OUT maps"; the SPAC core multiplies and the Ofmap
+Arranger scatters. Here that is three executable paths:
+
+  * :func:`apply_kmap_gather`   — output-stationary (Subm3/Gconv2 dataflow,
+    §V-A): per-tap gather + matmul, accumulate into the output row. Pure
+    XLA; the perf path delegates the matmuls to kernels/spconv_gemm.
+  * :func:`apply_maps_scatter`  — input-stationary (Gconv3/Tconv2 dataflow):
+    per-tap masked matmul + scatter-add.
+  * tap scheduling by descending map count (:func:`tap_schedule`) — the
+    framework-level face of the non-uniform caching strategy (§V-C):
+    weight-stationary processing of the hottest taps first means W_center /
+    W_mid are fetched once and stay resident.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapsearch import StridedMaps
+from repro.runtime import flags
+
+
+def tap_counts(kmap: jnp.ndarray) -> jnp.ndarray:
+    """Maps per weight tap — the quantity behind Fig. 8(a)."""
+    return (kmap >= 0).sum(axis=0)
+
+
+def tap_schedule(counts: jnp.ndarray) -> jnp.ndarray:
+    """Descending-count tap order (hot taps first => maximal weight reuse)."""
+    return jnp.argsort(-counts)
+
+
+@partial(jax.jit, static_argnames=("unroll",))
+def apply_kmap_gather(feats: jnp.ndarray, weights: jnp.ndarray,
+                      kmap: jnp.ndarray, bias: jnp.ndarray | None = None,
+                      *, unroll: bool = False) -> jnp.ndarray:
+    """Output-stationary SpConv: out[i] = sum_k feats[kmap[i,k]] @ W[k].
+
+    feats (N_in, Cin), weights (K, Cin, Cout), kmap (N_out, K) with -1 holes.
+    The hole mask doubles as SPAC row-skipping: entries pointing at all-zero
+    rows can be pre-dropped by sparsity.compact_kmap, making elided work
+    explicit in the map rather than in the MACs (DESIGN.md §2).
+    """
+    n_out, k = kmap.shape
+
+    def one_tap(acc, args):
+        km_k, w_k = args
+        rows = jnp.take(feats, jnp.maximum(km_k, 0), axis=0)
+        rows = jnp.where((km_k >= 0)[:, None], rows, 0)
+        return acc + rows.astype(w_k.dtype) @ w_k, None
+
+    init = jnp.zeros((n_out, weights.shape[-1]), dtype=weights.dtype)
+    if unroll:
+        acc = init
+        for t in range(k):
+            acc, _ = one_tap(acc, (kmap[:, t], weights[t]))
+    else:
+        acc, _ = jax.lax.scan(one_tap, init, (kmap.T, weights),
+                              unroll=flags.cost_unroll(k))
+    if bias is not None:
+        acc = acc + bias
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n_out", "n_taps"))
+def apply_maps_scatter(feats: jnp.ndarray, weights: jnp.ndarray,
+                       maps: StridedMaps, bias: jnp.ndarray | None = None,
+                       *, n_out: int, n_taps: int) -> jnp.ndarray:
+    """Input-stationary SpConv: partial sums scattered to outputs.
+
+    Mirrors §IV-D3: the Map Table holds original inputs and the computing
+    core "reduces partial sums intelligently" — here the reduction is a
+    scatter-add per tap.
+    """
+    cout = weights.shape[-1]
+
+    def one_tap(acc, w_k_and_k):
+        w_k, t = w_k_and_k
+        m = maps.mvalid & (maps.tap == t)
+        rows = jnp.take(feats, jnp.maximum(maps.in_idx, 0), axis=0)
+        rows = jnp.where(m[:, None], rows, 0)
+        ps = rows.astype(w_k.dtype) @ w_k
+        tgt = jnp.where(m, maps.out_idx, n_out)
+        return acc.at[tgt].add(ps, mode="drop"), None
+
+    init = jnp.zeros((n_out, cout), dtype=weights.dtype)
+    acc, _ = jax.lax.scan(one_tap, init,
+                          (weights, jnp.arange(n_taps, dtype=jnp.int32)),
+                          unroll=flags.cost_unroll(n_taps))
+    if bias is not None:
+        acc = acc + bias
+    return jnp.where(maps.out_valid[:n_out, None], acc, 0)

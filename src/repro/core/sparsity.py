@@ -1,0 +1,71 @@
+"""SPAC: inherent-sparsity exploitation (paper §V-B), TPU-adapted.
+
+The ASIC's Gather Unit strobes individual zero operands in front of a 16x16
+MAC array. A 128x128 MXU cannot gate individual lanes, so the saving
+mechanism is re-grained (DESIGN.md §2):
+
+  * row grain  — maps whose source voxel row is entirely zero are dropped
+    from the kmap (:func:`compact_kmap`); the gather never issues them.
+  * tile grain — (bm x bk) input tiles that are entirely zero are skipped
+    inside kernels/masked_matmul via a precomputed block mask
+    (:func:`block_mask`).
+
+:func:`sparsity_stats` quantifies both grains plus the paper's element grain
+so the granularity loss is measurable (EXPERIMENTS.md §Paper-fidelity).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+def row_nonzero(feats: jnp.ndarray) -> jnp.ndarray:
+    """(N,) bool — row has any nonzero element (post-ReLU survivors)."""
+    return jnp.any(feats != 0, axis=-1)
+
+
+def compact_kmap(kmap: jnp.ndarray, row_nz: jnp.ndarray) -> jnp.ndarray:
+    """Drop maps whose source row is all-zero: they contribute nothing.
+
+    This is the TPU face of the Gather Unit — elision is recorded in the
+    rulebook instead of gated in the datapath.
+    """
+    src_nz = jnp.take(row_nz, jnp.maximum(kmap, 0), axis=0)
+    return jnp.where((kmap >= 0) & src_nz, kmap, -1)
+
+
+def block_mask(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    """(M/bm, K/bk) bool — tile has any nonzero element. Feeds the
+    @pl.when skip in kernels/masked_matmul."""
+    m, k = x.shape
+    assert m % bm == 0 and k % bk == 0, "pad before masking"
+    t = x.reshape(m // bm, bm, k // bk, bk)
+    return jnp.any(t != 0, axis=(1, 3))
+
+
+class SparsityStats(NamedTuple):
+    element_sparsity: jnp.ndarray   # fraction of zero elements (paper grain)
+    row_sparsity: jnp.ndarray       # fraction of all-zero rows
+    map_elision: jnp.ndarray        # fraction of valid maps dropped row-wise
+    macs_dense: jnp.ndarray         # MACs without sparsity
+    macs_row_elided: jnp.ndarray    # MACs after row-grain elision
+
+
+def sparsity_stats(feats: jnp.ndarray, kmap: jnp.ndarray,
+                   c_out: int) -> SparsityStats:
+    valid = kmap >= 0
+    nz_rows = row_nonzero(feats)
+    src_nz = jnp.take(nz_rows, jnp.maximum(kmap, 0), axis=0)
+    kept = valid & src_nz
+    c_in = feats.shape[-1]
+    dense = valid.sum() * c_in * c_out
+    elided = kept.sum() * c_in * c_out
+    total_maps = jnp.maximum(valid.sum(), 1)
+    return SparsityStats(
+        element_sparsity=(feats == 0).mean(),
+        row_sparsity=1.0 - nz_rows.mean(),
+        map_elision=1.0 - kept.sum() / total_maps,
+        macs_dense=dense,
+        macs_row_elided=elided,
+    )

@@ -1,0 +1,164 @@
+"""SpConv layers: Subm3 / Gconv3 / Gconv2 / Tconv2 (paper §II-A3, §IV-D).
+
+Functional layers over a padded, mask-carrying :class:`SparseTensor`. The
+layer set and naming follows the paper exactly; each layer is map search
+(OCTENT) + rulebook execution (SPAC) and is fully jittable with static
+shapes. ``method`` selects the map-search implementation so the paper's
+baselines stay runnable end-to-end.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapsearch, morton, rulebook, sparsity
+
+
+class SparseTensor(NamedTuple):
+    """COO sparse tensor (eq. 1) with static row budget + validity mask."""
+
+    coords: jnp.ndarray   # (N, 3) int32 voxel coordinates
+    batch: jnp.ndarray    # (N,) int32 batch index
+    valid: jnp.ndarray    # (N,) bool
+    feats: jnp.ndarray    # (N, C)
+
+    @property
+    def n_max(self) -> int:
+        return self.coords.shape[0]
+
+    def replace_feats(self, feats: jnp.ndarray) -> "SparseTensor":
+        return self._replace(feats=feats)
+
+
+def mask_feats(st: SparseTensor) -> SparseTensor:
+    """Zero features on invalid rows (keeps padding inert through matmuls)."""
+    return st.replace_feats(jnp.where(st.valid[:, None], st.feats, 0))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_conv(key: jax.Array, k_taps: int, c_in: int, c_out: int,
+              dtype=jnp.float32) -> dict:
+    fan_in = k_taps * c_in
+    w = jax.random.normal(key, (k_taps, c_in, c_out), dtype) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((c_out,), dtype)}
+
+
+def init_batchnorm(c: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype),
+            "mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
+               method: str = "octree", grid_bits: int = 7,
+               batch_bits: int = 4, spac: bool = True) -> SparseTensor:
+    """Submanifold 3x3x3 SpConv (Subm3): coordinates unchanged (Fig. 2)."""
+    offs = jnp.asarray(morton.subm3_offsets())
+    if method == "octree":
+        kmap = mapsearch.build_kmap_octree(
+            st.coords, st.batch, st.valid, offs, max_blocks=max_blocks,
+            grid_bits=grid_bits, batch_bits=batch_bits)
+    elif method == "sorted":
+        kmap = mapsearch.build_kmap_sorted(
+            st.coords, st.batch, st.valid, offs,
+            grid_bits=min(grid_bits, 5), batch_bits=batch_bits)
+    else:
+        raise ValueError(f"unknown map search method {method!r}")
+    if spac:
+        kmap = sparsity.compact_kmap(kmap, sparsity.row_nonzero(st.feats))
+    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+    out = jnp.where(st.valid[:, None], out, 0)
+    return st.replace_feats(out)
+
+
+def gconv2(st: SparseTensor, params: dict, *, grid_bits: int = 7,
+           batch_bits: int = 4) -> tuple[SparseTensor, mapsearch.StridedMaps]:
+    """Generalized 2x2x2 stride-2 SpConv (downsampling). Output-stationary:
+    each octree parent gathers its children through octant taps (§IV-D1).
+
+    Returns the new tensor *and* the maps so Tconv2 can reuse them (§IV-D2).
+    """
+    maps = mapsearch.build_maps_gconv2(st.coords, st.batch, st.valid,
+                                       grid_bits=grid_bits, batch_bits=batch_bits)
+    n = st.n_max
+    kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
+    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+    out = jnp.where(maps.out_valid[:, None], out, 0)
+    new = SparseTensor(coords=maps.out_coords, batch=maps.out_batch,
+                       valid=maps.out_valid, feats=out)
+    return new, maps
+
+
+def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
+           batch_bits: int = 4,
+           dataflow: str = "output_stationary") -> tuple[SparseTensor, mapsearch.StridedMaps]:
+    """Generalized 3x3x3 stride-2 SpConv. The paper runs this input-
+    stationary (§IV-D3); both dataflows are provided and agree bit-for-bit
+    (tests) — the output-stationary one is the TPU perf path (pure gathers).
+    """
+    maps = mapsearch.build_maps_gconv3(st.coords, st.batch, st.valid,
+                                       grid_bits=grid_bits, batch_bits=batch_bits,
+                                       out_budget=st.n_max)
+    m = maps.out_coords.shape[0]
+    if dataflow == "input_stationary":
+        out = rulebook.apply_maps_scatter(st.feats, params["w"], maps,
+                                          params["b"], n_out=m, n_taps=27)
+    else:
+        kmap = mapsearch.strided_to_kmap(maps, n_out=m, n_taps=27)
+        out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+        out = jnp.where(maps.out_valid[:, None], out, 0)
+    new = SparseTensor(coords=maps.out_coords, batch=maps.out_batch,
+                       valid=maps.out_valid, feats=out)
+    return new, maps
+
+
+def tconv2(st: SparseTensor, params: dict, gconv2_maps: mapsearch.StridedMaps,
+           target: SparseTensor) -> SparseTensor:
+    """Transposed 2x2x2 stride-2 SpConv: recovers the coordinate set from
+    before the paired Gconv2 by transposing its maps (§IV-D2)."""
+    maps = mapsearch.transpose_maps(gconv2_maps, target.coords, target.batch,
+                                    target.valid)
+    n = target.n_max
+    kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
+    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+    out = jnp.where(target.valid[:, None], out, 0)
+    return SparseTensor(coords=target.coords, batch=target.batch,
+                        valid=target.valid, feats=out)
+
+
+# ---------------------------------------------------------------------------
+# Norm / activation (Postprocessing Unit of Fig. 7)
+# ---------------------------------------------------------------------------
+
+def batch_norm(st: SparseTensor, params: dict, *, training: bool,
+               momentum: float = 0.9, eps: float = 1e-5):
+    """Masked BatchNorm over valid rows. Returns (tensor, updated_params)."""
+    f = st.feats.astype(jnp.float32)
+    mask = st.valid[:, None]
+    if training:
+        n = jnp.maximum(st.valid.sum(), 1).astype(jnp.float32)
+        mean = (f * mask).sum(0) / n
+        var = ((f - mean) ** 2 * mask).sum(0) / n
+        new_params = {**params,
+                      "mean": momentum * params["mean"] + (1 - momentum) * mean,
+                      "var": momentum * params["var"] + (1 - momentum) * var}
+    else:
+        mean, var = params["mean"], params["var"]
+        new_params = params
+    y = (f - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    y = jnp.where(mask, y, 0).astype(st.feats.dtype)
+    return st.replace_feats(y), new_params
+
+
+def relu(st: SparseTensor) -> SparseTensor:
+    """The source of the paper's 40-60% inherent sparsity (Fig. 3(b))."""
+    return st.replace_feats(jax.nn.relu(st.feats))

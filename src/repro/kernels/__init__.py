@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (each package: kernel.py + ops.py + ref.py).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU via interpret=True against the pure-jnp oracles.
+Dispatch: ops.kernel_impl() / REPRO_KERNEL_IMPL in {auto,pallas,interpret,ref}.
+"""

@@ -1,0 +1,27 @@
+"""jit'd dispatch wrapper for attention (pallas | interpret | ref)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spconv_gemm.ops import kernel_impl
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "impl"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0,
+              impl: str | None = None) -> jnp.ndarray:
+    impl = impl or kernel_impl()
+    sq, skv = q.shape[2], k.shape[2]
+    blocky = sq % 128 == 0 and skv % 128 == 0 and sq >= 128
+    if impl == "pallas" and blocky:
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "interpret" and blocky:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,83 @@
+"""Chunked online-softmax attention — pure jnp.
+
+Oracle for the Pallas flash kernel AND the XLA attention path used by every
+LM architecture (models/attention.py): a lax.scan over KV chunks keeps peak
+memory O(S * chunk) instead of O(S^2), which is what lets the 32k-prefill
+dry-run cells compile without materializing score matrices.
+
+Supports causal masking, sliding windows (Mixtral/RecurrentGemma local
+attention) and GQA via explicit head-group broadcasting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import flags
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "chunk"))
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  chunk: int = 1024) -> jnp.ndarray:
+    """q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    ``window`` > 0 = sliding-window attention (keys within [pos-window+1,
+    pos]). Positions are aligned to the *end*: q token i sits at absolute
+    position Skv - Sq + i (the decode/prefill convention).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = d ** -0.5
+    q_pos = jnp.arange(sq) + (skv - sq)
+
+    chunk = min(chunk, skv)
+    n_chunks = skv // chunk if skv % chunk == 0 else -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = k.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inputs):
+        m_run, l_run, acc = carry
+        kj, vj, j = inputs
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        msk = _mask(q_pos, k_pos, causal, window) & (k_pos < skv)[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, sq), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        step, init, (kc, vc, jnp.arange(n_chunks)),
+        unroll=flags.cost_unroll(n_chunks))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+"""masked_matmul kernel package."""
+from repro.kernels.masked_matmul import ops, ref  # noqa: F401

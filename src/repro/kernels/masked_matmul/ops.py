@@ -1,0 +1,32 @@
+"""jit'd wrapper for masked_matmul with automatic mask construction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import block_mask
+from repro.kernels.masked_matmul.kernel import masked_matmul
+from repro.kernels.masked_matmul.ref import masked_matmul_ref
+from repro.kernels.spconv_gemm.ops import kernel_impl
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "impl"))
+def sparse_dense_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
+                        bn: int = 128, bk: int = 128,
+                        impl: str | None = None) -> jnp.ndarray:
+    """A @ B skipping all-zero (bm x bk) tiles of A (SPAC, §V-B)."""
+    impl = impl or kernel_impl()
+    mask = block_mask(a, bm, bk).astype(jnp.int32)
+    if impl == "pallas":
+        return masked_matmul(a, b, mask, bm=bm, bn=bn, bk=bk)
+    if impl == "interpret":
+        return masked_matmul(a, b, mask, bm=bm, bn=bn, bk=bk, interpret=True)
+    return masked_matmul_ref(a, b, mask, bm=bm, bn=bn, bk=bk)
+
+
+def tile_skip_fraction(a: jnp.ndarray, bm: int = 128, bk: int = 128):
+    """Fraction of MXU tiles elided — the §V-B latency-saving estimator."""
+    m = block_mask(a, bm, bk)
+    return 1.0 - m.mean()

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for masked_matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
+                      *, bm: int = 128, bn: int = 128,
+                      bk: int = 128) -> jnp.ndarray:
+    m, k = a.shape
+    live = jnp.repeat(jnp.repeat(mask != 0, bm, axis=0), bk, axis=1)
+    a_kept = jnp.where(live, a, 0)
+    return (a_kept.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)

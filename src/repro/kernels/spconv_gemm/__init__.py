@@ -1,0 +1,2 @@
+"""spconv_gemm kernel package."""
+from repro.kernels.spconv_gemm import ops, ref  # noqa: F401

@@ -1,0 +1,121 @@
+"""jit'd wrapper: kmap -> tap-sorted ragged tiles -> kernel -> scatter-add.
+
+``build_tap_tiles`` is the Top Control Unit of Fig. 4 in data-parallel form:
+it turns the (N_out, K) kernel map into per-tap contiguous, bm-padded
+gather/scatter streams plus the scalar-prefetch metadata the kernel needs.
+The identical machinery drives ragged MoE dispatch (models/moe.py) — the
+paper's rulebook *is* an expert-dispatch table (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity as _sparsity
+from repro.kernels.spconv_gemm.kernel import spconv_gemm
+from repro.kernels.spconv_gemm.ref import spconv_gemm_ref
+
+
+def kernel_impl() -> str:
+    """pallas | interpret | ref — resolved once per call site."""
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+class TapTiles(NamedTuple):
+    gather_idx: jnp.ndarray    # (M_pad,) source row per map slot (0 for pad)
+    scatter_idx: jnp.ndarray   # (M_pad,) output row per map slot
+    slot_valid: jnp.ndarray    # (M_pad,) bool
+    tile_tap: jnp.ndarray      # (T,) weight tap per m-tile
+    tile_nz: jnp.ndarray       # (T,) 0 => tile skippable
+
+
+def _padded_budget(n_out: int, k: int, bm: int) -> int:
+    # every tap may waste up to bm-1 slots to padding
+    return ((n_out * k + k * (bm - 1)) // bm + 1) * bm
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
+                    *, bm: int = 128) -> TapTiles:
+    """Sort maps by tap, pad each tap segment to a bm multiple.
+
+    ``row_nz`` enables SPAC row elision: maps sourcing all-zero rows are
+    dropped before tiling, shrinking the *live* map stream exactly like the
+    ASIC's Gather Unit shrinks operand vectors.
+    """
+    n_out, k = kmap.shape
+    m_pad = _padded_budget(n_out, k, bm)
+
+    flat_in = kmap.reshape(-1)
+    taps = jnp.tile(jnp.arange(k, dtype=jnp.int32), n_out)
+    outs = jnp.repeat(jnp.arange(n_out, dtype=jnp.int32), k)
+    valid = flat_in >= 0
+    if row_nz is not None:
+        valid &= jnp.take(row_nz, jnp.maximum(flat_in, 0))
+
+    # stable sort by tap with invalid pushed to the end
+    key = jnp.where(valid, taps, k)
+    order = jnp.argsort(key, stable=True)
+    staps = key[order]
+    # rank within tap
+    counts = jnp.bincount(staps, length=k + 1)[:k]
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])[:k]
+    rank = jnp.arange(n_out * k) - jnp.take(starts, jnp.minimum(staps, k - 1))
+    # padded segment starts
+    pcounts = ((counts + bm - 1) // bm) * bm
+    pstarts = jnp.concatenate([jnp.zeros(1, pcounts.dtype), jnp.cumsum(pcounts)])
+    slot = jnp.where(staps < k, jnp.take(pstarts[:k], jnp.minimum(staps, k - 1)) + rank,
+                     m_pad)
+
+    gather = jnp.zeros((m_pad,), jnp.int32).at[slot].set(
+        jnp.maximum(flat_in[order], 0), mode="drop")
+    scatter = jnp.full((m_pad,), n_out, jnp.int32).at[slot].set(
+        outs[order], mode="drop")
+    svalid = jnp.zeros((m_pad,), bool).at[slot].set(
+        valid[order], mode="drop")
+
+    t = m_pad // bm
+    tile_starts = jnp.arange(t) * bm
+    tile_tap = jnp.searchsorted(pstarts[1:], tile_starts, side="right")
+    tile_tap = jnp.minimum(tile_tap, k - 1).astype(jnp.int32)
+    # a tile is live iff it holds any valid slot
+    tile_nz = svalid.reshape(t, bm).any(axis=1).astype(jnp.int32)
+    return TapTiles(gather, scatter, svalid, tile_tap, tile_nz)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "impl"))
+def apply_kmap(feats: jnp.ndarray, weights: jnp.ndarray, kmap: jnp.ndarray,
+               bias: jnp.ndarray | None = None, *, spac: bool = True,
+               bm: int = 128, bn: int = 128, impl: str | None = None) -> jnp.ndarray:
+    """Output rows = scatter-add of the kernel's per-map partial products.
+
+    Semantically identical to rulebook.apply_kmap_gather (tested); this is
+    the perf path with tap-resident weights + tile skipping.
+    """
+    impl = impl or kernel_impl()
+    n_out = kmap.shape[0]
+    row_nz = _sparsity.row_nonzero(feats) if spac else None
+    tiles = build_tap_tiles(kmap, row_nz, bm=bm)
+    lhs = jnp.take(feats, tiles.gather_idx, axis=0)
+    lhs = jnp.where(tiles.slot_valid[:, None], lhs, 0)
+    if impl == "pallas":
+        ps = spconv_gemm(lhs, weights, tiles.tile_tap, tiles.tile_nz,
+                         bm=bm, bn=bn)
+    elif impl == "interpret":
+        ps = spconv_gemm(lhs, weights, tiles.tile_tap, tiles.tile_nz,
+                         bm=bm, bn=bn, interpret=True)
+    else:
+        ps = spconv_gemm_ref(lhs, weights, tiles.tile_tap, tiles.tile_nz,
+                             bm=bm, bn=bn)
+    out = jnp.zeros((n_out + 1, weights.shape[-1]), ps.dtype)
+    out = out.at[tiles.scatter_idx].add(ps, mode="drop")[:n_out]
+    if bias is not None:
+        out = out + bias
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the spconv_gemm kernel contract."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spconv_gemm_ref(lhs: jnp.ndarray, weights: jnp.ndarray,
+                    tile_tap: jnp.ndarray, tile_nz: jnp.ndarray,
+                    *, bm: int = 128, bn: int = 128) -> jnp.ndarray:
+    """out[t*bm:(t+1)*bm] = nz_t * (lhs_tile_t @ weights[tile_tap[t]])."""
+    del bn
+    m, c_in = lhs.shape
+    n_m = m // bm
+    tiles = lhs.reshape(n_m, bm, c_in)
+    w = jnp.take(weights, tile_tap, axis=0)                # (n_m, Cin, Cout)
+    out = jnp.einsum("tbc,tcd->tbd", tiles.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    out = out * (tile_nz != 0).astype(out.dtype)[:, None, None]
+    return out.reshape(m, weights.shape[-1]).astype(lhs.dtype)

@@ -1,0 +1,156 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+cost_analysis() gives FLOPs/bytes but not collective traffic, so collective
+bytes are summed from the optimized (post-partitioning) HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op we size the result tensors. This counts the payload each device
+materializes per collective (ring algorithms move ~2x(n-1)/n of that on the
+wire; the constant-factor approximation is stated in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:(?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+    r"\[[0-9,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\s*(?:\))?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(token: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(token):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _LINE_RE.search(s)
+        if not m:
+            continue
+        kind = m.group(2)
+        # async pairs: count the -start, skip the matching -done
+        if f"{kind}-done(" in s:
+            continue
+        b = _shape_bytes(m.group(1))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def top_collectives(hlo_text: str, k: int = 12) -> list[tuple[int, str]]:
+    """(bytes, trimmed op line) for the k largest collectives — the
+    attribution step of the §Perf hypothesis loop."""
+    out = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _LINE_RE.search(s)
+        if not m or f"{m.group(2)}-done(" in s:
+            continue
+        out.append((_shape_bytes(m.group(1)), s[:180]))
+    out.sort(key=lambda t: -t[0])
+    return out[:k]
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (brief: ROOFLINE ANALYSIS) — TPU v5e constants
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   n_chips: int) -> dict:
+    """All inputs are whole-program totals; terms are seconds."""
+    compute_t = flops / (n_chips * PEAK_FLOPS_BF16)
+    memory_t = hbm_bytes / (n_chips * HBM_BW)
+    collective_t = collective_bytes / (n_chips * ICI_BW)
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dom = max(terms, key=terms.get)
+    bound = max(compute_t, memory_t, collective_t)
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = compute_t / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch."""
+    n_params = param_count(cfg, active_only=True)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_params * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_params * tokens
+    return 2.0 * n_params * cell.global_batch          # one decode token
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count per architecture family."""
+    d, v = cfg.d_model, cfg.vocab
+    if cfg.family == "mamba2":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_headdim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        per_layer = (d * (2 * d_inner + 2 * cfg.ssm_state + h)
+                     + cfg.conv_width * conv_dim + conv_dim
+                     + 3 * h + d_inner + d_inner * d + d)
+        return cfg.n_layers * per_layer + 2 * v * d
+    if cfg.family == "rglru":
+        w = cfg.lru_width or d
+        bh = w // cfg.n_heads
+        rec = (2 * d * w + cfg.conv_width * w + w
+               + 2 * cfg.n_heads * bh * bh + w + w * d
+               + 3 * d * cfg.d_ff)
+        hd = cfg.head_dim_
+        attn = (d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+                + cfg.n_heads * hd * d + 3 * d * cfg.d_ff)
+        n_groups = cfg.n_layers // 3
+        tail = cfg.n_layers - 3 * n_groups
+        return n_groups * (2 * rec + attn) + tail * rec + v * d
+    hd = cfg.head_dim_
+    attn = (d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+            + cfg.n_heads * hd * d)
+    if cfg.n_experts:
+        ffn_total = cfg.n_experts * 3 * d * cfg.d_ff + d * cfg.n_experts
+        ffn_active = cfg.top_k * 3 * d * cfg.d_ff + d * cfg.n_experts
+    else:
+        gated = 3 if cfg.act == "silu" else 2
+        ffn_total = ffn_active = gated * d * cfg.d_ff
+    ffn = ffn_active if active_only else ffn_total
+    emb = v * d if cfg.tie_embeddings else 2 * v * d
+    if cfg.family == "encoder":
+        emb = cfg.frontend_dim * d + d * v
+    if cfg.family == "vlm":
+        emb += cfg.vision_dim * d + d * d
+    return cfg.n_layers * (attn + ffn) + emb

@@ -1,0 +1,86 @@
+"""Serving driver (example application): batched prefill + decode loop.
+
+CPU-scale demo of the serving path every decode-shape dry-run cell lowers:
+continuous greedy decoding with a rolling (SWA) or full KV cache / SSM
+state, batched requests, per-step latency stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+
+
+def generate(model: api.Model, params, batch: dict, *, max_context: int,
+             n_steps: int, greedy: bool = True, key=None):
+    """Prefill then decode n_steps tokens. Returns (tokens (B, n), stats)."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_context))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(n_steps - 1):
+        logits, cache = decode(params, cache, tok)
+        if greedy:
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1])[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    return jnp.concatenate(out, axis=1), {
+        "prefill_s": t_prefill,
+        "decode_s_per_tok": t_decode / max(n_steps - 1, 1)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    if not cfg.has_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    model = api.build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.n_patches, cfg.vision_dim)),
+            jnp.float32)
+    max_ctx = args.prompt_len + args.gen + (cfg.n_patches or 0)
+    toks, stats = generate(model, params, batch, max_context=max_ctx,
+                           n_steps=args.gen)
+    print(f"arch={cfg.name} generated {toks.shape} tokens; "
+          f"prefill={stats['prefill_s']:.3f}s "
+          f"decode={stats['decode_s_per_tok'] * 1e3:.1f}ms/tok")
+    print("first sequence:", np.asarray(toks[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: assigned LM architectures + the paper's point-cloud networks."""
+from repro.models import api  # noqa: F401

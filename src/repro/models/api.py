@@ -1,0 +1,117 @@
+"""Uniform model API over all families + per-cell input specs.
+
+Every family exposes: init / loss / prefill / init_cache / decode_step.
+``input_specs(cell)`` returns ShapeDtypeStruct stand-ins (never allocates)
+for the dry-run; modality frontends are stubs that appear here as
+precomputed embedding inputs (brief: [audio]/[vlm] rules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import common, encoder, mamba2, rglru, transformer, vlm
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]                    # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any] | None          # (params, batch, max_context)
+    init_cache: Callable[..., Any] | None       # (batch, max_context) -> cache
+    decode_step: Callable[..., Any] | None      # (params, cache, tokens)
+
+    def abstract_params(self):
+        """Parameter pytree as ShapeDtypeStructs — no allocation."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    def input_specs(self, cell: ShapeCell) -> dict:
+        return input_specs(self.cfg, cell)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    f = cfg.family
+    if f == "decoder":
+        return Model(
+            cfg,
+            init=lambda key: transformer.init_lm(cfg, key),
+            loss=lambda p, b: transformer.lm_loss(p, b, cfg),
+            prefill=lambda p, b, mc: transformer.prefill(
+                p, b["tokens"], cfg, max_context=mc),
+            init_cache=lambda bs, mc: transformer.init_cache(cfg, bs, mc),
+            decode_step=lambda p, c, t: transformer.decode_step(p, c, t, cfg))
+    if f == "vlm":
+        return Model(
+            cfg,
+            init=lambda key: vlm.init_model(cfg, key),
+            loss=lambda p, b: vlm.lm_loss(p, b, cfg),
+            prefill=lambda p, b, mc: vlm.prefill(p, b, cfg, max_context=mc),
+            init_cache=lambda bs, mc: transformer.init_cache(cfg, bs, mc),
+            decode_step=lambda p, c, t: transformer.decode_step(p, c, t, cfg))
+    if f == "mamba2":
+        return Model(
+            cfg,
+            init=lambda key: mamba2.init_lm(cfg, key),
+            loss=lambda p, b: mamba2.lm_loss(p, b, cfg),
+            prefill=lambda p, b, mc: mamba2.prefill(
+                p, b["tokens"], cfg, max_context=mc),
+            init_cache=lambda bs, mc: mamba2.init_cache(cfg, bs, mc),
+            decode_step=lambda p, c, t: mamba2.decode_step(p, c, t, cfg))
+    if f == "rglru":
+        return Model(
+            cfg,
+            init=lambda key: rglru.init_lm(cfg, key),
+            loss=lambda p, b: rglru.lm_loss(p, b, cfg),
+            prefill=lambda p, b, mc: rglru.prefill(
+                p, b["tokens"], cfg, max_context=mc),
+            init_cache=lambda bs, mc: rglru.init_cache(cfg, bs, mc),
+            decode_step=lambda p, c, t: rglru.decode_step(p, c, t, cfg))
+    if f == "encoder":
+        return Model(
+            cfg,
+            init=lambda key: encoder.init_model(cfg, key),
+            loss=lambda p, b: encoder.masked_prediction_loss(p, b, cfg),
+            # "prefill" for an encoder is a plain full-sequence encode
+            prefill=lambda p, b, mc: encoder.encode(p, b["frames"], cfg),
+            init_cache=None, decode_step=None)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct inputs for the function lowered in this cell.
+
+    train  -> the ``batch`` argument of the loss/train step
+    prefill-> the prefill batch (full sequence)
+    decode -> {tokens (B,1)}; the cache comes from abstract init_cache.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if cfg.family == "encoder":
+        if cell.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), act),
+                    "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+                    "targets": jax.ShapeDtypeStruct((b, s), i32)}
+        # prefill == plain encode for an encoder
+        return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), act)}
+    if cfg.family == "vlm":
+        p = min(cfg.n_patches, s // 2)
+        text = s - p
+        if cell.kind in ("train", "prefill"):
+            return {"patches": jax.ShapeDtypeStruct((b, p, cfg.vision_dim), act),
+                    "tokens": jax.ShapeDtypeStruct((b, text), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cell.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def abstract_cache(model: Model, cell: ShapeCell):
+    """Decode-cell cache spec: context length = cell.seq_len."""
+    return jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len))

@@ -1,0 +1,137 @@
+"""GQA attention with RoPE, optional qk-norm (qwen3), sliding window
+(mixtral / recurrentgemma local), full-sequence and single-step decode paths.
+
+The full-sequence path dispatches through kernels/flash_attention/ops
+(Pallas on TPU, chunked-scan oracle elsewhere); the decode path is a direct
+einsum over a (possibly rolling) KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models import common
+from repro.runtime.sharding import shard
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.normal(ks[0], (d, h * hd), d ** -0.5, dtype),
+        "wk": common.normal(ks[1], (d, kv * hd), d ** -0.5, dtype),
+        "wv": common.normal(ks[2], (d, kv * hd), d ** -0.5, dtype),
+        "wo": common.normal(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qkv(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, params["q_norm"])
+        k = common.rms_norm(k, params["k_norm"])
+    q = common.rope(q, positions, cfg.rope_theta)
+    k = common.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_full(params, x, cfg, *, window: int | None = None):
+    """Train/prefill attention over the whole sequence.
+
+    Returns (out, (k, v)) — k/v in (B, S, KV, hd) layout for cache reuse.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _qkv(params, x, cfg, positions)
+    w = cfg.swa_window if window is None else window
+    o = attn_ops.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=cfg.causal, window=w)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    o = shard(o @ params["wo"], "batch", None, None)
+    return o, (k, v)
+
+
+class KVCache(NamedTuple):
+    """Rolling KV cache: capacity C = min(max context, SWA window)."""
+
+    k: jnp.ndarray      # (B, C, KV, hd)
+    v: jnp.ndarray      # (B, C, KV, hd)
+    pos: jnp.ndarray    # (C,) absolute position held in each slot, -1 empty
+
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return KVCache(
+        k=jnp.zeros((batch, capacity, kv, hd), dtype),
+        v=jnp.zeros((batch, capacity, kv, hd), dtype),
+        pos=jnp.full((capacity,), -1, jnp.int32))
+
+
+def cache_from_prefill(k: jnp.ndarray, v: jnp.ndarray, capacity: int) -> KVCache:
+    """Keep the trailing ``capacity`` positions of a prefill's K/V."""
+    s = k.shape[1]
+    if s >= capacity:
+        k_c, v_c = k[:, s - capacity:], v[:, s - capacity:]
+        pos = jnp.arange(s - capacity, s, dtype=jnp.int32)
+        # slot layout must match decode's (pos % capacity) indexing
+        slot = pos % capacity
+        order = jnp.argsort(slot)
+        return KVCache(k=k_c[:, order], v=v_c[:, order], pos=pos[order])
+    pad = capacity - s
+    return KVCache(
+        k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        pos=jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                             jnp.full((pad,), -1, jnp.int32)]))
+
+
+def attend_decode(params, x, cfg, cache: KVCache, step: jnp.ndarray,
+                  *, window: int | None = None):
+    """One-token decode against the cache. x (B, 1, D); step = absolute pos.
+
+    Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    cap = cache.k.shape[1]
+    positions = jnp.full((1,), step, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+
+    slot = step % cap
+    cache = KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0)),
+        v=jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0)),
+        pos=cache.pos.at[slot].set(step))
+
+    w = cfg.swa_window if window is None else window
+    valid = (cache.pos >= 0) & (cache.pos <= step)
+    if w and w > 0:
+        valid &= cache.pos > step - w
+    group = h // kvh
+    qh = q.reshape(b, 1, kvh, group, hd)
+    # keep the (large) cache in its storage dtype; accumulate in f32 on the
+    # MXU instead of materializing an f32 copy of the cache (§Perf A2)
+    s_ = jnp.einsum("bqkgd,bckd->bkgqc", qh, cache.k,
+                    preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s_ = jnp.where(valid[None, None, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(cache.v.dtype), cache.v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    o = shard(o @ params["wo"], "batch", None, None)
+    return o, cache

@@ -1,0 +1,113 @@
+"""Shared model building blocks (no flax offline — plain pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import shard
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def normal(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["w"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., S, H, D) rotated at ``positions`` (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token CE; logits (..., V), targets int (...), mask optional."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def shift_labels(tokens: jnp.ndarray):
+    """Next-token prediction: inputs tokens[:, :-1] predict tokens[:, 1:]."""
+    return tokens[:, :-1], tokens[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": normal(ks[1], (d, f), d ** -0.5, dtype),
+         "w_down": normal(ks[2], (f, d), f ** -0.5, dtype)}
+    if gated:
+        p["w_gate"] = normal(ks[0], (d, f), d ** -0.5, dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    gated = "w_gate" in params
+    up = shard(x @ params["w_up"], "batch", None, "model")
+    if gated:
+        gate = shard(x @ params["w_gate"], "batch", None, "model")
+        h = activation(gate, act) * up
+    else:
+        h = activation(up, act)
+    return shard(h @ params["w_down"], "batch", None, None)

@@ -1,0 +1,51 @@
+"""HuBERT-style encoder-only audio backbone [arXiv:2106.07447].
+
+The modality frontend (CNN feature extractor) is a STUB per the brief:
+``input_specs`` provides precomputed frame embeddings (B, S, frontend_dim).
+Training objective: masked prediction of cluster ids (vocab=504) at masked
+frames. Positional information: RoPE inside attention (the original's conv
+positional embedding lives in the stubbed frontend; recorded in DESIGN.md).
+Encoder-only => no decode/prefill (shape-cell skip rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, transformer
+from repro.runtime.sharding import shard
+
+
+def init_model(cfg, key):
+    dtype = common.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    lm = transformer.init_lm(cfg, ks[0])
+    del lm["embed"]                        # no token embedding
+    if "lm_head" in lm:
+        del lm["lm_head"]
+    return {
+        **lm,
+        "frontend_proj": common.normal(ks[1], (cfg.frontend_dim, cfg.d_model),
+                                       cfg.frontend_dim ** -0.5, dtype),
+        "mask_emb": common.normal(ks[2], (cfg.frontend_dim,), 0.02, dtype),
+        "pred_head": common.normal(ks[3], (cfg.d_model, cfg.vocab),
+                                   cfg.d_model ** -0.5, dtype),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames (B, S, frontend_dim) -> hidden (B, S, D)."""
+    h = shard(frames @ params["frontend_proj"], "batch", None, None)
+    h, _, _ = transformer.forward_embeds(params, h, cfg)
+    return h
+
+
+def masked_prediction_loss(params, batch, cfg):
+    """batch: frames (B,S,F), mask (B,S) bool, targets (B,S) int32."""
+    frames = jnp.where(batch["mask"][..., None],
+                       params["mask_emb"].astype(batch["frames"].dtype),
+                       batch["frames"])
+    h = encode(params, frames, cfg)
+    logits = shard(h @ params["pred_head"], "batch", None, "model")
+    loss = common.cross_entropy(logits, batch["targets"], batch["mask"])
+    return loss, {"ce": loss}

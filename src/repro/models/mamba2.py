@@ -1,0 +1,274 @@
+"""Mamba2 — SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Attention-free; the paper's technique (map search / ReLU sparsity) is
+inapplicable (DESIGN.md §5) — this family exercises the framework's scan,
+sharding and O(1)-state decode paths instead.
+
+The chunked SSD algorithm is matmul-dominated (MXU-friendly): quadratic
+intra-chunk attention-dual + a sequential inter-chunk state scan. Decode is
+a single recurrence step on the (H, P, N) state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.runtime import flags
+from repro.runtime.sharding import shard
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    n_state = cfg.ssm_state
+    conv_dim = d_inner + 2 * n_state           # x, B, C (n_groups = 1)
+    return d_inner, n_heads, n_state, conv_dim
+
+
+def init_layer(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, h, n, conv_dim = dims(cfg)
+    d_proj = 2 * d_inner + 2 * n + h            # z, xBC, dt
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": common.init_norm(cfg.norm, d, dtype),
+        "in_proj": common.normal(ks[0], (d, d_proj), d ** -0.5, dtype),
+        "conv_w": common.normal(ks[1], (cfg.conv_width, conv_dim), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "out_proj": common.normal(ks[2], (d_inner, d), d_inner ** -0.5, dtype),
+    }
+
+
+def init_lm(cfg, key):
+    dtype = common.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": common.normal(ks[1], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+        "lm_head": common.normal(ks[2], (cfg.d_model, cfg.vocab),
+                                 cfg.d_model ** -0.5, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def _segsum(loga):
+    """loga (..., Q) -> (..., Q, Q) lower-tri exp-able cumulative sums."""
+    cs = jnp.cumsum(loga, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    q = loga.shape[-1]
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(tril, d, -jnp.inf)
+
+
+def ssd_chunked(u, loga, b_mat, c_mat, chunk: int, init_state=None):
+    """SSD: h_t = exp(loga_t) h_{t-1} + u_t (x) b_t ;  y_t = c_t . h_t.
+
+    u (B,S,H,P); loga (B,S,H); b_mat, c_mat (B,S,N) [group-shared];
+    returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = u.shape
+    n = b_mat.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad with identity steps: loga=0 (decay 1), u=c=0 -> state passes
+        # through untouched, padded outputs are zero and sliced off
+        pad = chunk - s % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    u_c = u.reshape(bsz, nc, chunk, h, p)
+    la = loga.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)   # (B,H,nc,Q)
+    b_c = b_mat.reshape(bsz, nc, chunk, n)
+    c_c = c_mat.reshape(bsz, nc, chunk, n)
+
+    a_cum = jnp.cumsum(la, axis=-1)
+    ell = jnp.exp(_segsum(la))                                   # (B,H,nc,Q,Q)
+    # intra-chunk (the "attention dual"): scores then weighted sum
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c.astype(jnp.float32),
+                        b_c.astype(jnp.float32))
+    y_diag = jnp.einsum("bcij,bhcij,bcjhp->bcihp", scores, ell,
+                        u_c.astype(jnp.float32))
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # (B,H,nc,Q)
+    states = jnp.einsum("bcjn,bhcj,bcjhp->bchpn", b_c.astype(jnp.float32),
+                        decay_states, u_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # (B,H,nc)
+
+    def step(s_prev, xs):
+        st, dec = xs                                             # (B,H,P,N),(B,H)
+        s_in = s_prev
+        s_next = s_prev * dec[..., None, None] + st
+        return s_next, s_in
+
+    final, s_in = jax.lax.scan(
+        step, (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+               else init_state.astype(jnp.float32)),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+        unroll=flags.cost_unroll(nc))
+    s_in = s_in.transpose(1, 2, 0, 3, 4)                         # (B,H,nc,P,N)
+    y_off = jnp.einsum("bcin,bhcpn,bhci->bcihp", c_c.astype(jnp.float32),
+                       s_in, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(u.dtype), final
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d: x (B, S, C), w (width, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b
+
+
+def _ssm_inputs(lp, x, cfg):
+    d_inner, h, n, conv_dim = dims(cfg)
+    zxbcdt = x @ lp["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt_raw
+
+
+def _post_conv(lp, xbc_conv, dt_raw, cfg):
+    d_inner, h, n, _ = dims(cfg)
+    xbc_conv = jax.nn.silu(xbc_conv)
+    x_ssm = xbc_conv[..., :d_inner]
+    b_mat = xbc_conv[..., d_inner:d_inner + n]
+    c_mat = xbc_conv[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    loga = -jnp.exp(lp["A_log"]) * dt                            # (B,S,H)
+    bsz, s = x_ssm.shape[:2]
+    xh = x_ssm.reshape(bsz, s, h, cfg.ssm_headdim)
+    u = xh * dt[..., None].astype(xh.dtype)
+    return xh, u, loga, b_mat, c_mat
+
+
+def _finish(lp, y, xh, z, cfg):
+    bsz, s = y.shape[:2]
+    d_inner = cfg.ssm_expand * cfg.d_model
+    y = y + lp["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, s, d_inner)
+    y = common.rms_norm(y * jax.nn.silu(z), lp["norm_w"])
+    return shard(y @ lp["out_proj"], "batch", None, None)
+
+
+def layer_full(lp, x, cfg):
+    z, xbc, dt_raw = _ssm_inputs(lp, x, cfg)
+    xbc = _causal_conv(xbc, lp["conv_w"], lp["conv_b"])
+    xh, u, loga, b_mat, c_mat = _post_conv(lp, xbc, dt_raw, cfg)
+    u = shard(u, "batch", None, "model", None)
+    y, _ = ssd_chunked(u, loga, b_mat, c_mat, cfg.ssm_chunk)
+    return _finish(lp, y, xh, z, cfg)
+
+
+def layer_decode(lp, x, cfg, conv_state, ssm_state):
+    """x (B, 1, D). Returns (out, new_conv_state, new_ssm_state)."""
+    z, xbc_new, dt_raw = _ssm_inputs(lp, x, cfg)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)      # (B, W, C)
+    conv_out = (window * lp["conv_w"][None]).sum(axis=1, keepdims=True) \
+        + lp["conv_b"]
+    new_conv_state = window[:, 1:]
+    xh, u, loga, b_mat, c_mat = _post_conv(lp, conv_out, dt_raw, cfg)
+    # single recurrence step
+    a = jnp.exp(loga[:, 0]).astype(jnp.float32)                  # (B, H)
+    upd = jnp.einsum("bhp,bn->bhpn", u[:, 0].astype(jnp.float32),
+                     b_mat[:, 0].astype(jnp.float32))
+    new_state = ssm_state * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), new_state)
+    y = y[:, None].astype(x.dtype)                               # (B,1,H,P)
+    return _finish(lp, y, xh, z, cfg), new_conv_state, new_state
+
+
+# ---------------------------------------------------------------------------
+# LM-level API
+# ---------------------------------------------------------------------------
+
+def _stack_forward(params, h, cfg):
+    body = jax.checkpoint(functools.partial(layer_full, cfg=cfg))
+
+    def scan_body(hh, lp):
+        return hh + body(lp, common.norm(hh, lp["ln"], cfg.norm)), None
+
+    h, _ = jax.lax.scan(scan_body, h, params["layers"],
+                      unroll=flags.cost_unroll(cfg.n_layers))
+    return common.norm(h, params["final_norm"], cfg.norm)
+
+
+def lm_loss(params, batch, cfg):
+    inputs, targets = common.shift_labels(batch["tokens"])
+    h = jnp.take(params["embed"], inputs, axis=0)
+    h = shard(h, "batch", None, None)
+    h = _stack_forward(params, h, cfg)
+    logits = shard(h @ params["lm_head"], "batch", None, "model")
+    loss = common.cross_entropy(logits, targets, batch.get("loss_mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(cfg, batch: int, max_context: int) -> dict:
+    del max_context                                      # O(1) state
+    dtype = common.dtype_of(cfg)
+    d_inner, h, n, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, cfg.ssm_headdim, n),
+                         jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg, *, max_context: int):
+    del max_context
+    s = tokens.shape[1]
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def scan_body(hh, lp):
+        x = common.norm(hh, lp["ln"], cfg.norm)
+        z, xbc, dt_raw = _ssm_inputs(lp, x, cfg)
+        xbc_c = _causal_conv(xbc, lp["conv_w"], lp["conv_b"])
+        xh, u, loga, b_mat, c_mat = _post_conv(lp, xbc_c, dt_raw, cfg)
+        y, fin = ssd_chunked(u, loga, b_mat, c_mat, cfg.ssm_chunk)
+        out = _finish(lp, y, xh, z, cfg)
+        return hh + out, (xbc[:, s - (cfg.conv_width - 1):], fin)
+
+    h, (conv_states, ssm_states) = jax.lax.scan(
+        scan_body, h, params["layers"],
+        unroll=flags.cost_unroll(cfg.n_layers))
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    logits = (h[:, -1:] @ params["lm_head"])[:, 0]
+    return logits, {"conv": conv_states, "ssm": ssm_states,
+                    "step": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = shard(h, "batch", None, None)
+
+    def scan_body(hh, xs):
+        lp, cs, ss = xs
+        out, ncs, nss = layer_decode(lp, common.norm(hh, lp["ln"], cfg.norm),
+                                     cfg, cs, ss)
+        return hh + out, (ncs, nss)
+
+    h, (conv_new, ssm_new) = jax.lax.scan(
+        scan_body, h, (params["layers"], cache["conv"], cache["ssm"]),
+        unroll=flags.cost_unroll(cfg.n_layers))
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    logits = shard(h @ params["lm_head"], "batch", None, "model")
+    return logits, {"conv": conv_new, "ssm": ssm_new,
+                    "step": cache["step"] + 1}

@@ -1,0 +1,124 @@
+"""MinkowskiUNet [5] — the paper's segmentation benchmark (Seg(i)/Seg(o)).
+
+Sparse UNet over the SpOctA core: Subm3 feature blocks, Gconv2 downsampling,
+Tconv2 upsampling with exact coordinate recovery (§IV-D2) + skip concat.
+``small`` ~ Seg(i) (ScanNet-sized), ``large`` ~ Seg(o) (SemanticKITTI-sized).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spconv
+from repro.core.spconv import SparseTensor
+
+
+@dataclass(frozen=True)
+class MinkUNetConfig:
+    name: str = "minkunet-small"
+    in_ch: int = 4
+    classes: int = 20
+    stem: int = 32
+    enc: tuple = (32, 64, 128, 256)
+    dec: tuple = (128, 96, 96, 96)
+    blocks: int = 1                 # Subm3 convs per stage
+    grid_bits: int = 7
+    batch_bits: int = 4
+    map_method: str = "octree"      # paper | 'sorted' beyond-paper variant
+    spac: bool = True               # §V-B sparsity-aware elision
+
+
+SMALL = MinkUNetConfig()
+LARGE = MinkUNetConfig(name="minkunet-large", stem=32,
+                       enc=(64, 128, 256, 512), dec=(256, 192, 128, 128),
+                       blocks=2)
+
+
+def _conv_bn(key, k_taps, cin, cout):
+    return {"conv": spconv.init_conv(key, k_taps, cin, cout),
+            "bn": spconv.init_batchnorm(cout)}
+
+
+def init_model(cfg: MinkUNetConfig, key) -> dict:
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": _conv_bn(next(ks), 27, cfg.in_ch, cfg.stem)}
+    c_prev = cfg.stem
+    skips = [cfg.stem]
+    for i, c in enumerate(cfg.enc):
+        stage = {"down": _conv_bn(next(ks), 8, c_prev, c)}
+        for b in range(cfg.blocks):
+            stage[f"block{b}"] = _conv_bn(next(ks), 27, c, c)
+        p[f"enc{i}"] = stage
+        c_prev = c
+        skips.append(c)
+    for i, c in enumerate(cfg.dec):
+        skip_c = skips[-(i + 2)]
+        stage = {"up": _conv_bn(next(ks), 8, c_prev, c)}
+        for b in range(cfg.blocks):
+            cin = c + skip_c if b == 0 else c
+            stage[f"block{b}"] = _conv_bn(next(ks), 27, cin, c)
+        p[f"dec{i}"] = stage
+        c_prev = c
+    p["head"] = spconv.init_conv(next(ks), 1, c_prev, cfg.classes)
+    return p
+
+
+def _apply_subm(st, params, cfg, training, n_max):
+    st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
+                           method=cfg.map_method, grid_bits=cfg.grid_bits,
+                           batch_bits=cfg.batch_bits, spac=cfg.spac)
+    st, _ = spconv.batch_norm(st, params["bn"], training=training)
+    return spconv.relu(st)
+
+
+def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
+            training: bool = False) -> jnp.ndarray:
+    """Returns per-voxel class logits (N, classes)."""
+    n_max = st.n_max
+    st = spconv.mask_feats(st)
+    st = _apply_subm(st, params["stem"], cfg, training, n_max)
+
+    skips, maps_stack = [st], []
+    gb = cfg.grid_bits
+    for i in range(len(cfg.enc)):
+        stage = params[f"enc{i}"]
+        down, maps = spconv.gconv2(st, stage["down"]["conv"], grid_bits=gb,
+                                   batch_bits=cfg.batch_bits)
+        down, _ = spconv.batch_norm(down, stage["down"]["bn"], training=training)
+        st = spconv.relu(down)
+        for b in range(cfg.blocks):
+            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max)
+        maps_stack.append(maps)
+        skips.append(st)
+
+    for i in range(len(cfg.dec)):
+        stage = params[f"dec{i}"]
+        maps = maps_stack[-(i + 1)]
+        target = skips[-(i + 2)]
+        up = spconv.tconv2(st, stage["up"]["conv"], maps, target)
+        up, _ = spconv.batch_norm(up, stage["up"]["bn"], training=training)
+        up = spconv.relu(up)
+        st = up.replace_feats(
+            jnp.concatenate([up.feats, target.feats], axis=-1))
+        for b in range(cfg.blocks):
+            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max)
+
+    logits = st.feats @ params["head"]["w"][0] + params["head"]["b"]
+    return jnp.where(st.valid[:, None], logits, 0)
+
+
+def segmentation_loss(params, batch, cfg: MinkUNetConfig):
+    """batch: SparseTensor fields + labels (N,) int32."""
+    st = SparseTensor(batch["coords"], batch["batch"], batch["valid"],
+                      batch["feats"])
+    logits = forward(params, st, cfg, training=True)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    ll = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]
+    nll = jnp.where(st.valid, lse - ll, 0.0)
+    loss = nll.sum() / jnp.maximum(st.valid.sum(), 1)
+    acc = jnp.where(st.valid, jnp.argmax(logits, -1) == batch["labels"], False)
+    acc = acc.sum() / jnp.maximum(st.valid.sum(), 1)
+    return loss, {"ce": loss, "acc": acc}

@@ -1,0 +1,320 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention,
+1:2 attn:recurrent pattern [arXiv:2402.19427].
+
+Layers repeat (rec, rec, attn); depth is a lax.scan over *groups* of three
+stacked layers (plus an explicit tail when n_layers % 3 != 0), keeping HLO
+O(1) in depth like the other families. The RG-LRU linear recurrence runs as
+an associative scan over sequence (train/prefill) and a single fused step
+in decode. Gates are block-diagonal per head (RecurrentGemma's layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common
+from repro.runtime import flags
+from repro.runtime.sharding import shard
+
+C_RGLRU = 8.0
+
+
+def lru_width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _pattern(cfg):
+    n_groups = cfg.n_layers // 3
+    tail = cfg.n_layers - 3 * n_groups          # trailing rec layers
+    return n_groups, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_rec_layer(key, cfg, dtype):
+    d, w, h = cfg.d_model, lru_width(cfg), cfg.n_heads
+    bh = w // h
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": common.init_norm(cfg.norm, d, dtype),
+        "w_x": common.normal(ks[0], (d, w), d ** -0.5, dtype),
+        "w_gate_branch": common.normal(ks[1], (d, w), d ** -0.5, dtype),
+        "conv_w": common.normal(ks[2], (cfg.conv_width, w), 0.5, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_i": common.normal(ks[3], (h, bh, bh), bh ** -0.5, dtype),
+        "gate_r": common.normal(ks[4], (h, bh, bh), bh ** -0.5, dtype),
+        # sigmoid(lam) ~ 0.9..0.999 decay band
+        "lam": jnp.linspace(2.2, 6.9, w).astype(jnp.float32),
+        "w_out": common.normal(ks[5], (w, d), w ** -0.5, dtype),
+        "ln2": common.init_norm(cfg.norm, d, dtype),
+        "mlp": common.init_mlp(jax.random.fold_in(key, 7), d, cfg.d_ff, dtype,
+                               gated=True),
+    }
+
+
+def init_attn_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln": common.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init_attention(ks[0], cfg, dtype),
+        "ln2": common.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                               gated=True),
+    }
+
+
+def init_group(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"rec0": init_rec_layer(ks[0], cfg, dtype),
+            "rec1": init_rec_layer(ks[1], cfg, dtype),
+            "attn": init_attn_layer(ks[2], cfg, dtype)}
+
+
+def init_lm(cfg, key):
+    dtype = common.dtype_of(cfg)
+    n_groups, tail = _pattern(cfg)
+    ks = jax.random.split(key, 4)
+    gkeys = jax.random.split(ks[0], n_groups)
+    params = {
+        "embed": common.normal(ks[1], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "groups": jax.vmap(lambda k: init_group(k, cfg, dtype))(gkeys),
+        "final_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    tkeys = jax.random.split(ks[2], max(tail, 1))
+    params["tail"] = [init_rec_layer(tkeys[i], cfg, dtype) for i in range(tail)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _gates(lp, x, cfg):
+    """Block-diagonal per-head gates. x (..., W) -> (r, i) in fp32."""
+    h = cfg.n_heads
+    bh = x.shape[-1] // h
+    xh = x.reshape(*x.shape[:-1], h, bh)
+    r = jax.nn.sigmoid(jnp.einsum("...hc,hcd->...hd", xh, lp["gate_r"])
+                       .reshape(x.shape).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...hc,hcd->...hd", xh, lp["gate_i"])
+                       .reshape(x.shape).astype(jnp.float32))
+    return r, i
+
+
+def rg_lru_full(lp, x, cfg, h0=None):
+    """x (B, S, W) -> (y, h_last). Associative scan over S."""
+    r, i = _gates(lp, x, cfg)
+    log_a = -C_RGLRU * r * jax.nn.softplus(lp["lam"])            # (B,S,W)
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(lp, x, cfg, h_prev):
+    """x (B, 1, W), h_prev (B, W) fp32 -> (y (B,1,W), h_new)."""
+    r, i = _gates(lp, x, cfg)
+    log_a = -C_RGLRU * r[:, 0] * jax.nn.softplus(lp["lam"])
+    a = jnp.exp(log_a)
+    gated_x = i[:, 0] * x[:, 0].astype(jnp.float32)
+    h_new = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _rec_temporal_full(lp, x, cfg, h0=None, conv_state=None):
+    """Recurrent temporal block over full sequence. Returns extras for cache."""
+    bx = shard(x @ lp["w_x"], "batch", None, "model")
+    gate = jax.nn.gelu(shard(x @ lp["w_gate_branch"], "batch", None, "model"))
+    width = lp["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.pad(bx, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, bx], axis=1)
+    conv = sum(pad[:, i:i + x.shape[1]] * lp["conv_w"][i] for i in range(width))
+    conv = conv + lp["conv_b"]
+    y, h_last = rg_lru_full(lp, conv, cfg, h0)
+    out = shard((y * gate) @ lp["w_out"], "batch", None, None)
+    new_conv_state = pad[:, pad.shape[1] - (width - 1):]
+    return out, h_last, new_conv_state
+
+
+def rec_layer_full(lp, h, cfg):
+    t_out, h_last, conv_state = _rec_temporal_full(
+        lp, common.norm(h, lp["ln"], cfg.norm), cfg)
+    h = h + t_out
+    m = common.mlp(lp["mlp"], common.norm(h, lp["ln2"], cfg.norm), cfg.act)
+    return h + m, (h_last, conv_state)
+
+
+def attn_layer_full(lp, h, cfg):
+    a_out, kv = attention.attend_full(lp["attn"],
+                                      common.norm(h, lp["ln"], cfg.norm), cfg,
+                                      window=cfg.local_window)
+    h = h + a_out
+    m = common.mlp(lp["mlp"], common.norm(h, lp["ln2"], cfg.norm), cfg.act)
+    return h + m, kv
+
+
+def rec_layer_decode(lp, h, cfg, rec_h, conv_state):
+    x = common.norm(h, lp["ln"], cfg.norm)
+    bx = x @ lp["w_x"]
+    gate = jax.nn.gelu(x @ lp["w_gate_branch"])
+    window = jnp.concatenate([conv_state, bx], axis=1)
+    conv = (window * lp["conv_w"][None]).sum(1, keepdims=True) + lp["conv_b"]
+    y, h_new = rg_lru_step(lp, conv, cfg, rec_h)
+    h = h + (y * gate) @ lp["w_out"]
+    m = common.mlp(lp["mlp"], common.norm(h, lp["ln2"], cfg.norm), cfg.act)
+    return h + m, h_new, window[:, 1:]
+
+
+def attn_layer_decode(lp, h, cfg, kvc: attention.KVCache, step):
+    a_in = common.norm(h, lp["ln"], cfg.norm)
+    a_out, kvc = attention.attend_decode(lp["attn"], a_in, cfg, kvc, step,
+                                         window=cfg.local_window)
+    h = h + a_out
+    m = common.mlp(lp["mlp"], common.norm(h, lp["ln2"], cfg.norm), cfg.act)
+    return h + m, kvc
+
+
+# ---------------------------------------------------------------------------
+# LM-level API
+# ---------------------------------------------------------------------------
+
+def _group_full(gp, h, cfg):
+    h, _ = rec_layer_full(gp["rec0"], h, cfg)
+    h, _ = rec_layer_full(gp["rec1"], h, cfg)
+    h, _ = attn_layer_full(gp["attn"], h, cfg)
+    return h
+
+
+def _stack_forward(params, h, cfg):
+    body = jax.checkpoint(functools.partial(_group_full, cfg=cfg))
+
+    def scan_body(hh, gp):
+        return body(gp, hh), None
+
+    h, _ = jax.lax.scan(scan_body, h, params["groups"],
+                      unroll=flags.cost_unroll(cfg.n_layers // 3))
+    for lp in params["tail"]:
+        h, _ = rec_layer_full(lp, h, cfg)
+    return common.norm(h, params["final_norm"], cfg.norm)
+
+
+def lm_loss(params, batch, cfg):
+    inputs, targets = common.shift_labels(batch["tokens"])
+    h = jnp.take(params["embed"], inputs, axis=0)
+    h = shard(h, "batch", None, None)
+    h = _stack_forward(params, h, cfg)
+    logits = shard(h @ params["embed"].T, "batch", None, "model")
+    loss = common.cross_entropy(logits, targets, batch.get("loss_mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(cfg, batch: int, max_context: int) -> dict:
+    dtype = common.dtype_of(cfg)
+    n_groups, tail = _pattern(cfg)
+    w = lru_width(cfg)
+    cap = min(max_context, cfg.local_window)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "rec_h": jnp.zeros((n_groups, 2, batch, w), jnp.float32),
+        "rec_conv": jnp.zeros((n_groups, 2, batch, cfg.conv_width - 1, w), dtype),
+        "k": jnp.zeros((n_groups, batch, cap, kvh, hd), dtype),
+        "v": jnp.zeros((n_groups, batch, cap, kvh, hd), dtype),
+        "pos": jnp.full((cap,), -1, jnp.int32),
+        "tail_h": jnp.zeros((max(tail, 1), batch, w), jnp.float32),
+        "tail_conv": jnp.zeros((max(tail, 1), batch, cfg.conv_width - 1, w), dtype),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg, *, max_context: int):
+    s = tokens.shape[1]
+    cap = min(max_context, cfg.local_window)
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def scan_body(hh, gp):
+        hh, (h0, c0) = rec_layer_full(gp["rec0"], hh, cfg)
+        hh, (h1, c1) = rec_layer_full(gp["rec1"], hh, cfg)
+        hh, (k, v) = attn_layer_full(gp["attn"], hh, cfg)
+        kvc = attention.cache_from_prefill(k, v, cap)
+        return hh, (jnp.stack([h0, h1]), jnp.stack([c0, c1]),
+                    kvc.k, kvc.v, kvc.pos)
+
+    h, (rec_h, rec_conv, kc, vc, pos) = jax.lax.scan(
+        scan_body, h, params["groups"],
+        unroll=flags.cost_unroll(cfg.n_layers // 3))
+    tail_h, tail_conv = [], []
+    for lp in params["tail"]:
+        h, (hl, cl) = rec_layer_full(lp, h, cfg)
+        tail_h.append(hl)
+        tail_conv.append(cl)
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    logits = (h[:, -1:] @ params["embed"].T)[:, 0]
+    n_groups, tail = _pattern(cfg)
+    cache = {
+        "rec_h": rec_h, "rec_conv": rec_conv, "k": kc, "v": vc,
+        "pos": pos[0],
+        "tail_h": (jnp.stack(tail_h) if tail else
+                   jnp.zeros((1,) + rec_h.shape[2:], jnp.float32)),
+        "tail_conv": (jnp.stack(tail_conv) if tail else
+                      jnp.zeros((1,) + rec_conv.shape[2:],
+                                common.dtype_of(cfg))),
+        "step": jnp.asarray(s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg):
+    step = cache["step"]
+    cap = cache["k"].shape[2]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    new_pos = cache["pos"].at[step % cap].set(step)
+
+    def scan_body(hh, xs):
+        gp, rh, rc, kc, vc = xs
+        hh, h0, c0 = rec_layer_decode(gp["rec0"], hh, cfg, rh[0], rc[0])
+        hh, h1, c1 = rec_layer_decode(gp["rec1"], hh, cfg, rh[1], rc[1])
+        kvc = attention.KVCache(k=kc, v=vc, pos=new_pos)
+        hh, kvc = attn_layer_decode(gp["attn"], hh, cfg, kvc, step)
+        return hh, (jnp.stack([h0, h1]), jnp.stack([c0, c1]), kvc.k, kvc.v)
+
+    h, (rec_h, rec_conv, kc, vc) = jax.lax.scan(
+        scan_body, h,
+        (params["groups"], cache["rec_h"], cache["rec_conv"],
+         cache["k"], cache["v"]),
+        unroll=flags.cost_unroll(cfg.n_layers // 3))
+    tail_h, tail_conv = [], []
+    n_groups, tail = _pattern(cfg)
+    for i, lp in enumerate(params["tail"]):
+        h, hl, cl = rec_layer_decode(lp, h, cfg, cache["tail_h"][i],
+                                     cache["tail_conv"][i])
+        tail_h.append(hl)
+        tail_conv.append(cl)
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    logits = shard(h @ params["embed"].T, "batch", None, "model")
+    new_cache = {
+        "rec_h": rec_h, "rec_conv": rec_conv, "k": kc, "v": vc,
+        "pos": new_pos,
+        "tail_h": jnp.stack(tail_h) if tail else cache["tail_h"],
+        "tail_conv": jnp.stack(tail_conv) if tail else cache["tail_conv"],
+        "step": step + 1,
+    }
+    return logits, new_cache

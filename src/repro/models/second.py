@@ -1,0 +1,141 @@
+"""SECOND [6] — the paper's detection benchmark (Det(k)/Det(n)).
+
+Sparse middle feature extractor over the SpOctA core (Subm3 blocks +
+Gconv3 stride-2 downsampling — the input-stationary §IV-D3 path), densified
+to a BEV grid, followed by a small dense 2D RPN head. The detection head is
+simplified to per-cell objectness + box regression on synthetic targets
+(datasets are license-gated offline; DESIGN.md §7.5) — the SpConv workload,
+which is what SpOctA accelerates, is the faithful part.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spconv
+from repro.core.spconv import SparseTensor
+
+
+@dataclass(frozen=True)
+class SECONDConfig:
+    name: str = "second-small"
+    in_ch: int = 4
+    channels: tuple = (16, 32, 64)     # one per downsample stage
+    blocks: int = 2                    # Subm3 per stage
+    bev_hw: int = 64                   # BEV grid (after 3 downsamples)
+    bev_z: int = 2                     # z-planes folded into channels
+    head_ch: int = 128
+    box_dim: int = 7                   # (x, y, z, w, l, h, yaw)
+    grid_bits: int = 7
+    batch_bits: int = 4
+    n_batch: int = 2
+    map_method: str = "octree"
+    spac: bool = True
+
+
+SMALL = SECONDConfig()
+LARGE = SECONDConfig(name="second-large", channels=(32, 64, 128), blocks=2,
+                     bev_hw=128, head_ch=256)
+
+
+def init_model(cfg: SECONDConfig, key) -> dict:
+    ks = iter(jax.random.split(key, 32))
+    p = {}
+    c_prev = cfg.in_ch
+    for i, c in enumerate(cfg.channels):
+        stage = {"down": {"conv": spconv.init_conv(next(ks), 27, c_prev, c),
+                          "bn": spconv.init_batchnorm(c)}}
+        for b in range(cfg.blocks):
+            stage[f"block{b}"] = {
+                "conv": spconv.init_conv(next(ks), 27, c, c),
+                "bn": spconv.init_batchnorm(c)}
+        p[f"stage{i}"] = stage
+        c_prev = c
+    bev_c = c_prev * cfg.bev_z
+    k1, k2, k3, k4 = (next(ks) for _ in range(4))
+    p["rpn"] = {
+        "conv1": jax.random.normal(k1, (3, 3, bev_c, cfg.head_ch)) * 0.05,
+        "conv2": jax.random.normal(k2, (3, 3, cfg.head_ch, cfg.head_ch)) * 0.05,
+        "cls": jax.random.normal(k3, (1, 1, cfg.head_ch, 1)) * 0.05,
+        "box": jax.random.normal(k4, (1, 1, cfg.head_ch, cfg.box_dim)) * 0.05,
+    }
+    return p
+
+
+def _subm_block(st, params, cfg, training, n_max):
+    st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
+                           method=cfg.map_method, grid_bits=cfg.grid_bits,
+                           batch_bits=cfg.batch_bits, spac=cfg.spac)
+    st, _ = spconv.batch_norm(st, params["bn"], training=training)
+    return spconv.relu(st)
+
+
+def middle_extractor(params, st: SparseTensor, cfg: SECONDConfig, *,
+                     training: bool = False) -> SparseTensor:
+    n_max = st.n_max
+    st = spconv.mask_feats(st)
+    for i in range(len(cfg.channels)):
+        stage = params[f"stage{i}"]
+        down, _ = spconv.gconv3(st, stage["down"]["conv"],
+                                grid_bits=cfg.grid_bits,
+                                batch_bits=cfg.batch_bits,
+                                dataflow="input_stationary" if i == 0
+                                else "output_stationary")
+        down, _ = spconv.batch_norm(down, stage["down"]["bn"],
+                                    training=training)
+        st = spconv.relu(down)
+        for b in range(cfg.blocks):
+            st = _subm_block(st, stage[f"block{b}"], cfg, training, st.n_max)
+    return st
+
+
+def to_bev(st: SparseTensor, cfg: SECONDConfig) -> jnp.ndarray:
+    """Scatter sparse voxels into a dense (B, H, W, C*Z) BEV tensor."""
+    c = st.feats.shape[-1]
+    hw, z = cfg.bev_hw, cfg.bev_z
+    x = jnp.clip(st.coords[:, 0], 0, hw - 1)
+    y = jnp.clip(st.coords[:, 1], 0, hw - 1)
+    zz = jnp.clip(st.coords[:, 2], 0, z - 1)
+    flat = ((st.batch * hw + x) * hw + y) * z + zz
+    flat = jnp.where(st.valid, flat, cfg.n_batch * hw * hw * z)
+    bev = jnp.zeros((cfg.n_batch * hw * hw * z, c), st.feats.dtype)
+    bev = bev.at[flat].add(st.feats, mode="drop")
+    return bev.reshape(cfg.n_batch, hw, hw, z * c)
+
+
+def rpn_head(params, bev: jnp.ndarray):
+    dn = ("NHWC", "HWIO", "NHWC")
+    h = jax.nn.relu(jax.lax.conv_general_dilated(
+        bev, params["conv1"].astype(bev.dtype), (1, 1), "SAME",
+        dimension_numbers=dn))
+    h = jax.nn.relu(jax.lax.conv_general_dilated(
+        h, params["conv2"].astype(bev.dtype), (1, 1), "SAME",
+        dimension_numbers=dn))
+    cls = jax.lax.conv_general_dilated(
+        h, params["cls"].astype(bev.dtype), (1, 1), "SAME",
+        dimension_numbers=dn)[..., 0]
+    box = jax.lax.conv_general_dilated(
+        h, params["box"].astype(bev.dtype), (1, 1), "SAME",
+        dimension_numbers=dn)
+    return cls, box
+
+
+def detection_loss(params, batch, cfg: SECONDConfig):
+    """batch: SparseTensor fields + objectness (B,H,W), boxes (B,H,W,7)."""
+    st = SparseTensor(batch["coords"], batch["batch"], batch["valid"],
+                      batch["feats"])
+    mid = middle_extractor(params, st, cfg, training=True)
+    bev = to_bev(mid, cfg)
+    cls, box = rpn_head(params["rpn"], bev)
+    obj = batch["objectness"].astype(jnp.float32)
+    cls32 = cls.astype(jnp.float32)
+    cls_loss = jnp.mean(
+        jnp.maximum(cls32, 0) - cls32 * obj + jnp.log1p(jnp.exp(-jnp.abs(cls32))))
+    diff = (box.astype(jnp.float32) - batch["boxes"].astype(jnp.float32))
+    huber = jnp.where(jnp.abs(diff) < 1.0, 0.5 * diff ** 2,
+                      jnp.abs(diff) - 0.5)
+    box_loss = (huber * obj[..., None]).sum() / jnp.maximum(obj.sum(), 1.0)
+    loss = cls_loss + 2.0 * box_loss
+    return loss, {"cls": cls_loss, "box": box_loss}

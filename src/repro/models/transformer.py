@@ -1,0 +1,186 @@
+"""Unified transformer LM: dense & MoE decoders + bidirectional encoders.
+
+One definition serves mixtral (MoE+SWA), yi / deepseek / tinyllama (dense
+llama-family), qwen3 (qk-norm), llava's mistral backbone, and hubert's
+encoder. Depth is a lax.scan over stacked layer parameters with
+jax.checkpoint on the body — HLO size and compile time are O(1) in depth,
+which is what makes the 66-compile dry-run matrix feasible (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, moe
+from repro.runtime import flags
+from repro.runtime.sharding import shard
+
+REMAT_POLICY = {"full": None,
+                "dots": jax.checkpoint_policies.checkpoint_dots,
+                "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims}
+_REMAT_MODE = ["full"]          # mutable: launch-time perf knob (§Perf)
+
+
+def set_remat_mode(mode: str) -> None:
+    assert mode in REMAT_POLICY, mode
+    _REMAT_MODE[0] = mode
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": common.init_norm(cfg.norm, cfg.d_model, dtype),
+         "ln2": common.init_norm(cfg.norm, cfg.d_model, dtype),
+         "attn": attention.init_attention(ks[0], cfg, dtype)}
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                   gated=cfg.act == "silu")
+    return p
+
+
+def init_lm(cfg, key) -> dict:
+    dtype = common.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": common.normal(ks[1], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": common.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.normal(
+            ks[2], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _layer_full(lp, h, cfg, collect_kv: bool):
+    a_in = common.norm(h, lp["ln1"], cfg.norm)
+    a_out, kv = attention.attend_full(lp["attn"], a_in, cfg)
+    h = h + a_out
+    m_in = common.norm(h, lp["ln2"], cfg.norm)
+    if cfg.n_experts:
+        m_out, metrics = moe.moe_ffn(lp["moe"], m_in, cfg)
+        aux = metrics["moe_aux"]
+        drop = metrics["moe_drop_frac"]
+    else:
+        m_out = common.mlp(lp["mlp"], m_in, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+        drop = jnp.zeros((), jnp.float32)
+    h = shard(h + m_out, "batch", None, None)
+    return h, (aux, drop), (kv if collect_kv else None)
+
+
+def forward_embeds(params, h, cfg, *, collect_kv: bool = False):
+    """h (B, S, D) embeddings -> (hidden, aux, kv_stack | None)."""
+    h = shard(h, "batch", None, None)
+
+    body = functools.partial(_layer_full, cfg=cfg, collect_kv=collect_kv)
+    policy = REMAT_POLICY[_REMAT_MODE[0]]
+    body = jax.checkpoint(body, policy=policy)
+
+    def scan_body(carry, lp):
+        hh, aux, drop = carry
+        hh, (a, d), kv = body(lp, hh)
+        return (hh, aux + a, drop + d), kv
+
+    (h, aux, drop), kvs = jax.lax.scan(
+        scan_body, (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        params["layers"], unroll=flags.cost_unroll(cfg.n_layers))
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    n_l = cfg.n_layers
+    return h, {"moe_aux": aux / n_l, "moe_drop_frac": drop / n_l}, kvs
+
+
+def logits_fn(params, h, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return shard(h @ w, "batch", None, "model")
+
+
+def lm_loss(params, batch: dict[str, Any], cfg):
+    """Next-token CE (+ MoE aux). batch: tokens (B, S) [, loss_mask (B, S)]."""
+    inputs, targets = common.shift_labels(batch["tokens"])
+    h = jnp.take(params["embed"], inputs, axis=0)
+    h, aux, _ = forward_embeds(params, h, cfg)
+    logits = logits_fn(params, h, cfg)
+    mask = batch.get("loss_mask")
+    mask = mask[:, 1:] if mask is not None else None
+    loss = common.cross_entropy(logits, targets, mask)
+    metrics = {"ce": loss, **{k: v for k, v in aux.items()}}
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * aux["moe_aux"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg, max_context: int) -> int:
+    return min(max_context, cfg.swa_window) if cfg.swa_window else max_context
+
+
+def init_cache(cfg, batch: int, max_context: int) -> dict:
+    dtype = common.dtype_of(cfg)
+    cap = cache_capacity(cfg, max_context)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cap, kv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cap, kv, hd), dtype),
+        "pos": jnp.full((cap,), -1, jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg, *, max_context: int):
+    """tokens (B, S) -> (last-token logits (B, V), cache)."""
+    s = tokens.shape[1]
+    cap = cache_capacity(cfg, max_context)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h, _, kvs = forward_embeds(params, h, cfg, collect_kv=True)
+    logits = logits_fn(params, h[:, -1:], cfg)[:, 0]
+    k_stack, v_stack = kvs                         # (L, B, S, KV, hd)
+    caches = jax.vmap(lambda k, v: attention.cache_from_prefill(k, v, cap))(
+        k_stack, v_stack)
+    return logits, {"k": caches.k, "v": caches.v, "pos": caches.pos[0],
+                    "step": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg):
+    """tokens (B, 1) -> (logits (B, 1, V), new cache). One step, all layers."""
+    step = cache["step"]
+    cap = cache["k"].shape[2]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = shard(h, "batch", None, None)
+    new_pos = cache["pos"].at[step % cap].set(step)
+
+    def scan_body(hh, xs):
+        lp, kc, vc = xs
+        a_in = common.norm(hh, lp["ln1"], cfg.norm)
+        kvc = attention.KVCache(k=kc, v=vc, pos=new_pos)
+        a_out, kvc = attention.attend_decode(lp["attn"], a_in, cfg, kvc, step)
+        hh = hh + a_out
+        m_in = common.norm(hh, lp["ln2"], cfg.norm)
+        if cfg.n_experts:
+            m_out, _ = moe.moe_ffn(lp["moe"], m_in, cfg)
+        else:
+            m_out = common.mlp(lp["mlp"], m_in, cfg.act)
+        return hh + m_out, (kvc.k, kvc.v)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        scan_body, h, (params["layers"], cache["k"], cache["v"]),
+        unroll=flags.cost_unroll(cfg.n_layers))
+    h = common.norm(h, params["final_norm"], cfg.norm)
+    logits = logits_fn(params, h, cfg)
+    return logits, {"k": k_new, "v": v_new, "pos": new_pos, "step": step + 1}

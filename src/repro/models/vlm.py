@@ -1,0 +1,69 @@
+"""LLaVA-NeXT (mistral-7b backbone) VLM wrapper.
+
+The vision tower is a STUB per the brief: ``input_specs`` provides
+precomputed patch embeddings (B, n_patches, vision_dim) — the anyres tiling
+(base 576 patches + 4 tiles = 2880) determines n_patches. This module owns
+the 2-layer MLP projector and the multimodal sequence assembly; everything
+else is the shared transformer stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, transformer
+from repro.runtime.sharding import shard
+
+
+def init_model(cfg, key):
+    dtype = common.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    lm = transformer.init_lm(cfg, ks[0])
+    return {
+        **lm,
+        "proj_in": common.normal(ks[1], (cfg.vision_dim, cfg.d_model),
+                                 cfg.vision_dim ** -0.5, dtype),
+        "proj_out": common.normal(ks[2], (cfg.d_model, cfg.d_model),
+                                  cfg.d_model ** -0.5, dtype),
+    }
+
+
+def project_patches(params, patches):
+    h = jax.nn.gelu(patches @ params["proj_in"])
+    return shard(h @ params["proj_out"], "batch", None, None)
+
+
+def lm_loss(params, batch, cfg):
+    """batch: patches (B, P, vision_dim), tokens (B, S_text).
+
+    Sequence = [patches | text]; next-token CE on text only (position
+    P-1+i predicts text token i)."""
+    pe = project_patches(params, batch["patches"])
+    tokens = batch["tokens"]
+    te = jnp.take(params["embed"], tokens[:, :-1], axis=0)
+    h = jnp.concatenate([pe, te], axis=1)
+    h, aux, _ = transformer.forward_embeds(params, h, cfg)
+    p = pe.shape[1]
+    logits = transformer.logits_fn(params, h[:, p - 1:], cfg)
+    loss = common.cross_entropy(logits, tokens, batch.get("loss_mask"))
+    return loss, {"ce": loss, **aux}
+
+
+def prefill(params, batch, cfg, *, max_context: int):
+    """Multimodal prefill: [patches | prompt tokens] -> (logits, cache)."""
+    pe = project_patches(params, batch["patches"])
+    te = jnp.take(params["embed"], batch["tokens"], axis=0)
+    h = jnp.concatenate([pe, te], axis=1)
+    cap = transformer.cache_capacity(cfg, max_context)
+    h, _, kvs = transformer.forward_embeds(params, h, cfg, collect_kv=True)
+    logits = transformer.logits_fn(params, h[:, -1:], cfg)[:, 0]
+    from repro.models import attention
+    caches = jax.vmap(lambda k, v: attention.cache_from_prefill(k, v, cap))(
+        kvs[0], kvs[1])
+    s = h.shape[1]
+    return logits, {"k": caches.k, "v": caches.v, "pos": caches.pos[0],
+                    "step": jnp.asarray(s, jnp.int32)}
+
+
+decode_step = transformer.decode_step
+init_cache = transformer.init_cache

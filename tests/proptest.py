@@ -1,0 +1,57 @@
+"""Minimal property-based testing shim.
+
+``hypothesis`` is not installable in this offline container, so tests use
+this thin substitute: a decorator that re-runs a property over a sweep of
+seeded random cases and reports the failing seed (the "shrunk" artifact is
+the seed itself — cases are fully reconstructible from it).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+N_CASES = int(os.environ.get("REPRO_PROPTEST_CASES", "25"))
+
+
+def forall(n_cases: int = N_CASES):
+    """Run ``fn(rng)`` for ``n_cases`` seeded numpy Generators."""
+
+    def deco(fn):
+        def wrapper():
+            for seed in range(n_cases):
+                rng = np.random.default_rng(seed)
+                try:
+                    fn(rng)
+                except Exception as e:  # noqa: BLE001 — re-raise with seed
+                    raise AssertionError(
+                        f"property failed at seed={seed}: {e}") from e
+        # plain name copy only: functools.wraps would copy the signature and
+        # make pytest treat ``rng`` as a fixture
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def random_cloud(rng: np.random.Generator, n: int, extent: int, batch: int = 1,
+                 n_valid: int | None = None):
+    """Random voxel cloud: unique (batch, coord) rows, padded with invalid."""
+    n_valid = n if n_valid is None else n_valid
+    seen = set()
+    coords = np.zeros((n, 3), dtype=np.int32)
+    bidx = np.zeros((n,), dtype=np.int32)
+    valid = np.zeros((n,), dtype=bool)
+    i = 0
+    while i < n_valid:
+        c = tuple(rng.integers(0, extent, size=3).tolist())
+        b = int(rng.integers(0, batch))
+        if (b, c) in seen:
+            continue
+        seen.add((b, c))
+        coords[i] = c
+        bidx[i] = b
+        valid[i] = True
+        i += 1
+    return coords, bidx, valid

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (brief (f)): REDUCED config of the same
+family, one forward/train step on CPU, assert output shapes + no NaNs.
+Decode-capable archs additionally run prefill + two decode steps and check
+prefill/decode consistency on the first generated logits."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPE_CELLS, cell_applicable, get_config, list_archs
+from repro.models import api
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch_for(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    if cfg.family == "encoder":
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((b, s, cfg.frontend_dim)), jnp.float32),
+            "mask": jnp.asarray(rng.random((b, s)) < 0.3),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        p = cfg.n_patches
+        return {
+            "patches": jnp.asarray(
+                rng.standard_normal((b, p, cfg.vision_dim)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        }
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch).reduced()
+    model = api.build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(cfg)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, batch)
+    flat, _ = jax.tree.flatten(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat), \
+        f"{arch}: non-finite grads"
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat), \
+        f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if get_config(a).has_decode])
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = get_config(arch).reduced()
+    model = api.build_model(cfg)
+    params = model.init(jax.random.key(1))
+    b, s, ctx = 2, 16, 64
+    batch = _batch_for(cfg, b, s)
+
+    logits_p, cache = jax.jit(
+        lambda p, bt: model.prefill(p, bt, ctx))(params, batch)
+    assert logits_p.shape == (b, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits_p, np.float32)))
+
+    next_tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    logits_d, cache = jax.jit(model.decode_step)(params, cache, next_tok)
+    assert logits_d.shape == (b, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+
+    # decode must agree with teacher-forced full forward on the same prefix
+    if cfg.family in ("decoder", "mamba2", "rglru"):
+        toks = jnp.concatenate([batch["tokens"], next_tok], axis=1)
+        logits_full, _ = jax.jit(
+            lambda p, bt: model.prefill(p, bt, ctx))(params, {"tokens": toks})
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0], np.float32),
+            np.asarray(logits_full, np.float32), rtol=2e-2, atol=2e-2)
+    tok2 = jnp.argmax(logits_d[:, -1], -1)[:, None].astype(jnp.int32)
+    logits_d2, _ = jax.jit(model.decode_step)(params, cache, tok2)
+    assert np.all(np.isfinite(np.asarray(logits_d2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cell_applicability_rules(arch):
+    cfg = get_config(arch)
+    rules = {c: cell_applicable(cfg, cell)[0]
+             for c, cell in SHAPE_CELLS.items()}
+    assert rules["train_4k"] and rules["prefill_32k"]
+    if arch == "hubert-xlarge":
+        assert not rules["decode_32k"] and not rules["long_500k"]
+    elif arch in ("mixtral-8x22b", "mixtral-8x7b", "mamba2-2.7b",
+                  "recurrentgemma-2b"):
+        assert rules["long_500k"]
+    else:
+        assert rules["decode_32k"] and not rules["long_500k"]
+
+
+def test_swa_rolling_cache_wraps_correctly():
+    """Decode past the SWA window: the rolling cache (capacity == window)
+    must agree with teacher-forced full forward using windowed attention."""
+    import dataclasses
+    cfg = get_config("mixtral-8x7b").reduced()          # window 16
+    assert cfg.swa_window == 16
+    model = api.build_model(cfg)
+    params = model.init(jax.random.key(3))
+    rng = np.random.default_rng(5)
+    b, s = 2, 24                                        # prompt > window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    logits_p, cache = jax.jit(
+        lambda p, bt: model.prefill(p, bt, 64))(params, {"tokens": toks})
+    assert cache["k"].shape[2] == cfg.swa_window        # rolling capacity
+    nxt = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    for _ in range(4):                                  # wrap several slots
+        logits_d, cache = jax.jit(model.decode_step)(params, cache, nxt)
+        full = jnp.concatenate([toks, nxt], axis=1)
+        ref, _ = jax.jit(lambda p, bt: model.prefill(p, bt, 64))(
+            params, {"tokens": full})
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0], np.float32), np.asarray(ref, np.float32),
+            rtol=2e-2, atol=2e-2)
+        toks = full
+        nxt = jnp.argmax(logits_d[:, -1], -1)[:, None].astype(jnp.int32)

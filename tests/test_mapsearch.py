@@ -1,0 +1,148 @@
+"""OCTENT map search vs brute-force / hash oracles (paper §IV)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import mapsearch, morton
+from tests.proptest import forall, random_cloud
+
+OFFS = morton.subm3_offsets()
+
+
+def _to_jnp(coords, bidx, valid):
+    return jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+
+
+@forall()
+def test_octree_matches_bruteforce_subm3(rng):
+    n = int(rng.integers(8, 48))
+    coords, bidx, valid = random_cloud(rng, n, extent=24, batch=2,
+                                       n_valid=int(rng.integers(4, n + 1)))
+    ref = mapsearch.build_kmap_bruteforce(coords, bidx, valid, OFFS)
+    got = mapsearch.build_kmap_octree(*_to_jnp(coords, bidx, valid),
+                                      jnp.asarray(OFFS), max_blocks=n)
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+@forall()
+def test_sorted_variant_matches_hash(rng):
+    n = int(rng.integers(8, 64))
+    coords, bidx, valid = random_cloud(rng, n, extent=64, batch=3)
+    ref = mapsearch.build_kmap_hash(coords, bidx, valid, OFFS)
+    got = mapsearch.build_kmap_sorted(*_to_jnp(coords, bidx, valid),
+                                      jnp.asarray(OFFS))
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+def test_hash_equals_bruteforce_dense_block():
+    # fully dense 4^3 block: every interior voxel must find all 27 neighbors
+    coords = np.array([[x, y, z] for x in range(4) for y in range(4)
+                       for z in range(4)], dtype=np.int32)
+    n = coords.shape[0]
+    bidx = np.zeros(n, np.int32)
+    valid = np.ones(n, bool)
+    km = np.asarray(mapsearch.build_kmap_octree(
+        *_to_jnp(coords, bidx, valid), jnp.asarray(OFFS), max_blocks=n))
+    interior = [i for i, c in enumerate(coords) if np.all((c >= 1) & (c <= 2))]
+    assert len(interior) == 8
+    assert np.all(km[interior] >= 0)
+    ref = mapsearch.build_kmap_bruteforce(coords, bidx, valid, OFFS)
+    np.testing.assert_array_equal(km, ref)
+
+
+def test_cross_block_neighbors_found():
+    """Voxels straddling a 16^3 block boundary must still find each other
+    (the blockwise table is exact, not approximate)."""
+    coords = np.array([[15, 8, 8], [16, 8, 8], [15, 15, 15], [16, 16, 16]],
+                      dtype=np.int32)
+    bidx = np.zeros(4, np.int32)
+    valid = np.ones(4, bool)
+    km = np.asarray(mapsearch.build_kmap_octree(
+        *_to_jnp(coords, bidx, valid), jnp.asarray(OFFS), max_blocks=8))
+    ref = mapsearch.build_kmap_bruteforce(coords, bidx, valid, OFFS)
+    np.testing.assert_array_equal(km, ref)
+    # (15,8,8) <-> (16,8,8) are +x/-x neighbors across the boundary
+    ix_plus = int(np.where((OFFS == [1, 0, 0]).all(1))[0][0])
+    assert km[0, ix_plus] == 1
+
+
+def test_batch_isolation():
+    """Identical coords in different batch items must not match."""
+    coords = np.array([[5, 5, 5], [6, 5, 5]], dtype=np.int32)
+    bidx = np.array([0, 1], np.int32)
+    valid = np.ones(2, bool)
+    km = np.asarray(mapsearch.build_kmap_octree(
+        *_to_jnp(coords, bidx, valid), jnp.asarray(OFFS), max_blocks=4))
+    ix_plus = int(np.where((OFFS == [1, 0, 0]).all(1))[0][0])
+    ix_center = int(np.where((OFFS == [0, 0, 0]).all(1))[0][0])
+    assert km[0, ix_plus] == -1           # would be 1 if batches leaked
+    assert km[0, ix_center] == 0 and km[1, ix_center] == 1
+
+
+@forall()
+def test_gconv2_parent_maps(rng):
+    n = int(rng.integers(8, 48))
+    coords, bidx, valid = random_cloud(rng, n, extent=32, batch=2)
+    maps = mapsearch.build_maps_gconv2(*_to_jnp(coords, bidx, valid))
+    oc = np.asarray(maps.out_coords)
+    ov = np.asarray(maps.out_valid)
+    ob = np.asarray(maps.out_batch)
+    # reference: unique parents
+    ref = {(int(b),) + tuple((c // 2).tolist())
+           for c, b, v in zip(coords, bidx, valid) if v}
+    got = {(int(b),) + tuple(c.tolist()) for c, b, v in zip(oc, ob, ov) if v}
+    assert got == ref
+    assert int(maps.n_out) == len(ref)
+    # every valid input maps to its own parent through its octant tap
+    oi = np.asarray(maps.out_idx)
+    tap = np.asarray(maps.tap)
+    for i in range(n):
+        if not valid[i]:
+            continue
+        assert tuple(oc[oi[i]].tolist()) == tuple((coords[i] // 2).tolist())
+        assert ob[oi[i]] == bidx[i]
+        expect_tap = (coords[i][0] & 1) | ((coords[i][1] & 1) << 1) \
+            | ((coords[i][2] & 1) << 2)
+        assert tap[i] == expect_tap
+
+
+@forall()
+def test_gconv3_maps_against_definition(rng):
+    n = int(rng.integers(8, 32))
+    coords, bidx, valid = random_cloud(rng, n, extent=16, batch=2)
+    maps = mapsearch.build_maps_gconv3(*_to_jnp(coords, bidx, valid))
+    oc, ov = np.asarray(maps.out_coords), np.asarray(maps.out_valid)
+    ob = np.asarray(maps.out_batch)
+    # reference map set: (in, out_coord, tap) with 2*out + d == in
+    ref = set()
+    outs = set()
+    for i in range(n):
+        if not valid[i]:
+            continue
+        for ti, (dx, dy, dz) in enumerate(morton.subm3_offsets()):
+            t = coords[i] - [dx, dy, dz]
+            if np.all(t % 2 == 0):
+                o = tuple((t // 2).tolist())
+                ref.add((i, (int(bidx[i]),) + o, ti))
+                outs.add((int(bidx[i]),) + o)
+    got_outs = {(int(b),) + tuple(c.tolist()) for c, b, v in zip(oc, ob, ov) if v}
+    assert got_outs == outs
+    got = set()
+    for ii, oi, tp, mv in zip(np.asarray(maps.in_idx), np.asarray(maps.out_idx),
+                              np.asarray(maps.tap), np.asarray(maps.mvalid)):
+        if mv:
+            got.add((int(ii), (int(ob[oi]),) + tuple(oc[oi].tolist()), int(tp)))
+    assert got == ref
+
+
+def test_strided_to_kmap_roundtrip():
+    rng = np.random.default_rng(7)
+    coords, bidx, valid = random_cloud(rng, 24, extent=16)
+    maps = mapsearch.build_maps_gconv2(jnp.asarray(coords), jnp.asarray(bidx),
+                                       jnp.asarray(valid))
+    kmap = np.asarray(mapsearch.strided_to_kmap(maps, n_out=24, n_taps=8))
+    # every valid triple appears in the gather form
+    for ii, oi, tp, mv in zip(np.asarray(maps.in_idx), np.asarray(maps.out_idx),
+                              np.asarray(maps.tap), np.asarray(maps.mvalid)):
+        if mv:
+            assert kmap[oi, tp] == ii
+    assert (kmap >= 0).sum() == int(np.asarray(maps.mvalid).sum())

@@ -1,0 +1,92 @@
+"""Unit + property tests for octree/Morton encoding (paper eq. 3)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import morton
+from tests.proptest import forall, random_cloud
+
+
+def test_interleave_roundtrip_exhaustive_small():
+    coords = np.array([[x, y, z] for x in range(8) for y in range(8)
+                       for z in range(8)], dtype=np.int32)
+    code = morton.interleave3(jnp.asarray(coords), bits=3)
+    back = morton.deinterleave3(code, bits=3)
+    np.testing.assert_array_equal(np.asarray(back), coords)
+
+
+def test_eq3_digit_convention():
+    # phi_level = {z y x}: x is the LSB of each octal digit.
+    assert int(morton.interleave3(jnp.array([1, 0, 0]), 4)) == 1
+    assert int(morton.interleave3(jnp.array([0, 1, 0]), 4)) == 2
+    assert int(morton.interleave3(jnp.array([0, 0, 1]), 4)) == 4
+    # level-2 digit: coordinate bit 1 lands at code bits 3..5
+    assert int(morton.interleave3(jnp.array([2, 0, 0]), 4)) == 8
+    assert int(morton.interleave3(jnp.array([0, 0, 2]), 4)) == 32
+
+
+@forall()
+def test_roundtrip_property(rng):
+    bits = int(rng.integers(1, 11))
+    coords = rng.integers(0, 1 << bits, size=(64, 3)).astype(np.int32)
+    code = morton.interleave3(jnp.asarray(coords), bits=bits)
+    back = morton.deinterleave3(code, bits=bits)
+    np.testing.assert_array_equal(np.asarray(back), coords)
+
+
+@forall()
+def test_morton_order_preserves_block_locality(rng):
+    # all voxels of one 16^3 block share one block key; different blocks differ
+    coords, bidx, valid = random_cloud(rng, 128, extent=256)
+    key = np.asarray(morton.block_key(jnp.asarray(coords), jnp.asarray(bidx)))
+    blk = tuple(map(tuple, coords >> 4))
+    for i in range(128):
+        for j in range(i + 1, 128):
+            same = blk[i] == blk[j] and bidx[i] == bidx[j]
+            assert (key[i] == key[j]) == same
+
+
+def test_local_code_split():
+    c = jnp.array([[15, 15, 15]], dtype=jnp.int32)
+    code = morton.local_code(c)
+    bank, row = morton.bank_and_row(code)
+    assert int(code[0]) == morton.TABLE_SIZE - 1
+    assert int(bank[0]) == 7 and int(row[0]) == morton.BANK_ROWS - 1
+
+
+def test_pnelut_structure_matches_paper():
+    """Fig. 5(b)/§IV-B2: 27 Subm3 queries spread over 8 banks with max row
+    depth 8 => 8 query cycles; Gconv2 needs 1."""
+    lut, depth, max_rot = morton.build_pnelut()
+    assert max_rot == 8
+    # per center: counts are a permutation of [1,2,2,2,4,4,4,8], total 27
+    for p1 in range(8):
+        counts = sorted(int(d) for d in depth[p1])
+        assert counts == [1, 2, 2, 2, 4, 4, 4, 8]
+        assert sum(counts) == 27
+    # every offset appears exactly once per center row
+    offs = morton.subm3_offsets()
+    for p1 in range(8):
+        seen = sorted(int(v) for v in lut[p1].reshape(-1) if v >= 0)
+        assert seen == list(range(len(offs)))
+
+
+def test_pnelut_codes_match_direct_recompute():
+    """The PNELUT bank of each neighbor equals phi_1 of the recomputed
+    neighbor coordinate (hardware LUT == arithmetic)."""
+    offs = morton.subm3_offsets()
+    lut, depth, _ = morton.build_pnelut()
+    rng = np.random.default_rng(0)
+    centers = rng.integers(1, 15, size=(32, 3)).astype(np.int32)
+    for c in centers:
+        p1 = int(morton.child_octant(jnp.asarray(c)))
+        for b in range(8):
+            for s in range(int(depth[p1, b])):
+                oi = int(lut[p1, b, s])
+                nb = jnp.asarray(c + offs[oi])
+                assert int(morton.child_octant(nb)) == b
+
+
+def test_child_octant():
+    assert int(morton.child_octant(jnp.array([1, 0, 0]))) == 1
+    assert int(morton.child_octant(jnp.array([0, 1, 1]))) == 6
+    assert int(morton.child_octant(jnp.array([3, 2, 5]))) == 5

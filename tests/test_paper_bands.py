@@ -1,0 +1,77 @@
+"""Paper-fidelity regression tests: the reproduced claim bands of
+EXPERIMENTS.md §Paper-fidelity stay reproduced (fast variants)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import caching, cyclemodel, mapsearch, morton, rulebook
+
+
+def _lidar_tap_counts(n=4096):
+    from benchmarks.common import workload
+    from repro.data import pointcloud
+    rng = np.random.default_rng(0)
+    vb = pointcloud.make_batch(rng, "lidar", batch_size=1, max_voxels=n)
+    offs = jnp.asarray(morton.subm3_offsets())
+    kmap = mapsearch.build_kmap_octree(
+        jnp.asarray(vb.coords), jnp.asarray(vb.batch), jnp.asarray(vb.valid),
+        offs, max_blocks=n)
+    return np.asarray(rulebook.tap_counts(jnp.asarray(kmap)))
+
+
+def test_fig9a_band_search_speedup():
+    """Paper: 8.8-21.2x map-search speedup; >65 % algo + 66.7-68.3 % arch."""
+    for n, probe in ((8192, 2.6), (16384, 6.0)):
+        lat = cyclemodel.search_cycles(n, probe_factor=probe)
+        assert 7.5 <= lat.total_speedup <= 22.5
+        assert 0.60 <= lat.serial_algo_saving <= 0.90
+        assert 0.66 <= lat.parallel_arch_saving <= 0.69
+
+
+def test_fig9b_band_spac_saving():
+    """Paper: 44.4-79.1 % latency saving from SPAC across sparsity regimes."""
+    savings = []
+    for vs in (0.45, 0.6, 0.8):
+        for c_in in (48, 96, 128):
+            dense = cyclemodel.dense_compute_cycles(10000, c_in, c_in)
+            sparse = cyclemodel.compute_cycles(10000, c_in, c_in, vs)
+            savings.append(1 - sparse / dense)
+    assert 0.30 <= min(savings)
+    assert max(savings) <= 0.80
+    assert any(0.44 <= s <= 0.80 for s in savings)
+
+
+def test_fig8a_band_lidar_vertical_skew():
+    """Paper: W_mid (delta_z=0) serves 45-83 % of maps on LiDAR scans."""
+    counts = _lidar_tap_counts()
+    parts = {"center": 0, "mid": 0, "up": 0, "down": 0}
+    for t, c in enumerate(counts):
+        parts[caching.tap_partition(t)] += int(c)
+    mid_ratio = (parts["center"] + parts["mid"]) / max(counts.sum(), 1)
+    assert mid_ratio >= 0.45
+    # symmetric up/down (stride-1 submanifold maps are involutive)
+    assert parts["up"] == parts["down"]
+
+
+def test_fig9c_band_caching_saving():
+    """Paper: up to 87.3 % DRAM energy saved at C_in=48, decaying with C_in."""
+    counts = _lidar_tap_counts()
+    cap = 27 * 32 * 32
+    s48 = caching.saving(counts, 48, 48, cap)
+    s96 = caching.saving(counts, 96, 96, cap)
+    s128 = caching.saving(counts, 128, 128, cap)
+    assert s48 >= 0.70
+    assert s48 >= s96 >= s128 >= 0.10
+    # and zero when everything fits (paper: memory holds all Cin<=32 layers)
+    assert caching.saving(counts, 16, 16, cap) == 0.0
+
+
+def test_fig10_band_overall_speedup():
+    """Paper: 1.1-6.9x vs prior accelerators (dense-serial regime)."""
+    n, n_maps = 8192, 8192 * 14
+    ours = base = 0.0
+    for c_in, c_out in [(16, 32), (32, 64), (64, 64)]:
+        lat = cyclemodel.layer_latency(n, n_maps, c_in, c_out, 0.5)
+        ours += lat.fine_spac
+        base += (cyclemodel.search_cycles(n).hash_serial
+                 + cyclemodel.dense_compute_cycles(n_maps, c_in, c_out))
+    assert 1.1 <= base / ours <= 8.0

@@ -1,0 +1,161 @@
+"""SpConv layers vs dense XLA convolution oracle (eq. 2 / Fig. 2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapsearch, spconv
+from repro.core.spconv import SparseTensor
+from tests.proptest import forall, random_cloud
+
+DIMNUMS = ("NXYZC", "XYZIO", "NXYZC")
+
+
+def _dense_grid(st: SparseTensor, extent: int, n_batch: int) -> np.ndarray:
+    c = st.feats.shape[-1]
+    g = np.zeros((n_batch, extent, extent, extent, c), np.float32)
+    coords, bidx, valid = map(np.asarray, (st.coords, st.batch, st.valid))
+    feats = np.asarray(st.feats)
+    for i in range(st.n_max):
+        if valid[i]:
+            x, y, z = coords[i]
+            g[bidx[i], x, y, z] = feats[i]
+    return g
+
+
+def _taps_to_xyz(w: np.ndarray, k: int) -> np.ndarray:
+    """(K^3, Cin, Cout) tap-major -> (X, Y, Z, Cin, Cout) for lax.conv."""
+    cin, cout = w.shape[1:]
+    return w.reshape(k, k, k, cin, cout).transpose(2, 1, 0, 3, 4)
+
+
+def _rand_st(rng, n, extent, batch, c):
+    coords, bidx, valid = random_cloud(rng, n, extent=extent, batch=batch)
+    feats = rng.standard_normal((n, c)).astype(np.float32)
+    feats[~valid] = 0
+    return SparseTensor(jnp.asarray(coords), jnp.asarray(bidx),
+                        jnp.asarray(valid), jnp.asarray(feats))
+
+
+@forall(15)
+def test_subm3_matches_dense_conv(rng):
+    n, extent, nb, cin, cout = 32, 12, 2, 5, 7
+    st = _rand_st(rng, n, extent, nb, cin)
+    params = spconv.init_conv(jax.random.key(0), 27, cin, cout)
+    out = spconv.subm_conv3(st, params, max_blocks=n, spac=False)
+    g = _dense_grid(st, extent, nb)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(g), jnp.asarray(_taps_to_xyz(np.asarray(params["w"]), 3)),
+        window_strides=(1, 1, 1), padding="SAME", dimension_numbers=DIMNUMS)
+    ref = np.asarray(ref) + np.asarray(params["b"])
+    coords, bidx, valid = map(np.asarray, (st.coords, st.batch, st.valid))
+    got = np.asarray(out.feats)
+    for i in range(n):
+        if valid[i]:
+            x, y, z = coords[i]
+            np.testing.assert_allclose(got[i], ref[bidx[i], x, y, z],
+                                       rtol=1e-4, atol=1e-4)
+        else:
+            np.testing.assert_array_equal(got[i], 0)
+
+
+@forall(15)
+def test_gconv2_matches_dense_strided_conv(rng):
+    n, extent, nb, cin, cout = 28, 12, 2, 4, 6
+    st = _rand_st(rng, n, extent, nb, cin)
+    params = spconv.init_conv(jax.random.key(1), 8, cin, cout)
+    out, _ = spconv.gconv2(st, params)
+    g = _dense_grid(st, extent, nb)
+    w = np.asarray(params["w"]).reshape(2, 2, 2, cin, cout).transpose(2, 1, 0, 3, 4)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(g), jnp.asarray(w), window_strides=(2, 2, 2),
+        padding="VALID", dimension_numbers=DIMNUMS)
+    ref = np.asarray(ref) + np.asarray(params["b"])
+    oc, ob, ov = map(np.asarray, (out.coords, out.batch, out.valid))
+    got = np.asarray(out.feats)
+    for i in range(out.n_max):
+        if ov[i]:
+            x, y, z = oc[i]
+            np.testing.assert_allclose(got[i], ref[ob[i], x, y, z],
+                                       rtol=1e-4, atol=1e-4)
+
+
+@forall(10)
+def test_gconv3_both_dataflows_match_dense(rng):
+    n, extent, nb, cin, cout = 20, 10, 2, 4, 5
+    st = _rand_st(rng, n, extent, nb, cin)
+    params = spconv.init_conv(jax.random.key(2), 27, cin, cout)
+    out_os, maps = spconv.gconv3(st, params, dataflow="output_stationary")
+    out_is, _ = spconv.gconv3(st, params, dataflow="input_stationary")
+    np.testing.assert_allclose(np.asarray(out_os.feats),
+                               np.asarray(out_is.feats), rtol=1e-4, atol=1e-4)
+    g = _dense_grid(st, extent, nb)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(g), jnp.asarray(_taps_to_xyz(np.asarray(params["w"]), 3)),
+        window_strides=(2, 2, 2), padding=((1, 1), (1, 1), (1, 1)),
+        dimension_numbers=DIMNUMS)
+    ref = np.asarray(ref) + np.asarray(params["b"])
+    oc, ob, ov = map(np.asarray, (out_os.coords, out_os.batch, out_os.valid))
+    got = np.asarray(out_os.feats)
+    for i in range(out_os.n_max):
+        if ov[i] and np.all(oc[i] * 2 < extent):
+            x, y, z = oc[i]
+            np.testing.assert_allclose(got[i], ref[ob[i], x, y, z],
+                                       rtol=1e-4, atol=1e-4)
+
+
+@forall(10)
+def test_tconv2_recovers_coordinates_and_values(rng):
+    n, extent, nb, cin, cmid, cout = 24, 12, 2, 4, 6, 3
+    st = _rand_st(rng, n, extent, nb, cin)
+    pg = spconv.init_conv(jax.random.key(3), 8, cin, cmid)
+    pt = spconv.init_conv(jax.random.key(4), 8, cmid, cout)
+    down, maps = spconv.gconv2(st, pg)
+    up = spconv.tconv2(down, pt, maps, st)
+    # coordinates recovered exactly (paper §IV-D2)
+    np.testing.assert_array_equal(np.asarray(up.coords), np.asarray(st.coords))
+    # each child gets parent features through its octant tap
+    oc = np.asarray(st.coords)
+    ov = np.asarray(st.valid)
+    dcoords, dvalid = np.asarray(down.coords), np.asarray(down.valid)
+    dfeats = np.asarray(down.feats)
+    w, b = np.asarray(pt["w"]), np.asarray(pt["b"])
+    got = np.asarray(up.feats)
+    dindex = {(int(down.batch[j]),) + tuple(dcoords[j].tolist()): j
+              for j in range(down.n_max) if dvalid[j]}
+    for i in range(n):
+        if not ov[i]:
+            continue
+        parent = (int(st.batch[i]),) + tuple((oc[i] // 2).tolist())
+        j = dindex[parent]
+        tap = (oc[i][0] & 1) | ((oc[i][1] & 1) << 1) | ((oc[i][2] & 1) << 2)
+        ref = dfeats[j] @ w[tap] + b
+        np.testing.assert_allclose(got[i], ref, rtol=1e-4, atol=1e-4)
+
+
+def test_spac_row_elision_is_lossless():
+    """Dropping maps to all-zero rows must not change the output (§V-B)."""
+    rng = np.random.default_rng(0)
+    n, cin, cout = 40, 8, 8
+    st = _rand_st(rng, n, 16, 1, cin)
+    # force ~50% zero rows (post-ReLU pattern)
+    kill = rng.random(n) < 0.5
+    feats = np.asarray(st.feats).copy()
+    feats[kill] = 0
+    st = st.replace_feats(jnp.asarray(feats))
+    params = spconv.init_conv(jax.random.key(5), 27, cin, cout)
+    with_spac = spconv.subm_conv3(st, params, max_blocks=n, spac=True)
+    without = spconv.subm_conv3(st, params, max_blocks=n, spac=False)
+    np.testing.assert_allclose(np.asarray(with_spac.feats),
+                               np.asarray(without.feats), rtol=1e-5, atol=1e-5)
+
+
+def test_batch_norm_masked():
+    rng = np.random.default_rng(1)
+    st = _rand_st(rng, 32, 16, 2, 6)
+    bn = spconv.init_batchnorm(6)
+    out, new_bn = spconv.batch_norm(st, bn, training=True)
+    f = np.asarray(out.feats)
+    v = np.asarray(st.valid)
+    np.testing.assert_allclose(f[v].mean(0), 0, atol=1e-4)
+    np.testing.assert_allclose(f[v].std(0), 1, atol=2e-2)
+    assert not np.allclose(np.asarray(new_bn["mean"]), 0)
