@@ -1,0 +1,133 @@
+"""Rulebook-execution backends head-to-head (DESIGN.md §6).
+
+Three executions of the same Subm3 rulebook over the paper workloads:
+
+  * ``xla``          — rulebook.apply_kmap_gather, the pure-XLA tap scan.
+  * ``materialized`` — ops.apply_kmap: tap-sorted tiles + spconv_gemm, with
+    the gathered (M_pad, Cin) lhs materialized in HBM.
+  * ``fused``        — ops.apply_kmap_fused: spconv_gemm_fused pulls rows
+    straight from the feature array; no gathered intermediate exists.
+
+Besides wall time, the jaxpr of each path is audited for gather ops that
+allocate the (M_pad, Cin) intermediate — the fused path must show zero
+bytes. Results go to BENCH_rulebook.json and the usual CSV rows.
+
+On hosts without a TPU the kernel paths run their pure-jnp oracles (or the
+Pallas interpreter with REPRO_KERNEL_IMPL=interpret): the byte accounting
+is exact either way; the timings then compare XLA scan vs oracle math, not
+ASIC-grade kernels.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCHMARKS, csv_row, time_fn, workload
+from repro.core import morton, rulebook, sparsity
+from repro.core import mapsearch
+from repro.kernels.spconv_gemm import ops as sg_ops
+
+OUT_JSON = "BENCH_rulebook.json"
+
+
+def _walk_jaxprs(jaxpr):
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            if hasattr(v, "eqns"):
+                yield from _walk_jaxprs(v)
+            elif hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                yield from _walk_jaxprs(v.jaxpr)
+
+
+def gathered_intermediate_bytes(fn, *args, rows: int, cols: int) -> int:
+    """Total bytes of `gather` outputs shaped (rows, cols) in fn's jaxpr.
+
+    ``rows``/``cols`` are the (M_pad, Cin) signature of the materialized
+    rulebook gather; anything inside a pallas_call is invisible here, which
+    is exactly the point — the fused kernel's row DMAs never allocate the
+    array-shaped intermediate.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    total = 0
+    for jpr in _walk_jaxprs(jaxpr):
+        for eqn in jpr.eqns:
+            if eqn.primitive.name != "gather":
+                continue
+            for ov in eqn.outvars:
+                shape = getattr(ov.aval, "shape", ())
+                if tuple(shape) == (rows, cols):
+                    total += rows * cols * ov.aval.dtype.itemsize
+    return total
+
+
+def _workload_case(name: str, c_in: int = 64, c_out: int = 64):
+    vb = workload(name)
+    coords = jnp.asarray(vb.coords)
+    batch = jnp.asarray(vb.batch)
+    valid = jnp.asarray(vb.valid)
+    offs = jnp.asarray(morton.subm3_offsets())
+    kmap = mapsearch.build_kmap_octree(coords, batch, valid, offs,
+                                       max_blocks=coords.shape[0])
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((coords.shape[0], c_in)).astype(np.float32)
+    feats[rng.random(coords.shape[0]) < 0.45] = 0       # post-ReLU pattern
+    feats[~np.asarray(valid)] = 0
+    w = rng.standard_normal((27, c_in, c_out)).astype(np.float32) * 0.05
+    return jnp.asarray(feats), jnp.asarray(w), kmap
+
+
+def run(full: bool = True) -> list[str]:
+    impl = sg_ops.kernel_impl()
+    # byte accounting audits the *kernel* path (compiled on TPU, interpreted
+    # elsewhere); the oracle 'ref' impl materializes by construction.
+    kimpl = sg_ops.hardware_impl()
+    bm = 128
+    names = list(BENCHMARKS) if full else ["Det(k)"]
+    rows, records = [], []
+    for name in names:
+        feats, w, kmap = _workload_case(name)
+        n, c_in = feats.shape
+        m_pad = sg_ops.build_tap_tiles(kmap, bm=bm).gather_idx.shape[0]
+
+        paths = {
+            "xla": jax.jit(lambda f, ww, km: rulebook.apply_kmap_gather(
+                f, ww, sparsity.compact_kmap(km, sparsity.row_nonzero(f)))),
+            "materialized": jax.jit(lambda f, ww, km: sg_ops.apply_kmap(
+                f, ww, km, bm=bm, impl=impl)),
+            "fused": jax.jit(lambda f, ww, km: sg_ops.apply_kmap_fused(
+                f, ww, km, bm=bm, impl=impl)),
+        }
+        audits = {
+            "materialized": jax.jit(lambda f, ww, km: sg_ops.apply_kmap(
+                f, ww, km, bm=bm, impl=kimpl)),
+            "fused": jax.jit(lambda f, ww, km: sg_ops.apply_kmap_fused(
+                f, ww, km, bm=bm, impl=kimpl)),
+        }
+        rec = {"workload": name, "impl": impl, "kernel_impl": kimpl, "n": n,
+               "c_in": c_in, "m_pad": m_pad, "paths": {}}
+        for pname, fn in paths.items():
+            t = time_fn(fn, feats, w, kmap)
+            audit = audits.get(pname, fn)
+            g_bytes = gathered_intermediate_bytes(audit, feats, w, kmap,
+                                                  rows=m_pad, cols=c_in)
+            rec["paths"][pname] = {"us": t * 1e6,
+                                   "gathered_intermediate_bytes": g_bytes}
+            rows.append(csv_row(
+                f"rulebook_exec/{name}/{pname}", t * 1e6,
+                f"impl={impl};m_pad={m_pad};gathered_bytes={g_bytes}"))
+        assert rec["paths"]["fused"]["gathered_intermediate_bytes"] == 0, (
+            "fused path must not materialize the (M_pad, Cin) gather")
+        assert rec["paths"]["materialized"]["gathered_intermediate_bytes"] > 0
+        records.append(rec)
+    with open(OUT_JSON, "w") as f:
+        json.dump(records, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(full=False):
+        print(row)

@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
     from benchmarks import (caching_energy, overall_comparison,
-                            search_speedup, sparsity_saving,
+                            rulebook_exec, search_speedup, sparsity_saving,
                             weight_distribution)
 
     suites = [
@@ -23,6 +23,7 @@ def main() -> None:
         ("fig9b_sparsity", sparsity_saving.run),
         ("fig9c_caching", caching_energy.run),
         ("fig10_overall", overall_comparison.run),
+        ("rulebook_exec", rulebook_exec.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

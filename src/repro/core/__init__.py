@@ -1,9 +1,10 @@
-"""SpOctA core: octree map search, sparse conv, sparsity, caching, cycles."""
+"""SpOctA core: octree map search, sparse conv, plans, sparsity, cycles."""
 from repro.core import (  # noqa: F401
     caching,
     cyclemodel,
     mapsearch,
     morton,
+    plan,
     rulebook,
     sparsity,
     spconv,

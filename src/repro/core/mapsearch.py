@@ -209,6 +209,13 @@ def build_kmap_octree(coords: jnp.ndarray, batch: jnp.ndarray,
                              grid_bits=grid_bits, batch_bits=batch_bits)
 
 
+def sorted_key_fits(grid_bits: int, batch_bits: int) -> bool:
+    """Whether the sorted-variant composite key (block << 12 | phi) fits
+    int32 at these grid/batch widths. The single source of truth for the
+    bit budget of :func:`build_kmap_sorted`."""
+    return 3 * grid_bits + batch_bits + morton.LOCAL_CODE_BITS <= 31
+
+
 @partial(jax.jit, static_argnames=("grid_bits", "batch_bits"))
 def build_kmap_sorted(coords: jnp.ndarray, batch: jnp.ndarray,
                       valid: jnp.ndarray, offsets: jnp.ndarray, *,
@@ -219,7 +226,7 @@ def build_kmap_sorted(coords: jnp.ndarray, batch: jnp.ndarray,
     fit int32 (3*grid_bits + batch_bits + 12 <= 31), i.e. grids up to
     512 voxels/axis at the defaults; use build_kmap_octree beyond that.
     """
-    assert 3 * grid_bits + batch_bits + morton.LOCAL_CODE_BITS <= 31, (
+    assert sorted_key_fits(grid_bits, batch_bits), (
         "sorted-key variant needs the composite key to fit int32; "
         "use build_kmap_octree for large grids")
 

@@ -1,0 +1,248 @@
+"""Execution plans: memoized map search + tiling for rulebook execution.
+
+The paper reuses the Map Table across layers that share a coordinate set
+(§IV-D2: Tconv2 reloads the exported Gconv2 maps instead of re-searching).
+This module generalizes that to *every* coordinate-preserving layer: a
+:class:`ConvPlan` bundles everything about a convolution that depends only
+on geometry — the kernel map plus the tap-sorted tile streams — and a
+:class:`PlanCache` memoizes plans per coordinate set, so a stage of B
+stacked Subm3 blocks pays for OCTENT once instead of B times, and a
+MinkUNet decoder stage at resolution r reuses the encoder-stage plan for
+the same r (coordinates recovered exactly by Tconv2).
+
+What is cacheable and what is not (DESIGN.md §4):
+
+  * kmap / tiles / tap schedule   — geometry-only, cached.
+  * SPAC liveness (tile_nz)       — depends on the post-ReLU zero pattern of
+    the *current* features, refreshed per layer by ops.tile_liveness.
+
+Cache keys are object identities of the coordinate arrays plus the static
+search parameters. Identity keying is exactly right under jit: stacked
+blocks see the *same* tracer objects for coords/batch/valid (feats-only
+updates go through SparseTensor._replace), while any recomputed coordinate
+set is a new object and correctly misses. Entries pin their key arrays so
+ids cannot be recycled while the entry lives; capacity-bounded FIFO.
+
+``MAPSEARCH_CALLS`` counts actual map-search invocations (trace-time), so
+tests can assert a 4-block stage searches once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import mapsearch, morton, rulebook, sparsity
+from repro.core.mapsearch import StridedMaps
+from repro.kernels.spconv_gemm import ops as sg_ops
+
+MAPSEARCH_CALLS = [0]
+
+
+def mapsearch_call_count() -> int:
+    return MAPSEARCH_CALLS[0]
+
+
+def reset_mapsearch_counter() -> None:
+    MAPSEARCH_CALLS[0] = 0
+
+
+class ConvPlan(NamedTuple):
+    """Geometry-only execution plan for one SpConv layer.
+
+    ``kmap`` is the gather-form rulebook; ``tiles`` its tap-scheduled,
+    bm-padded tile streams (no row elision folded in — see module doc).
+    ``out_*`` are None for coordinate-preserving layers (outputs == inputs);
+    ``maps`` carries the scatter-form triples for strided layers so Tconv2
+    and the input-stationary dataflow can reuse them.
+    """
+
+    kind: str                      # subm3 | gconv2 | gconv3 | tconv2
+    kmap: jnp.ndarray              # (N_out, K)
+    tiles: sg_ops.TapTiles | None  # None when built for a dataflow that
+                                   # never tiles (input-stationary gconv3)
+    n_out: int                     # static output row budget
+    n_taps: int
+    out_coords: jnp.ndarray | None
+    out_batch: jnp.ndarray | None
+    out_valid: jnp.ndarray | None
+    maps: StridedMaps | None
+
+
+class PlanCache:
+    """Identity-keyed memo of ConvPlans with hit/miss accounting.
+
+    One instance per forward pass (models create their own), or longer-lived
+    for eager/incremental pipelines. Entries hold strong references to their
+    key arrays, so an id is never reused while its entry is alive.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self._entries: dict = {}       # key -> (anchored arrays, plan)
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, arrays, statics, build):
+        key = tuple(id(a) for a in arrays) + tuple(statics)
+        hit = self._entries.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        plan = build()
+        while len(self._entries) >= self.capacity:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (tuple(arrays), plan)
+        return plan
+
+
+def _maybe_cached(cache: PlanCache | None, arrays, statics, build):
+    if cache is None:
+        return build()
+    return cache.lookup(arrays, statics, build)
+
+
+# ---------------------------------------------------------------------------
+# Plan builders — one per layer type
+# ---------------------------------------------------------------------------
+
+def subm3_plan(coords, batch, valid, *, max_blocks: int,
+               method: str = "octree", grid_bits: int = 7,
+               batch_bits: int = 4, bm: int = 128,
+               cache: PlanCache | None = None) -> ConvPlan:
+    """Submanifold 3x3x3 plan: outputs == inputs, 27 taps."""
+    statics = ("subm3", max_blocks, method, grid_bits, batch_bits, bm)
+
+    def build():
+        MAPSEARCH_CALLS[0] += 1
+        offs = jnp.asarray(morton.subm3_offsets())
+        if method == "octree":
+            kmap = mapsearch.build_kmap_octree(
+                coords, batch, valid, offs, max_blocks=max_blocks,
+                grid_bits=grid_bits, batch_bits=batch_bits)
+        elif method == "sorted":
+            if not mapsearch.sorted_key_fits(grid_bits, batch_bits):
+                raise ValueError(
+                    f"map search method 'sorted' needs the composite key "
+                    f"(3*grid_bits + batch_bits + {morton.LOCAL_CODE_BITS}) "
+                    f"to fit int32, got grid_bits={grid_bits}, "
+                    f"batch_bits={batch_bits} -> "
+                    f"{3 * grid_bits + batch_bits + morton.LOCAL_CODE_BITS} "
+                    f"bits. Pass grid_bits <= "
+                    f"{(31 - batch_bits - morton.LOCAL_CODE_BITS) // 3} or "
+                    f"use method='octree' for large grids.")
+            kmap = mapsearch.build_kmap_sorted(
+                coords, batch, valid, offs,
+                grid_bits=grid_bits, batch_bits=batch_bits)
+        else:
+            raise ValueError(f"unknown map search method {method!r}")
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        return ConvPlan("subm3", kmap, tiles, coords.shape[0], 27,
+                        None, None, None, None)
+
+    return _maybe_cached(cache, (coords, batch, valid), statics, build)
+
+
+def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
+                batch_bits: int = 4, bm: int = 128,
+                cache: PlanCache | None = None) -> ConvPlan:
+    """Gconv2 (k=2, s=2) plan: octant taps to octree parents (§IV-D1)."""
+    statics = ("gconv2", grid_bits, batch_bits, bm)
+
+    def build():
+        MAPSEARCH_CALLS[0] += 1
+        maps = mapsearch.build_maps_gconv2(coords, batch, valid,
+                                           grid_bits=grid_bits,
+                                           batch_bits=batch_bits)
+        n = coords.shape[0]
+        kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        return ConvPlan("gconv2", kmap, tiles, n, 8,
+                        maps.out_coords, maps.out_batch, maps.out_valid, maps)
+
+    return _maybe_cached(cache, (coords, batch, valid), statics, build)
+
+
+def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
+                batch_bits: int = 4, out_budget: int | None = None,
+                bm: int = 128, with_tiles: bool = True,
+                cache: PlanCache | None = None) -> ConvPlan:
+    """Gconv3 (k=3, s=2) plan (§IV-D3). Carries the scatter maps so the
+    input-stationary dataflow can execute from the same plan;
+    ``with_tiles=False`` skips the tile build for that dataflow (the tiles
+    would be dead weight — it consumes only ``plan.maps``). ``with_tiles``
+    is part of the cache key, so a rare mixed-dataflow reuse of one
+    coordinate set costs a second search rather than returning a plan
+    without the tiles the output-stationary path needs."""
+    budget = out_budget if out_budget is not None else coords.shape[0]
+    statics = ("gconv3", grid_bits, batch_bits, budget, bm, with_tiles)
+
+    def build():
+        MAPSEARCH_CALLS[0] += 1
+        maps = mapsearch.build_maps_gconv3(coords, batch, valid,
+                                           grid_bits=grid_bits,
+                                           batch_bits=batch_bits,
+                                           out_budget=budget)
+        kmap = mapsearch.strided_to_kmap(maps, n_out=budget, n_taps=27)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm) if with_tiles \
+            else None
+        return ConvPlan("gconv3", kmap, tiles, budget, 27,
+                        maps.out_coords, maps.out_batch, maps.out_valid, maps)
+
+    return _maybe_cached(cache, (coords, batch, valid), statics, build)
+
+
+def tconv2_plan(gconv2_maps: StridedMaps, target_coords, target_batch,
+                target_valid, *, bm: int = 128,
+                cache: PlanCache | None = None) -> ConvPlan:
+    """Tconv2 plan: transposes the paired Gconv2 maps (§IV-D2 — map *reuse*,
+    so this never counts as a map search)."""
+    statics = ("tconv2", bm)
+
+    def build():
+        maps = mapsearch.transpose_maps(gconv2_maps, target_coords,
+                                        target_batch, target_valid)
+        n = target_valid.shape[0]
+        kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        return ConvPlan("tconv2", kmap, tiles, n, 8,
+                        target_coords, target_batch, target_valid, maps)
+
+    keys = (gconv2_maps.in_idx, gconv2_maps.out_idx, gconv2_maps.tap,
+            gconv2_maps.mvalid, target_coords, target_batch, target_valid)
+    return _maybe_cached(cache, keys, statics, build)
+
+
+# ---------------------------------------------------------------------------
+# Plan execution
+# ---------------------------------------------------------------------------
+
+def execute(plan: ConvPlan, feats: jnp.ndarray, weights: jnp.ndarray,
+            bias: jnp.ndarray | None = None, *, spac: bool = True,
+            impl: str | None = None, bn: int = 128) -> jnp.ndarray:
+    """Run rulebook execution for ``plan`` over the current features.
+
+    impl: 'pallas' | 'interpret' | 'ref' route through the gather-fused
+    tile machinery (kernels/spconv_gemm); 'xla' is the pure-XLA tap-scan
+    oracle (rulebook.apply_kmap_gather) kept for parity testing. Default
+    resolves via ops.kernel_impl().
+    """
+    impl = impl or sg_ops.kernel_impl()
+    if impl == "xla":
+        kmap = plan.kmap
+        if spac:
+            kmap = sparsity.compact_kmap(kmap, sparsity.row_nonzero(feats))
+        return rulebook.apply_kmap_gather(feats, weights, kmap, bias)
+    if plan.tiles is None:
+        raise ValueError(
+            f"{plan.kind} plan was built with with_tiles=False (input-"
+            f"stationary dataflow); rebuild it with tiles to execute the "
+            f"fused path, or pass impl='xla'")
+    row_nz = sparsity.row_nonzero(feats) if spac else None
+    return sg_ops.apply_tiles(feats, weights, plan.tiles, bias,
+                              n_out=plan.n_out, row_nz=row_nz, bn=bn,
+                              impl=impl)

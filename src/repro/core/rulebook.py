@@ -6,13 +6,15 @@ Arranger scatters. Here that is three executable paths:
 
   * :func:`apply_kmap_gather`   — output-stationary (Subm3/Gconv2 dataflow,
     §V-A): per-tap gather + matmul, accumulate into the output row. Pure
-    XLA; the perf path delegates the matmuls to kernels/spconv_gemm.
+    XLA. This is the *oracle*: the default perf path is the gather-fused
+    Pallas backend behind core/plan.py (impl='xla' routes back here).
   * :func:`apply_maps_scatter`  — input-stationary (Gconv3/Tconv2 dataflow):
     per-tap masked matmul + scatter-add.
   * tap scheduling by descending map count (:func:`tap_schedule`) — the
     framework-level face of the non-uniform caching strategy (§V-C):
     weight-stationary processing of the hottest taps first means W_center /
-    W_mid are fetched once and stay resident.
+    W_mid are fetched once and stay resident. Wired into the tile layout by
+    kernels/spconv_gemm/ops.build_tap_tiles (DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -3,18 +3,23 @@
 Functional layers over a padded, mask-carrying :class:`SparseTensor`. The
 layer set and naming follows the paper exactly; each layer is map search
 (OCTENT) + rulebook execution (SPAC) and is fully jittable with static
-shapes. ``method`` selects the map-search implementation so the paper's
-baselines stay runnable end-to-end.
+shapes.
+
+Execution is plan-based (core/plan.py): each layer builds — or fetches from
+a :class:`~repro.core.plan.PlanCache` — a geometry-only ConvPlan (kernel
+map + tap-scheduled tiles) and executes it through the gather-fused Pallas
+backend by default. ``method`` selects the map-search implementation so the
+paper's baselines stay runnable end-to-end, and ``impl='xla'`` routes to
+the pure-XLA tap-scan oracle (rulebook.apply_kmap_gather) for parity runs.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mapsearch, morton, rulebook, sparsity
+from repro.core import mapsearch, plan as planlib, rulebook
 
 
 class SparseTensor(NamedTuple):
@@ -60,76 +65,88 @@ def init_batchnorm(c: int, dtype=jnp.float32) -> dict:
 
 def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
                method: str = "octree", grid_bits: int = 7,
-               batch_bits: int = 4, spac: bool = True) -> SparseTensor:
-    """Submanifold 3x3x3 SpConv (Subm3): coordinates unchanged (Fig. 2)."""
-    offs = jnp.asarray(morton.subm3_offsets())
-    if method == "octree":
-        kmap = mapsearch.build_kmap_octree(
-            st.coords, st.batch, st.valid, offs, max_blocks=max_blocks,
-            grid_bits=grid_bits, batch_bits=batch_bits)
-    elif method == "sorted":
-        kmap = mapsearch.build_kmap_sorted(
-            st.coords, st.batch, st.valid, offs,
-            grid_bits=min(grid_bits, 5), batch_bits=batch_bits)
-    else:
-        raise ValueError(f"unknown map search method {method!r}")
-    if spac:
-        kmap = sparsity.compact_kmap(kmap, sparsity.row_nonzero(st.feats))
-    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+               batch_bits: int = 4, spac: bool = True,
+               plan: planlib.ConvPlan | None = None,
+               cache: planlib.PlanCache | None = None,
+               impl: str | None = None, bm: int = 128) -> SparseTensor:
+    """Submanifold 3x3x3 SpConv (Subm3): coordinates unchanged (Fig. 2).
+
+    Pass ``cache`` to share map search across stacked blocks on the same
+    coordinate set, or ``plan`` to reuse an explicit prebuilt plan.
+    """
+    if plan is None:
+        plan = planlib.subm3_plan(st.coords, st.batch, st.valid,
+                                  max_blocks=max_blocks, method=method,
+                                  grid_bits=grid_bits, batch_bits=batch_bits,
+                                  bm=bm, cache=cache)
+    out = planlib.execute(plan, st.feats, params["w"], params["b"],
+                          spac=spac, impl=impl)
     out = jnp.where(st.valid[:, None], out, 0)
     return st.replace_feats(out)
 
 
 def gconv2(st: SparseTensor, params: dict, *, grid_bits: int = 7,
-           batch_bits: int = 4) -> tuple[SparseTensor, mapsearch.StridedMaps]:
+           batch_bits: int = 4, plan: planlib.ConvPlan | None = None,
+           cache: planlib.PlanCache | None = None, impl: str | None = None,
+           bm: int = 128) -> tuple[SparseTensor, mapsearch.StridedMaps]:
     """Generalized 2x2x2 stride-2 SpConv (downsampling). Output-stationary:
     each octree parent gathers its children through octant taps (§IV-D1).
 
     Returns the new tensor *and* the maps so Tconv2 can reuse them (§IV-D2).
     """
-    maps = mapsearch.build_maps_gconv2(st.coords, st.batch, st.valid,
-                                       grid_bits=grid_bits, batch_bits=batch_bits)
-    n = st.n_max
-    kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
-    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
-    out = jnp.where(maps.out_valid[:, None], out, 0)
-    new = SparseTensor(coords=maps.out_coords, batch=maps.out_batch,
-                       valid=maps.out_valid, feats=out)
-    return new, maps
+    if plan is None:
+        plan = planlib.gconv2_plan(st.coords, st.batch, st.valid,
+                                   grid_bits=grid_bits,
+                                   batch_bits=batch_bits, bm=bm, cache=cache)
+    out = planlib.execute(plan, st.feats, params["w"], params["b"],
+                          spac=False, impl=impl)
+    out = jnp.where(plan.out_valid[:, None], out, 0)
+    new = SparseTensor(coords=plan.out_coords, batch=plan.out_batch,
+                       valid=plan.out_valid, feats=out)
+    return new, plan.maps
 
 
 def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
-           batch_bits: int = 4,
-           dataflow: str = "output_stationary") -> tuple[SparseTensor, mapsearch.StridedMaps]:
+           batch_bits: int = 4, dataflow: str = "output_stationary",
+           plan: planlib.ConvPlan | None = None,
+           cache: planlib.PlanCache | None = None, impl: str | None = None,
+           bm: int = 128) -> tuple[SparseTensor, mapsearch.StridedMaps]:
     """Generalized 3x3x3 stride-2 SpConv. The paper runs this input-
     stationary (§IV-D3); both dataflows are provided and agree bit-for-bit
-    (tests) — the output-stationary one is the TPU perf path (pure gathers).
+    (tests) — the output-stationary one is the TPU perf path (pure gathers,
+    gather-fused kernel).
     """
-    maps = mapsearch.build_maps_gconv3(st.coords, st.batch, st.valid,
-                                       grid_bits=grid_bits, batch_bits=batch_bits,
-                                       out_budget=st.n_max)
-    m = maps.out_coords.shape[0]
+    if plan is None:
+        plan = planlib.gconv3_plan(st.coords, st.batch, st.valid,
+                                   grid_bits=grid_bits,
+                                   batch_bits=batch_bits,
+                                   out_budget=st.n_max, bm=bm,
+                                   with_tiles=dataflow != "input_stationary",
+                                   cache=cache)
+    m = plan.n_out
     if dataflow == "input_stationary":
-        out = rulebook.apply_maps_scatter(st.feats, params["w"], maps,
+        out = rulebook.apply_maps_scatter(st.feats, params["w"], plan.maps,
                                           params["b"], n_out=m, n_taps=27)
     else:
-        kmap = mapsearch.strided_to_kmap(maps, n_out=m, n_taps=27)
-        out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
-        out = jnp.where(maps.out_valid[:, None], out, 0)
-    new = SparseTensor(coords=maps.out_coords, batch=maps.out_batch,
-                       valid=maps.out_valid, feats=out)
-    return new, maps
+        out = planlib.execute(plan, st.feats, params["w"], params["b"],
+                              spac=False, impl=impl)
+        out = jnp.where(plan.out_valid[:, None], out, 0)
+    new = SparseTensor(coords=plan.out_coords, batch=plan.out_batch,
+                       valid=plan.out_valid, feats=out)
+    return new, plan.maps
 
 
 def tconv2(st: SparseTensor, params: dict, gconv2_maps: mapsearch.StridedMaps,
-           target: SparseTensor) -> SparseTensor:
+           target: SparseTensor, *, plan: planlib.ConvPlan | None = None,
+           cache: planlib.PlanCache | None = None, impl: str | None = None,
+           bm: int = 128) -> SparseTensor:
     """Transposed 2x2x2 stride-2 SpConv: recovers the coordinate set from
     before the paired Gconv2 by transposing its maps (§IV-D2)."""
-    maps = mapsearch.transpose_maps(gconv2_maps, target.coords, target.batch,
-                                    target.valid)
-    n = target.n_max
-    kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
-    out = rulebook.apply_kmap_gather(st.feats, params["w"], kmap, params["b"])
+    if plan is None:
+        plan = planlib.tconv2_plan(gconv2_maps, target.coords, target.batch,
+                                   target.valid, bm=bm, cache=cache)
+    out = planlib.execute(plan, st.feats, params["w"], params["b"],
+                          spac=False, impl=impl)
     out = jnp.where(target.valid[:, None], out, 0)
     return SparseTensor(coords=target.coords, batch=target.batch,
                         valid=target.valid, feats=out)

@@ -1,0 +1,18 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+The kernels target the current Pallas API (``pltpu.CompilerParams``), but the
+pinned toolchain may ship the older spelling (``pltpu.TPUCompilerParams``,
+jax <= 0.4.x). Resolving the class here keeps every kernel file on one code
+path and makes the tier-1 suite runnable on whatever jax the image bakes in.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics):
+    """Build TPU compiler params across jax versions."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)

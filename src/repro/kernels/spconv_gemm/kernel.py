@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: tap-grouped (ragged) gather-GEMM for SpConv.
+"""Pallas TPU kernels: tap-grouped (ragged) gather-GEMM for SpConv.
 
 The SPAC core + non-uniform caching (paper §V) mapped onto the MXU:
 
@@ -13,6 +13,17 @@ The SPAC core + non-uniform caching (paper §V) mapped onto the MXU:
     all zero (post-ReLU): the whole MXU tile is skipped via @pl.when — the
     SPAC elision at tile grain.
 
+Two entry points (DESIGN.md §6):
+
+  * :func:`spconv_gemm`       — takes a pre-gathered, bm-padded lhs. The
+    original materialized form: the caller pays an (M_pad, C_in) HBM
+    intermediate for the gather.
+  * :func:`spconv_gemm_fused` — takes the *full* feature array plus the
+    scalar-prefetched per-slot gather indices; rows are pulled straight out
+    of HBM by per-row DMA into a VMEM scratch, so the (M_pad, C_in) gathered
+    copy never exists and skipped tiles are never fetched at all. This is
+    the default execution backend (core/plan.py).
+
 Grid: (m_tiles, n_tiles); C_in is kept whole per tile (SpConv channel widths
 are <= 512 in the paper's benchmarks; ops.py asserts the VMEM budget).
 """
@@ -24,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
 
 
 def _kernel(tile_tap_ref, tile_nz_ref, lhs_ref, w_ref, out_ref):
@@ -70,8 +83,85 @@ def spconv_gemm(lhs: jnp.ndarray, weights: jnp.ndarray,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, c_out), lhs.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="spconv_gemm",
     )(tile_tap, tile_nz, lhs, weights)
+
+
+def _fused_kernel(tile_tap_ref, tile_nz_ref, gather_idx_ref,
+                  feats_ref, w_ref, out_ref, rows_ref, sem, *, bm: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    # Gather once per m-tile (at the first n-step) straight from the full
+    # feature array in HBM, driven by the scalar-prefetched slot indices.
+    # Skipped tiles are never fetched — SPAC elision saves the DMA too.
+    @pl.when((tile_nz_ref[i] != 0) & (j == 0))
+    def _gather():
+        def body(r, _):
+            src = gather_idx_ref[i * bm + r]
+            cp = pltpu.make_async_copy(
+                feats_ref.at[pl.ds(src, 1)], rows_ref.at[pl.ds(r, 1)], sem)
+            cp.start()
+            cp.wait()
+            return 0
+        jax.lax.fori_loop(0, bm, body, 0)
+
+    @pl.when(tile_nz_ref[i] != 0)
+    def _compute():
+        out_ref[...] = jax.lax.dot_general(
+            rows_ref[...], w_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+
+    @pl.when(tile_nz_ref[i] == 0)
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
+                      gather_idx: jnp.ndarray, tile_tap: jnp.ndarray,
+                      tile_nz: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Gather-fused rulebook GEMM: feats (N, Cin) stays whole in HBM;
+    gather_idx (M_pad,) maps each slot to its source row (0 for padding —
+    pad slots scatter to the drop row downstream, so their garbage partial
+    products are inert); tile_tap/tile_nz (M_pad/bm,) as in
+    :func:`spconv_gemm`. Returns (M_pad, Cout) partial products."""
+    _, c_in = feats.shape
+    k, _, c_out = weights.shape
+    m = gather_idx.shape[0]
+    assert m % bm == 0 and c_out % bn == 0, (m, bm, c_out, bn)
+    n_m, n_n = m // bm, c_out // bn
+    assert tile_tap.shape[0] == n_m and tile_nz.shape[0] == n_m
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_m, n_n),
+        in_specs=[
+            # full feature array, un-blocked: rows are DMA'd on demand
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, c_in, bn),
+                         lambda i, j, tap, nz, gi: (tap[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, tap, nz, gi: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, c_in), feats.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, c_out), feats.dtype),
+        # the gathered scratch is reused across n-steps of the same m-tile,
+        # so the inner dimension must execute in order
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="spconv_gemm_fused",
+    )(tile_tap, tile_nz, gather_idx, feats, weights)

@@ -1,8 +1,23 @@
-"""jit'd wrapper: kmap -> tap-sorted ragged tiles -> kernel -> scatter-add.
+"""jit'd wrappers: kmap -> tap-sorted ragged tiles -> kernel -> scatter-add.
 
 ``build_tap_tiles`` is the Top Control Unit of Fig. 4 in data-parallel form:
 it turns the (N_out, K) kernel map into per-tap contiguous, bm-padded
 gather/scatter streams plus the scalar-prefetch metadata the kernel needs.
+Tap segments are laid out hottest-first (rulebook.tap_schedule, §V-C), so
+same-tap tile runs are maximal and the kernel's weight BlockSpec keeps the
+hot block (W_center / W_mid) VMEM-resident for the longest possible stretch.
+
+Execution comes in two forms (DESIGN.md §5, §6):
+
+  * :func:`apply_kmap`       — materialized gather: an (M_pad, Cin) gathered
+    copy of the features is built in HBM and fed to ``spconv_gemm``.
+  * :func:`apply_kmap_fused` / :func:`apply_tiles` — gather-fused: the
+    kernel pulls rows straight from the full feature array via
+    scalar-prefetched indices (``spconv_gemm_fused``); no gathered
+    intermediate is ever allocated. ``apply_tiles`` additionally accepts
+    pre-built geometry tiles so a cached ConvPlan (core/plan.py) can skip
+    the whole sort/pad stage and only refresh tile liveness per layer.
+
 The identical machinery drives ragged MoE dispatch (models/moe.py) — the
 paper's rulebook *is* an expert-dispatch table (DESIGN.md §5).
 """
@@ -12,20 +27,34 @@ import functools
 import os
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import rulebook as _rulebook
 from repro.core import sparsity as _sparsity
-from repro.kernels.spconv_gemm.kernel import spconv_gemm
-from repro.kernels.spconv_gemm.ref import spconv_gemm_ref
+from repro.kernels.spconv_gemm.kernel import spconv_gemm, spconv_gemm_fused
+from repro.kernels.spconv_gemm.ref import (spconv_gemm_fused_ref,
+                                           spconv_gemm_ref)
 
 
 def kernel_impl() -> str:
-    """pallas | interpret | ref — resolved once per call site."""
+    """pallas | interpret | ref — resolved once per call site.
+
+    Resolve this *outside* jit boundaries (the public wrappers below do):
+    the env var must be re-read per call, not frozen into a trace cache key.
+    """
     impl = os.environ.get("REPRO_KERNEL_IMPL", "auto")
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
+
+
+def hardware_impl() -> str:
+    """The impl that exercises the Pallas kernel on this host: the compiled
+    kernel on TPU, the interpreter elsewhere. Used by tests/benchmarks so
+    the tier-1 suite runs on CPU without a TPU present."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
 class TapTiles(NamedTuple):
@@ -35,20 +64,32 @@ class TapTiles(NamedTuple):
     tile_tap: jnp.ndarray      # (T,) weight tap per m-tile
     tile_nz: jnp.ndarray       # (T,) 0 => tile skippable
 
+    @property
+    def bm(self) -> int:
+        return self.gather_idx.shape[0] // self.tile_tap.shape[0]
+
 
 def _padded_budget(n_out: int, k: int, bm: int) -> int:
     # every tap may waste up to bm-1 slots to padding
     return ((n_out * k + k * (bm - 1)) // bm + 1) * bm
 
 
-@functools.partial(jax.jit, static_argnames=("bm",))
+@functools.partial(jax.jit, static_argnames=("bm", "schedule"))
 def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
-                    *, bm: int = 128) -> TapTiles:
+                    *, bm: int = 128, schedule: bool = True) -> TapTiles:
     """Sort maps by tap, pad each tap segment to a bm multiple.
+
+    ``schedule=True`` orders the tap segments hottest-first
+    (rulebook.tap_schedule): the tile stream visits high-map-count taps in
+    one maximal run each, so the kernel's tap-indexed weight block stays
+    VMEM-resident longest (§V-C). ``tile_tap`` always carries the *actual*
+    tap id per tile, whatever the segment order.
 
     ``row_nz`` enables SPAC row elision: maps sourcing all-zero rows are
     dropped before tiling, shrinking the *live* map stream exactly like the
-    ASIC's Gather Unit shrinks operand vectors.
+    ASIC's Gather Unit shrinks operand vectors. Leave it None when building
+    geometry-only tiles for a cached plan and refresh liveness per layer
+    with :func:`tile_liveness` instead.
     """
     n_out, k = kmap.shape
     m_pad = _padded_budget(n_out, k, bm)
@@ -60,18 +101,28 @@ def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
     if row_nz is not None:
         valid &= jnp.take(row_nz, jnp.maximum(flat_in, 0))
 
-    # stable sort by tap with invalid pushed to the end
-    key = jnp.where(valid, taps, k)
+    counts = jnp.bincount(jnp.where(valid, taps, k), length=k + 1)[:k]
+    if schedule:
+        sched = _rulebook.tap_schedule(counts)          # tap ids, hot first
+    else:
+        sched = jnp.arange(k, dtype=jnp.int32)
+    srank = jnp.zeros((k,), jnp.int32).at[sched].set(
+        jnp.arange(k, dtype=jnp.int32))                 # tap -> schedule rank
+
+    # stable sort by schedule rank with invalid pushed to the end
+    key = jnp.where(valid, srank[taps], k)
     order = jnp.argsort(key, stable=True)
-    staps = key[order]
-    # rank within tap
-    counts = jnp.bincount(staps, length=k + 1)[:k]
-    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])[:k]
-    rank = jnp.arange(n_out * k) - jnp.take(starts, jnp.minimum(staps, k - 1))
+    skey = key[order]
+    # rank within segment (counts reindexed into schedule order)
+    scounts = counts[sched]
+    starts = jnp.concatenate([jnp.zeros(1, scounts.dtype),
+                              jnp.cumsum(scounts)])[:k]
+    rank = jnp.arange(n_out * k) - jnp.take(starts, jnp.minimum(skey, k - 1))
     # padded segment starts
-    pcounts = ((counts + bm - 1) // bm) * bm
+    pcounts = ((scounts + bm - 1) // bm) * bm
     pstarts = jnp.concatenate([jnp.zeros(1, pcounts.dtype), jnp.cumsum(pcounts)])
-    slot = jnp.where(staps < k, jnp.take(pstarts[:k], jnp.minimum(staps, k - 1)) + rank,
+    slot = jnp.where(skey < k,
+                     jnp.take(pstarts[:k], jnp.minimum(skey, k - 1)) + rank,
                      m_pad)
 
     gather = jnp.zeros((m_pad,), jnp.int32).at[slot].set(
@@ -83,39 +134,159 @@ def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
 
     t = m_pad // bm
     tile_starts = jnp.arange(t) * bm
-    tile_tap = jnp.searchsorted(pstarts[1:], tile_starts, side="right")
-    tile_tap = jnp.minimum(tile_tap, k - 1).astype(jnp.int32)
+    tile_rank = jnp.searchsorted(pstarts[1:], tile_starts, side="right")
+    tile_tap = sched[jnp.minimum(tile_rank, k - 1)].astype(jnp.int32)
     # a tile is live iff it holds any valid slot
     tile_nz = svalid.reshape(t, bm).any(axis=1).astype(jnp.int32)
     return TapTiles(gather, scatter, svalid, tile_tap, tile_nz)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "impl"))
-def apply_kmap(feats: jnp.ndarray, weights: jnp.ndarray, kmap: jnp.ndarray,
-               bias: jnp.ndarray | None = None, *, spac: bool = True,
-               bm: int = 128, bn: int = 128, impl: str | None = None) -> jnp.ndarray:
-    """Output rows = scatter-add of the kernel's per-map partial products.
+def tile_liveness(tiles: TapTiles, row_nz: jnp.ndarray) -> jnp.ndarray:
+    """Refresh per-tile skip flags against the *current* features.
 
-    Semantically identical to rulebook.apply_kmap_gather (tested); this is
-    the perf path with tap-resident weights + tile skipping.
+    Geometry tiles are feature-independent and cacheable across layers; the
+    SPAC skip mask is not (the post-ReLU zero pattern changes every layer).
+    A slot is live iff its map is valid and its source row has any nonzero;
+    a tile is skippable iff no slot in it is live. Maps to zero rows that
+    sit inside a live tile contribute exactly 0 — elision stays lossless.
+    """
+    live = tiles.slot_valid & jnp.take(row_nz, tiles.gather_idx)
+    return live.reshape(-1, tiles.bm).any(axis=1).astype(jnp.int32)
+
+
+def _pad_cout(weights: jnp.ndarray, bn: int) -> jnp.ndarray:
+    """Zero-pad the Cout axis to a bn multiple (kernel lane contract);
+    callers slice the output back to the true Cout."""
+    c_out = weights.shape[-1]
+    c_pad = -(-c_out // bn) * bn
+    if c_pad == c_out:
+        return weights
+    return jnp.pad(weights, ((0, 0), (0, 0), (0, c_pad - c_out)))
+
+
+def _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
+                   *, n_out, bm, bn):
+    """Differentiable pure-XLA math of the fused execution (pre-bias)."""
+    ps = spconv_gemm_fused_ref(feats, w, gather_idx, tile_tap, tile_nz,
+                               bm=bm, bn=bn)
+    out = jnp.zeros((n_out + 1, w.shape[-1]), ps.dtype)
+    return out.at[scatter_idx].add(ps, mode="drop")[:n_out]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx):
+    """Fused-kernel execution with an XLA-math backward (the Pallas kernel
+    has no transpose rule; the gradient re-derives through the oracle)."""
+    n_out, bm, bn, interpret = cfg
+    ps = spconv_gemm_fused(feats, w, gather_idx, tile_tap, tile_nz,
+                           bm=bm, bn=bn, interpret=interpret)
+    out = jnp.zeros((n_out + 1, w.shape[-1]), ps.dtype)
+    return out.at[scatter_idx].add(ps, mode="drop")[:n_out]
+
+
+def _exec_fused_fwd(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx):
+    out = _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz,
+                      scatter_idx)
+    return out, (feats, w, gather_idx, tile_tap, tile_nz, scatter_idx)
+
+
+def _exec_fused_bwd(cfg, res, g):
+    n_out, bm, bn, _ = cfg
+    feats, w, gather_idx, tile_tap, tile_nz, scatter_idx = res
+    _, vjp = jax.vjp(
+        lambda f, ww: _exec_ref_math(f, ww, gather_idx, tile_tap, tile_nz,
+                                     scatter_idx, n_out=n_out, bm=bm, bn=bn),
+        feats, w)
+    dfeats, dw = vjp(g)
+    zeros_i32 = [np.zeros(a.shape, jax.dtypes.float0)
+                 for a in (gather_idx, tile_tap, tile_nz, scatter_idx)]
+    return (dfeats, dw, *zeros_i32)
+
+
+_exec_fused.defvjp(_exec_fused_fwd, _exec_fused_bwd)
+
+
+def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
+                bias: jnp.ndarray | None = None, *, n_out: int,
+                row_nz: jnp.ndarray | None = None, bn: int = 128,
+                impl: str | None = None) -> jnp.ndarray:
+    """Execute a rulebook from pre-built tiles (the ConvPlan hot path).
+
+    feats stays un-gathered; the fused kernel (or its oracle) pulls rows by
+    ``tiles.gather_idx``. ``row_nz`` refreshes tile liveness for SPAC; when
+    None the build-time ``tile_nz`` is used as-is. C_out is zero-padded to a
+    bn multiple for the kernel and sliced back afterwards. Differentiable
+    under every impl (the Pallas paths carry a custom VJP that re-derives
+    the gradient through the XLA oracle math).
     """
     impl = impl or kernel_impl()
+    bm = tiles.bm
+    tile_nz = tiles.tile_nz if row_nz is None else tile_liveness(tiles, row_nz)
+    c_out = weights.shape[-1]
+    w = _pad_cout(weights, bn)
+    if impl in ("pallas", "interpret"):
+        cfg = (n_out, bm, bn, impl == "interpret")
+        out = _exec_fused(cfg, feats, w, tiles.gather_idx, tiles.tile_tap,
+                          tile_nz, tiles.scatter_idx)
+    elif impl == "ref":
+        out = _exec_ref_math(feats, w, tiles.gather_idx, tiles.tile_tap,
+                             tile_nz, tiles.scatter_idx, n_out=n_out,
+                             bm=bm, bn=bn)
+    else:
+        raise ValueError(f"unknown kernel impl {impl!r}")
+    out = out[:, :c_out]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def apply_kmap_fused(feats: jnp.ndarray, weights: jnp.ndarray,
+                     kmap: jnp.ndarray, bias: jnp.ndarray | None = None, *,
+                     spac: bool = True, bm: int = 128, bn: int = 128,
+                     impl: str | None = None) -> jnp.ndarray:
+    """One-shot fused path: build tiles (row elision folded in when
+    ``spac``) and execute without materializing the gathered lhs."""
+    impl = impl or kernel_impl()
+    row_nz = _sparsity.row_nonzero(feats) if spac else None
+    tiles = build_tap_tiles(kmap, row_nz, bm=bm)
+    return apply_tiles(feats, weights, tiles, bias, n_out=kmap.shape[0],
+                       bn=bn, impl=impl)
+
+
+def apply_kmap(feats: jnp.ndarray, weights: jnp.ndarray, kmap: jnp.ndarray,
+               bias: jnp.ndarray | None = None, *, spac: bool = True,
+               bm: int = 128, bn: int = 128,
+               impl: str | None = None) -> jnp.ndarray:
+    """Materialized-gather baseline: semantically identical to
+    rulebook.apply_kmap_gather (tested), but pays an (M_pad, Cin) HBM
+    intermediate for the gather. Kept as the comparison point for
+    benchmarks/rulebook_exec.py; the default backend is the fused path."""
+    impl = impl or kernel_impl()
+    return _apply_kmap_materialized(feats, weights, kmap, bias, spac=spac,
+                                    bm=bm, bn=bn, impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spac", "bm", "bn", "impl"))
+def _apply_kmap_materialized(feats, weights, kmap, bias=None, *, spac, bm,
+                             bn, impl):
     n_out = kmap.shape[0]
     row_nz = _sparsity.row_nonzero(feats) if spac else None
     tiles = build_tap_tiles(kmap, row_nz, bm=bm)
     lhs = jnp.take(feats, tiles.gather_idx, axis=0)
     lhs = jnp.where(tiles.slot_valid[:, None], lhs, 0)
+    c_out = weights.shape[-1]
+    w = _pad_cout(weights, bn)
     if impl == "pallas":
-        ps = spconv_gemm(lhs, weights, tiles.tile_tap, tiles.tile_nz,
-                         bm=bm, bn=bn)
+        ps = spconv_gemm(lhs, w, tiles.tile_tap, tiles.tile_nz, bm=bm, bn=bn)
     elif impl == "interpret":
-        ps = spconv_gemm(lhs, weights, tiles.tile_tap, tiles.tile_nz,
-                         bm=bm, bn=bn, interpret=True)
+        ps = spconv_gemm(lhs, w, tiles.tile_tap, tiles.tile_nz, bm=bm, bn=bn,
+                         interpret=True)
     else:
-        ps = spconv_gemm_ref(lhs, weights, tiles.tile_tap, tiles.tile_nz,
+        ps = spconv_gemm_ref(lhs, w, tiles.tile_tap, tiles.tile_nz,
                              bm=bm, bn=bn)
-    out = jnp.zeros((n_out + 1, weights.shape[-1]), ps.dtype)
-    out = out.at[tiles.scatter_idx].add(ps, mode="drop")[:n_out]
+    out = jnp.zeros((n_out + 1, w.shape[-1]), ps.dtype)
+    out = out.at[tiles.scatter_idx].add(ps, mode="drop")[:n_out, :c_out]
     if bias is not None:
         out = out + bias
     return out

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the spconv_gemm kernel contract."""
+"""Pure-jnp oracles for the spconv_gemm kernel contracts."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -17,3 +17,16 @@ def spconv_gemm_ref(lhs: jnp.ndarray, weights: jnp.ndarray,
                      w.astype(jnp.float32))
     out = out * (tile_nz != 0).astype(out.dtype)[:, None, None]
     return out.reshape(m, weights.shape[-1]).astype(lhs.dtype)
+
+
+def spconv_gemm_fused_ref(feats: jnp.ndarray, weights: jnp.ndarray,
+                          gather_idx: jnp.ndarray, tile_tap: jnp.ndarray,
+                          tile_nz: jnp.ndarray, *, bm: int = 128,
+                          bn: int = 128) -> jnp.ndarray:
+    """Oracle for :func:`kernel.spconv_gemm_fused`.
+
+    Materializes the gather (it is the *reference*, not the perf path) and
+    reuses the tiled-GEMM oracle on top.
+    """
+    lhs = jnp.take(feats, gather_idx, axis=0)
+    return spconv_gemm_ref(lhs, weights, tile_tap, tile_nz, bm=bm, bn=bn)

@@ -11,6 +11,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as planlib
 from repro.core import spconv
 from repro.core.spconv import SparseTensor
 
@@ -65,31 +66,45 @@ def init_model(cfg: MinkUNetConfig, key) -> dict:
     return p
 
 
-def _apply_subm(st, params, cfg, training, n_max):
+def _apply_subm(st, params, cfg, training, n_max, cache, impl):
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
-                           batch_bits=cfg.batch_bits, spac=cfg.spac)
+                           batch_bits=cfg.batch_bits, spac=cfg.spac,
+                           cache=cache, impl=impl)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
     return spconv.relu(st)
 
 
 def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
-            training: bool = False) -> jnp.ndarray:
-    """Returns per-voxel class logits (N, classes)."""
+            training: bool = False,
+            cache: planlib.PlanCache | None = None,
+            impl: str | None = None) -> jnp.ndarray:
+    """Returns per-voxel class logits (N, classes).
+
+    A per-forward PlanCache shares map search across every layer on the same
+    coordinate set: B stacked Subm3 blocks search once, and decoder stages
+    reuse the encoder-stage plans at the same resolution (coordinates are
+    recovered exactly by Tconv2, §IV-D2). Pass a longer-lived ``cache`` to
+    extend the reuse across calls on identical coordinate arrays.
+    """
+    if cache is None:
+        cache = planlib.PlanCache()
     n_max = st.n_max
     st = spconv.mask_feats(st)
-    st = _apply_subm(st, params["stem"], cfg, training, n_max)
+    st = _apply_subm(st, params["stem"], cfg, training, n_max, cache, impl)
 
     skips, maps_stack = [st], []
     gb = cfg.grid_bits
     for i in range(len(cfg.enc)):
         stage = params[f"enc{i}"]
         down, maps = spconv.gconv2(st, stage["down"]["conv"], grid_bits=gb,
-                                   batch_bits=cfg.batch_bits)
+                                   batch_bits=cfg.batch_bits, cache=cache,
+                                   impl=impl)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"], training=training)
         st = spconv.relu(down)
         for b in range(cfg.blocks):
-            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max)
+            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
+                             cache, impl)
         maps_stack.append(maps)
         skips.append(st)
 
@@ -97,13 +112,15 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
         stage = params[f"dec{i}"]
         maps = maps_stack[-(i + 1)]
         target = skips[-(i + 2)]
-        up = spconv.tconv2(st, stage["up"]["conv"], maps, target)
+        up = spconv.tconv2(st, stage["up"]["conv"], maps, target,
+                           cache=cache, impl=impl)
         up, _ = spconv.batch_norm(up, stage["up"]["bn"], training=training)
         up = spconv.relu(up)
         st = up.replace_feats(
             jnp.concatenate([up.feats, target.feats], axis=-1))
         for b in range(cfg.blocks):
-            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max)
+            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
+                             cache, impl)
 
     logits = st.feats @ params["head"]["w"][0] + params["head"]["b"]
     return jnp.where(st.valid[:, None], logits, 0)

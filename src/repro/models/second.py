@@ -14,6 +14,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as planlib
 from repro.core import spconv
 from repro.core.spconv import SparseTensor
 
@@ -64,17 +65,23 @@ def init_model(cfg: SECONDConfig, key) -> dict:
     return p
 
 
-def _subm_block(st, params, cfg, training, n_max):
+def _subm_block(st, params, cfg, training, n_max, cache, impl):
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
-                           batch_bits=cfg.batch_bits, spac=cfg.spac)
+                           batch_bits=cfg.batch_bits, spac=cfg.spac,
+                           cache=cache, impl=impl)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
     return spconv.relu(st)
 
 
 def middle_extractor(params, st: SparseTensor, cfg: SECONDConfig, *,
-                     training: bool = False) -> SparseTensor:
-    n_max = st.n_max
+                     training: bool = False,
+                     cache: planlib.PlanCache | None = None,
+                     impl: str | None = None) -> SparseTensor:
+    """Per-forward PlanCache: the ``blocks`` stacked Subm3 convolutions of
+    each stage share one map search (§IV-D2 Map Table reuse, generalized)."""
+    if cache is None:
+        cache = planlib.PlanCache()
     st = spconv.mask_feats(st)
     for i in range(len(cfg.channels)):
         stage = params[f"stage{i}"]
@@ -82,12 +89,14 @@ def middle_extractor(params, st: SparseTensor, cfg: SECONDConfig, *,
                                 grid_bits=cfg.grid_bits,
                                 batch_bits=cfg.batch_bits,
                                 dataflow="input_stationary" if i == 0
-                                else "output_stationary")
+                                else "output_stationary",
+                                cache=cache, impl=impl)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"],
                                     training=training)
         st = spconv.relu(down)
         for b in range(cfg.blocks):
-            st = _subm_block(st, stage[f"block{b}"], cfg, training, st.n_max)
+            st = _subm_block(st, stage[f"block{b}"], cfg, training, st.n_max,
+                             cache, impl)
     return st
 
 

@@ -1,0 +1,309 @@
+"""Planned/fused rulebook execution: parity, plan cache, tap schedule.
+
+Covers the DESIGN.md §4-§6 contract: the gather-fused plan path agrees
+with both rulebook oracles for all four layer types, plans are memoized by
+coordinate identity (map search once per stage), tap segments are laid out
+hottest-first, and the fused kernel allocates no (M_pad, Cin) gathered
+intermediate.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from benchmarks.rulebook_exec import gathered_intermediate_bytes
+from repro.core import mapsearch, morton, rulebook, spconv
+from repro.core import plan as planlib
+from repro.core.spconv import SparseTensor
+from repro.kernels.spconv_gemm import ops as sg_ops
+from tests.proptest import forall, random_cloud
+
+# CPU-runnable kernel path: compiled Pallas on TPU, interpreter elsewhere
+KIMPL = sg_ops.hardware_impl()
+BM = 8
+
+
+def _rand_st(rng, n, extent, batch, c, zero_frac=0.0):
+    coords, bidx, valid = random_cloud(rng, n, extent=extent, batch=batch)
+    feats = rng.standard_normal((n, c)).astype(np.float32)
+    if zero_frac:
+        feats[rng.random(n) < zero_frac] = 0
+    feats[~valid] = 0
+    return SparseTensor(jnp.asarray(coords), jnp.asarray(bidx),
+                        jnp.asarray(valid), jnp.asarray(feats))
+
+
+# ---------------------------------------------------------------------------
+# Parity: fused/planned path vs the XLA rulebook oracles, all 4 layer types
+# ---------------------------------------------------------------------------
+
+@forall(6)
+def test_subm3_fused_matches_xla_oracle(rng):
+    n, cin, cout = 40, 8, 12
+    st = _rand_st(rng, n, 14, 2, cin, zero_frac=0.4)
+    params = spconv.init_conv(jax.random.key(0), 27, cin, cout)
+    ref = spconv.subm_conv3(st, params, max_blocks=n, impl="xla")
+    for impl in ("ref", KIMPL):
+        got = spconv.subm_conv3(st, params, max_blocks=n, impl=impl, bm=BM)
+        np.testing.assert_allclose(np.asarray(got.feats),
+                                   np.asarray(ref.feats),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@forall(6)
+def test_gconv2_fused_matches_xla_oracle(rng):
+    n, cin, cout = 32, 6, 10
+    st = _rand_st(rng, n, 12, 2, cin)
+    params = spconv.init_conv(jax.random.key(1), 8, cin, cout)
+    ref, maps_ref = spconv.gconv2(st, params, impl="xla")
+    for impl in ("ref", KIMPL):
+        got, _ = spconv.gconv2(st, params, impl=impl, bm=BM)
+        np.testing.assert_array_equal(np.asarray(got.coords),
+                                      np.asarray(ref.coords))
+        np.testing.assert_allclose(np.asarray(got.feats),
+                                   np.asarray(ref.feats),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@forall(6)
+def test_gconv3_fused_matches_scatter_oracle(rng):
+    """Fused output-stationary vs apply_maps_scatter (input-stationary)."""
+    n, cin, cout = 28, 5, 9
+    st = _rand_st(rng, n, 12, 2, cin)
+    params = spconv.init_conv(jax.random.key(2), 27, cin, cout)
+    ref, _ = spconv.gconv3(st, params, dataflow="input_stationary")
+    for impl in ("ref", KIMPL):
+        got, _ = spconv.gconv3(st, params, dataflow="output_stationary",
+                               impl=impl, bm=BM)
+        np.testing.assert_allclose(np.asarray(got.feats),
+                                   np.asarray(ref.feats),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@forall(6)
+def test_tconv2_fused_matches_xla_oracle(rng):
+    n, cin, cmid, cout = 30, 5, 7, 6
+    st = _rand_st(rng, n, 12, 2, cin)
+    pg = spconv.init_conv(jax.random.key(3), 8, cin, cmid)
+    pt = spconv.init_conv(jax.random.key(4), 8, cmid, cout)
+    down, maps = spconv.gconv2(st, pg, impl="xla")
+    ref = spconv.tconv2(down, pt, maps, st, impl="xla")
+    for impl in ("ref", KIMPL):
+        got = spconv.tconv2(down, pt, maps, st, impl=impl, bm=BM)
+        np.testing.assert_allclose(np.asarray(got.feats),
+                                   np.asarray(ref.feats),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_spac_row_elision_lossless_on_kernel_path(monkeypatch):
+    """SPAC equivalence with the env-selected interpret/pallas kernel."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", KIMPL)
+    rng = np.random.default_rng(7)
+    n, cin, cout = 40, 8, 8
+    st = _rand_st(rng, n, 16, 1, cin, zero_frac=0.5)
+    params = spconv.init_conv(jax.random.key(5), 27, cin, cout)
+    with_spac = spconv.subm_conv3(st, params, max_blocks=n, spac=True, bm=BM)
+    without = spconv.subm_conv3(st, params, max_blocks=n, spac=False, bm=BM)
+    np.testing.assert_allclose(np.asarray(with_spac.feats),
+                               np.asarray(without.feats),
+                               rtol=1e-5, atol=1e-5)
+    # and the env default really routed through the kernel impl
+    assert sg_ops.kernel_impl() == KIMPL
+
+
+# ---------------------------------------------------------------------------
+# Plan cache behavior
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_and_miss():
+    rng = np.random.default_rng(0)
+    st = _rand_st(rng, 24, 10, 1, 4)
+    cache = planlib.PlanCache()
+    planlib.reset_mapsearch_counter()
+    p1 = planlib.subm3_plan(st.coords, st.batch, st.valid, max_blocks=24,
+                            bm=BM, cache=cache)
+    p2 = planlib.subm3_plan(st.coords, st.batch, st.valid, max_blocks=24,
+                            bm=BM, cache=cache)
+    assert p1 is p2                      # same coords -> same plan object
+    assert cache.hits == 1 and cache.misses == 1
+    assert planlib.mapsearch_call_count() == 1
+
+    moved = st.coords + 1                # changed coords -> rebuild
+    p3 = planlib.subm3_plan(moved, st.batch, st.valid, max_blocks=24,
+                            bm=BM, cache=cache)
+    assert p3 is not p1
+    assert cache.misses == 2
+    assert planlib.mapsearch_call_count() == 2
+
+    # different statics on the same arrays are distinct plans
+    p4 = planlib.subm3_plan(st.coords, st.batch, st.valid, max_blocks=24,
+                            grid_bits=6, bm=BM, cache=cache)
+    assert p4 is not p1
+    assert cache.misses == 3
+
+
+def test_four_block_stage_searches_once_under_jit():
+    """The acceptance property: B stacked Subm3 blocks, one map search."""
+    rng = np.random.default_rng(1)
+    st = _rand_st(rng, 32, 12, 1, 6)
+    params = [spconv.init_conv(jax.random.key(i), 27, 6, 6) for i in range(4)]
+    planlib.reset_mapsearch_counter()
+
+    def stage(feats):
+        cache = planlib.PlanCache()
+        cur = st.replace_feats(feats)
+        for p in params:
+            cur = spconv.subm_conv3(cur, p, max_blocks=32, cache=cache,
+                                    impl="ref", bm=BM)
+            cur = spconv.relu(cur)
+        return cur.feats
+
+    out = jax.jit(stage)(st.feats)
+    assert np.isfinite(np.asarray(out)).all()
+    assert planlib.mapsearch_call_count() == 1
+
+
+def test_minkunet_forward_shares_plans_across_stages():
+    """Decoder stages reuse encoder-stage plans: searches == gconv2 stages
+    + distinct Subm3 resolutions, independent of blocks per stage."""
+    from repro.data import pointcloud
+    from repro.models import minkunet
+
+    cfg = minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
+                                  classes=4, blocks=2)
+    params = minkunet.init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    vb = pointcloud.make_batch(rng, "indoor", batch_size=1, max_voxels=256)
+    st = SparseTensor(jnp.asarray(vb.coords), jnp.asarray(vb.batch),
+                      jnp.asarray(vb.valid), jnp.asarray(vb.feats))
+
+    planlib.reset_mapsearch_counter()
+    logits = jax.jit(
+        lambda s: minkunet.forward(params, s, cfg, impl="ref"))(st)
+    assert np.isfinite(np.asarray(logits)).all()
+    n_gconv2 = len(cfg.enc)
+    n_subm_res = len(cfg.enc) + 1        # one Subm3 search per resolution
+    assert planlib.mapsearch_call_count() == n_gconv2 + n_subm_res
+
+    # end-to-end parity of the fused/planned path against the XLA oracle
+    ref = minkunet.forward(params, st, cfg, impl="xla")
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tap schedule (§V-C): hottest-first tile layout
+# ---------------------------------------------------------------------------
+
+@forall(8)
+def test_tile_tap_runs_are_monotone_in_schedule_order(rng):
+    n_out, k, bm = int(rng.integers(8, 48)), 27, 8
+    kmap = rng.integers(-1, n_out, size=(n_out, k)).astype(np.int32)
+    # skew the tap histogram so the schedule is nontrivial
+    kmap[:, int(rng.integers(0, k))] = rng.integers(0, n_out, n_out)
+    tiles = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=bm)
+
+    counts = np.asarray(rulebook.tap_counts(jnp.asarray(kmap)))
+    sched = np.asarray(rulebook.tap_schedule(jnp.asarray(counts)))
+    srank = np.zeros(k, np.int64)
+    srank[sched] = np.arange(k)
+
+    live = np.asarray(tiles.tile_nz) != 0
+    ranks = srank[np.asarray(tiles.tile_tap)][live]
+    assert (np.diff(ranks) >= 0).all(), ranks
+    # hottest tap leads the stream
+    if live.any():
+        assert ranks[0] == 0
+    # per-tap tile budget: ceil(count/bm) live tiles at most
+    taps_of_live = np.asarray(tiles.tile_tap)[live]
+    for t in range(k):
+        assert (taps_of_live == t).sum() <= -(-int(counts[t]) // bm)
+
+
+def test_schedule_off_keeps_tap_order():
+    rng = np.random.default_rng(3)
+    kmap = rng.integers(-1, 16, size=(16, 9)).astype(np.int32)
+    tiles = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=8, schedule=False)
+    live = np.asarray(tiles.tile_nz) != 0
+    taps = np.asarray(tiles.tile_tap)[live]
+    assert (np.diff(taps) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Sorted map search bit budget (satellite: no silent clamp)
+# ---------------------------------------------------------------------------
+
+def test_sorted_method_rejects_oversized_grid():
+    rng = np.random.default_rng(4)
+    st = _rand_st(rng, 16, 10, 1, 4)
+    params = spconv.init_conv(jax.random.key(6), 27, 4, 4)
+    with pytest.raises(ValueError, match="sorted"):
+        spconv.subm_conv3(st, params, max_blocks=16, method="sorted",
+                          grid_bits=7)
+    # a grid that fits works and matches the octree path
+    ok = spconv.subm_conv3(st, params, max_blocks=16, method="sorted",
+                           grid_bits=5, impl="ref", bm=BM)
+    oct_ = spconv.subm_conv3(st, params, max_blocks=16, method="octree",
+                             impl="ref", bm=BM)
+    np.testing.assert_allclose(np.asarray(ok.feats), np.asarray(oct_.feats),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# No materialized gather on the fused path (jaxpr audit)
+# ---------------------------------------------------------------------------
+
+def test_fused_path_has_no_materialized_gather():
+    rng = np.random.default_rng(5)
+    n, cin, cout = 32, 8, 16
+    st = _rand_st(rng, n, 12, 1, cin)
+    params = spconv.init_conv(jax.random.key(7), 27, cin, cout)
+    kmap = mapsearch.build_kmap_octree(
+        st.coords, st.batch, st.valid, jnp.asarray(morton.subm3_offsets()),
+        max_blocks=n)
+    m_pad = sg_ops.build_tap_tiles(kmap, bm=BM).gather_idx.shape[0]
+
+    fused = lambda f: sg_ops.apply_kmap_fused(f, params["w"], kmap,
+                                              bm=BM, impl=KIMPL)
+    mat = lambda f: sg_ops.apply_kmap(f, params["w"], kmap,
+                                      bm=BM, impl=KIMPL)
+    assert gathered_intermediate_bytes(fused, st.feats,
+                                       rows=m_pad, cols=cin) == 0
+    assert gathered_intermediate_bytes(mat, st.feats,
+                                       rows=m_pad, cols=cin) > 0
+
+
+def test_fused_kernel_custom_vjp_matches_ref_grads():
+    """The Pallas path's custom VJP (used for all TPU backprop) must agree
+    with native autodiff through the ref math — incl. float0 handling of
+    the four integer operands."""
+    rng = np.random.default_rng(8)
+    n, cin, cout = 32, 8, 12
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n, size=(n, 27)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+
+    def loss(f, ww, bb, impl):
+        out = sg_ops.apply_kmap_fused(f, ww, kmap, bb, bm=BM, impl=impl)
+        return (out ** 2).sum()
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(feats, w, b, "ref")
+    g_ker = jax.jit(jax.grad(lambda f, ww, bb: loss(f, ww, bb, KIMPL),
+                             argnums=(0, 1, 2)))(feats, w, b)
+    for a, c in zip(g_ref, g_ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fused_kernel_matches_materialized_kernel():
+    rng = np.random.default_rng(6)
+    n, cin, cout = 40, 16, 24
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n, size=(n, 27)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+    got = sg_ops.apply_kmap_fused(feats, w, kmap, b, bm=BM, impl=KIMPL)
+    ref = sg_ops.apply_kmap(feats, w, kmap, b, bm=BM, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
