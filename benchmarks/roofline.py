@@ -1,6 +1,14 @@
 """Roofline aggregator: dry-run JSONs -> §Roofline table (markdown + CSV).
 
     PYTHONPATH=src python -m benchmarks.roofline [--tag TAG] [--mesh single]
+                                                 [--rulebook PATH]
+
+Besides the dense dry-run FLOP bounds, the report folds in the SpConv
+rulebook-execution measurements (BENCH_rulebook.json, written by
+benchmarks/rulebook_exec.py): per workload, the fused kernel's modeled HBM
+traffic vs the materialized gather-GEMM-scatter baseline — the bandwidth
+ratio that decides whether a layer is memory-bound, which dense FLOP
+roofline rows cannot show.
 """
 from __future__ import annotations
 
@@ -11,6 +19,7 @@ import os
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+RULEBOOK_JSON = "BENCH_rulebook.json"
 
 
 def load(mesh: str = "single", tag: str = "") -> list[dict]:
@@ -59,13 +68,56 @@ def table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def rulebook_table(recs: list[dict]) -> str:
+    """§Roofline (rulebook) rows: fused-kernel bandwidth ratio per layer
+    workload, from BENCH_rulebook.json."""
+    hdr = ("| workload | m_pad | live/total tiles | contig-run tiles "
+           "| xla us | materialized us | fused us | fused HBM MiB "
+           "| mat HBM MiB | bw ratio |")
+    sep = "|" + "---|" * 10
+    lines = ["", "## Rulebook execution (SpConv fused kernel)", "", hdr, sep]
+    for r in recs:
+        p = r["paths"]
+        mib = 1 / 2 ** 20
+        lines.append(
+            f"| {r['workload']} | {r['m_pad']} "
+            f"| {r['live_tiles']}/{r['n_tiles']} "
+            f"| {r['contig_run_tiles']} "
+            f"| {p['xla']['us']:.1f} | {p['materialized']['us']:.1f} "
+            f"| {p['fused']['us']:.1f} "
+            f"| {p['fused']['hbm_model_bytes'] * mib:.2f} "
+            f"| {p['materialized']['hbm_model_bytes'] * mib:.2f} "
+            f"| {r['bandwidth_ratio']:.2f}x |")
+    audited = all(p["fused"]["gathered_intermediate_bytes"] == 0
+                  and p["fused"]["scatter_add_ops"] == 0
+                  and p["fused"]["partial_product_bytes"] == 0
+                  for p in (r["paths"] for r in recs))
+    lines.append("")
+    lines.append(f"fused-path audit (no gather copy / no scatter-add / "
+                 f"no partials): {'PASS' if audited else 'FAIL'}")
+    return "\n".join(lines)
+
+
+def load_rulebook(path: str = RULEBOOK_JSON) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--rulebook", default=RULEBOOK_JSON,
+                    help="BENCH_rulebook.json from benchmarks/rulebook_exec"
+                         " (section skipped when the file is absent)")
     args = ap.parse_args()
     recs = load(args.mesh, args.tag)
     print(table(recs))
+    rb = load_rulebook(args.rulebook)
+    if rb:
+        print(rulebook_table(rb))
     ok = [r for r in recs if r["status"] == "ok"]
     if ok:
         doms = {}

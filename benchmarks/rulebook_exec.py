@@ -3,19 +3,31 @@
 Three executions of the same Subm3 rulebook over the paper workloads:
 
   * ``xla``          — rulebook.apply_kmap_gather, the pure-XLA tap scan.
-  * ``materialized`` — ops.apply_kmap: tap-sorted tiles + spconv_gemm, with
-    the gathered (M_pad, Cin) lhs materialized in HBM.
-  * ``fused``        — ops.apply_kmap_fused: spconv_gemm_fused pulls rows
-    straight from the feature array; no gathered intermediate exists.
+  * ``materialized`` — tap tiles + spconv_gemm with the gathered (M_pad,
+    Cin) lhs materialized in HBM, (M_pad, Cout) partial products and a
+    post-kernel XLA scatter-add.
+  * ``fused``        — ops.apply_tiles: the output-stationary
+    spconv_gemm_fused pulls rows straight from the feature array by
+    double-buffered DMAs and scatter-adds in-kernel; neither intermediate
+    exists.
 
-Besides wall time, the jaxpr of each path is audited for gather ops that
-allocate the (M_pad, Cin) intermediate — the fused path must show zero
-bytes. Results go to BENCH_rulebook.json and the usual CSV rows.
+Besides wall time, the jaxpr of each execution (from pre-built geometry
+tiles, the ConvPlan hot path) is audited for
 
-On hosts without a TPU the kernel paths run their pure-jnp oracles (or the
-Pallas interpreter with REPRO_KERNEL_IMPL=interpret): the byte accounting
-is exact either way; the timings then compare XLA scan vs oracle math, not
-ASIC-grade kernels.
+  * gather ops allocating the (M_pad, Cin) intermediate,
+  * scatter-add ops (the post-kernel arrangement pass), and
+  * any (M_pad, Cout) partial-product array,
+
+all of which the fused path must show at zero; a parity check against the
+XLA oracle guards against drift (benchmarks/run.py --smoke runs exactly
+this on tiny shapes). An analytic HBM-traffic model per path feeds the
+roofline report (benchmarks/roofline.py --rulebook): the fused/materialized
+bandwidth ratio is the number the paper's SPAC pipeline argument is about.
+Results go to BENCH_rulebook.json and the usual CSV rows.
+
+On hosts without a TPU the kernel paths run under the Pallas interpreter:
+the op/byte accounting is exact either way; the timings then compare XLA
+scan vs interpreted kernels, not ASIC-grade kernels.
 """
 from __future__ import annotations
 
@@ -29,6 +41,8 @@ from benchmarks.common import BENCHMARKS, csv_row, time_fn, workload
 from repro.core import morton, rulebook, sparsity
 from repro.core import mapsearch
 from repro.kernels.spconv_gemm import ops as sg_ops
+from repro.kernels.spconv_gemm.kernel import spconv_gemm
+from repro.kernels.spconv_gemm.ref import spconv_gemm_ref
 
 OUT_JSON = "BENCH_rulebook.json"
 
@@ -64,6 +78,138 @@ def gathered_intermediate_bytes(fn, *args, rows: int, cols: int) -> int:
     return total
 
 
+def scatter_add_ops(fn, *args) -> int:
+    """Number of scatter-add ops in fn's jaxpr — the post-kernel
+    arrangement pass the output-stationary kernel fuses away."""
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    return sum(eqn.primitive.name == "scatter-add"
+               for jpr in _walk_jaxprs(jaxpr) for eqn in jpr.eqns)
+
+
+def partial_product_bytes(fn, *args, rows: int, min_cols: int) -> int:
+    """Total bytes of (rows, >= min_cols) arrays produced by any op in
+    fn's jaxpr — the (M_pad, Cout) partial-product signature."""
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    total = 0
+    for jpr in _walk_jaxprs(jaxpr):
+        for eqn in jpr.eqns:
+            for ov in eqn.outvars:
+                shape = tuple(getattr(ov.aval, "shape", ()))
+                if (len(shape) == 2 and shape[0] == rows
+                        and shape[1] >= min_cols):
+                    total += shape[0] * shape[1] * ov.aval.dtype.itemsize
+    return total
+
+
+def _materialized_exec(feats, w, tiles, n_out, impl, bn=128):
+    """Materialized baseline from pre-built tiles (mirrors
+    ops._apply_kmap_materialized without the in-trace tile build, so the
+    audit sees only execution ops)."""
+    lhs = jnp.take(feats, tiles.gather_idx, axis=0)
+    lhs = jnp.where(tiles.slot_valid[:, None], lhs, 0)
+    wp = sg_ops._pad_cout(w, bn)
+    if impl == "ref":
+        ps = spconv_gemm_ref(lhs, wp, tiles.tile_tap, tiles.tile_nz,
+                             bm=tiles.bm, bn=bn)
+    else:
+        ps = spconv_gemm(lhs, wp, tiles.tile_tap, tiles.tile_nz, bm=tiles.bm,
+                         bn=bn, interpret=impl == "interpret")
+    out = jnp.zeros((n_out + 1, wp.shape[-1]), ps.dtype)
+    return out.at[tiles.scatter_idx].add(ps, mode="drop")[:n_out,
+                                                          :w.shape[-1]]
+
+
+def _hbm_model(path: str, *, m_pad, live_tiles, bm, c_in, c_out, n_out,
+               n_out_pad, itemsize=4) -> int:
+    """Analytic HBM traffic per path (features/partials only — weights are
+    identical across paths and amortized by the tap schedule)."""
+    if path == "xla":
+        # per-tap gather reads + one output accumulate in registers
+        return m_pad * c_in * itemsize + n_out * c_out * itemsize
+    if path == "materialized":
+        gath = 2 * m_pad * c_in * itemsize          # gather write + read
+        parts = 2 * m_pad * c_out * itemsize        # partials write + read
+        return gath + parts + n_out * c_out * itemsize
+    if path == "fused":
+        # live tiles DMA their rows once (Cin-blocked reads still touch
+        # each element once); each output block is written back once
+        return (live_tiles * bm * c_in + n_out_pad * c_out) * itemsize
+    raise ValueError(path)
+
+
+def _case(feats, w, kmap, *, bm, bo, kimpl, impl):
+    n, c_in = feats.shape
+    c_out = w.shape[-1]
+    n_out = kmap.shape[0]
+    row_nz = sparsity.row_nonzero(feats)
+    tiles = sg_ops.build_tap_tiles(kmap, bm=bm, bo=bo)
+    m_pad = tiles.gather_idx.shape[0]
+    c_out_pad = -(-c_out // 128) * 128
+    n_out_pad = -(-n_out // tiles.bo) * tiles.bo
+    live_tiles = int(np.asarray(sg_ops.tile_liveness(tiles, row_nz)).sum())
+
+    paths = {
+        "xla": jax.jit(lambda f: rulebook.apply_kmap_gather(
+            f, w, sparsity.compact_kmap(kmap, sparsity.row_nonzero(f)))),
+        "materialized": jax.jit(lambda f: _materialized_exec(
+            f, w, tiles, n_out, impl)),
+        "fused": jax.jit(lambda f: sg_ops.apply_tiles(
+            f, w, tiles, n_out=n_out, row_nz=sparsity.row_nonzero(f),
+            impl=impl)),
+    }
+    audits = {
+        "materialized": lambda f: _materialized_exec(f, w, tiles, n_out,
+                                                     kimpl),
+        "fused": lambda f: sg_ops.apply_tiles(
+            f, w, tiles, n_out=n_out, row_nz=sparsity.row_nonzero(f),
+            impl=kimpl),
+    }
+    run_tiles = int(np.asarray(tiles.tile_run).sum())
+    rec = {"impl": impl, "kernel_impl": kimpl, "n": n, "c_in": c_in,
+           "c_out": c_out, "bm": bm, "bo": tiles.bo, "m_pad": m_pad,
+           "n_tiles": tiles.n_tiles, "live_tiles": live_tiles,
+           "contig_run_tiles": run_tiles, "paths": {}}
+    outs = {}
+    for pname, fn in paths.items():
+        t = time_fn(fn, feats)
+        outs[pname] = np.asarray(fn(feats))
+        audit = audits.get(pname, fn)
+        g_bytes = gathered_intermediate_bytes(audit, feats,
+                                              rows=m_pad, cols=c_in)
+        s_ops = scatter_add_ops(audit, feats) if pname in audits else None
+        p_bytes = (partial_product_bytes(audit, feats, rows=m_pad,
+                                         min_cols=c_out)
+                   if pname in audits else None)
+        rec["paths"][pname] = {
+            "us": t * 1e6,
+            "gathered_intermediate_bytes": g_bytes,
+            "scatter_add_ops": s_ops,
+            "partial_product_bytes": p_bytes,
+            "hbm_model_bytes": _hbm_model(
+                pname, m_pad=m_pad, live_tiles=live_tiles, bm=bm,
+                c_in=c_in, c_out=c_out_pad, n_out=n_out,
+                n_out_pad=n_out_pad),
+        }
+    fused, mat = rec["paths"]["fused"], rec["paths"]["materialized"]
+    rec["bandwidth_ratio"] = (mat["hbm_model_bytes"]
+                              / max(fused["hbm_model_bytes"], 1))
+    # hard contracts: the fused path must fuse, and all paths must agree
+    assert fused["gathered_intermediate_bytes"] == 0, (
+        "fused path must not materialize the (M_pad, Cin) gather")
+    assert fused["scatter_add_ops"] == 0, (
+        "fused path must not emit a post-kernel scatter-add")
+    assert fused["partial_product_bytes"] == 0, (
+        "fused path must not allocate (M_pad, Cout) partial products")
+    assert mat["gathered_intermediate_bytes"] > 0
+    assert mat["scatter_add_ops"] > 0
+    for pname in ("materialized", "fused"):
+        if not np.allclose(outs[pname], outs["xla"], rtol=1e-4, atol=1e-4):
+            raise AssertionError(
+                f"parity drift: {pname} vs xla "
+                f"(max |d|={np.abs(outs[pname] - outs['xla']).max():.3e})")
+    return rec
+
+
 def _workload_case(name: str, c_in: int = 64, c_out: int = 64):
     vb = workload(name)
     coords = jnp.asarray(vb.coords)
@@ -80,49 +226,44 @@ def _workload_case(name: str, c_in: int = 64, c_out: int = 64):
     return jnp.asarray(feats), jnp.asarray(w), kmap
 
 
-def run(full: bool = True) -> list[str]:
-    impl = sg_ops.kernel_impl()
-    # byte accounting audits the *kernel* path (compiled on TPU, interpreted
-    # elsewhere); the oracle 'ref' impl materializes by construction.
-    kimpl = sg_ops.hardware_impl()
-    bm = 128
-    names = list(BENCHMARKS) if full else ["Det(k)"]
-    rows, records = [], []
-    for name in names:
-        feats, w, kmap = _workload_case(name)
-        n, c_in = feats.shape
-        m_pad = sg_ops.build_tap_tiles(kmap, bm=bm).gather_idx.shape[0]
+def _smoke_case(c_in: int = 16, c_out: int = 24, n: int = 96):
+    """Tiny synthetic case for `benchmarks/run.py --smoke`: interpret-mode
+    kernels on shapes that run in seconds, same audits and parity gate."""
+    rng = np.random.default_rng(1)
+    feats = rng.standard_normal((n, c_in)).astype(np.float32)
+    feats[rng.random(n) < 0.4] = 0
+    kmap = rng.integers(-1, n, size=(n, 27)).astype(np.int32)
+    w = rng.standard_normal((27, c_in, c_out)).astype(np.float32) * 0.05
+    return jnp.asarray(feats), jnp.asarray(w), jnp.asarray(kmap)
 
-        paths = {
-            "xla": jax.jit(lambda f, ww, km: rulebook.apply_kmap_gather(
-                f, ww, sparsity.compact_kmap(km, sparsity.row_nonzero(f)))),
-            "materialized": jax.jit(lambda f, ww, km: sg_ops.apply_kmap(
-                f, ww, km, bm=bm, impl=impl)),
-            "fused": jax.jit(lambda f, ww, km: sg_ops.apply_kmap_fused(
-                f, ww, km, bm=bm, impl=impl)),
-        }
-        audits = {
-            "materialized": jax.jit(lambda f, ww, km: sg_ops.apply_kmap(
-                f, ww, km, bm=bm, impl=kimpl)),
-            "fused": jax.jit(lambda f, ww, km: sg_ops.apply_kmap_fused(
-                f, ww, km, bm=bm, impl=kimpl)),
-        }
-        rec = {"workload": name, "impl": impl, "kernel_impl": kimpl, "n": n,
-               "c_in": c_in, "m_pad": m_pad, "paths": {}}
-        for pname, fn in paths.items():
-            t = time_fn(fn, feats, w, kmap)
-            audit = audits.get(pname, fn)
-            g_bytes = gathered_intermediate_bytes(audit, feats, w, kmap,
-                                                  rows=m_pad, cols=c_in)
-            rec["paths"][pname] = {"us": t * 1e6,
-                                   "gathered_intermediate_bytes": g_bytes}
-            rows.append(csv_row(
-                f"rulebook_exec/{name}/{pname}", t * 1e6,
-                f"impl={impl};m_pad={m_pad};gathered_bytes={g_bytes}"))
-        assert rec["paths"]["fused"]["gathered_intermediate_bytes"] == 0, (
-            "fused path must not materialize the (M_pad, Cin) gather")
-        assert rec["paths"]["materialized"]["gathered_intermediate_bytes"] > 0
+
+def run(full: bool = True, smoke: bool = False) -> list[str]:
+    impl = "interpret" if smoke else sg_ops.kernel_impl()
+    # op/byte accounting audits the *kernel* path (compiled on TPU,
+    # interpreted elsewhere); the oracle 'ref' impl materializes by
+    # construction.
+    kimpl = "interpret" if smoke else sg_ops.hardware_impl()
+    rows, records = [], []
+    if smoke:
+        cases = [("smoke", _smoke_case(), 8, 32)]
+    else:
+        names = list(BENCHMARKS) if full else ["Det(k)"]
+        cases = [(nm, _workload_case(nm), 128, None) for nm in names]
+    for name, (feats, w, kmap), bm, bo in cases:
+        rec = {"workload": name,
+               **_case(feats, w, kmap, bm=bm, bo=bo, kimpl=kimpl,
+                       impl=impl)}
         records.append(rec)
+        for pname, p in rec["paths"].items():
+            rows.append(csv_row(
+                f"rulebook_exec/{name}/{pname}", p["us"],
+                f"impl={impl};m_pad={rec['m_pad']};"
+                f"gathered_bytes={p['gathered_intermediate_bytes']};"
+                f"hbm_model_bytes={p['hbm_model_bytes']}"))
+        rows.append(csv_row(
+            f"rulebook_exec/{name}/bandwidth_ratio",
+            rec["bandwidth_ratio"],
+            f"contig_run_tiles={rec['contig_run_tiles']}/{rec['n_tiles']}"))
     with open(OUT_JSON, "w") as f:
         json.dump(records, f, indent=2)
     return rows

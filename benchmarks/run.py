@@ -3,19 +3,42 @@
 Prints ``name,us_per_call,derived`` CSV rows. REPRO_BENCH_FAST=1 runs the
 reduced sweep (CI); the full sweep reproduces every claim band in
 EXPERIMENTS.md §Paper-fidelity.
+
+``--smoke`` runs only the rulebook-execution suite in Pallas interpret
+mode on tiny shapes: it exercises the whole fused-kernel contract (jaxpr
+audits + parity against the XLA oracle) in seconds and exits nonzero on
+any parity drift — the CI gate wired into scripts/ci.sh.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape interpret-mode rulebook_exec only; "
+                         "fails on parity drift")
+    args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
     from benchmarks import (caching_energy, overall_comparison,
                             rulebook_exec, search_speedup, sparsity_saving,
                             weight_distribution)
+
+    if args.smoke:
+        print("name,us_per_call,derived")
+        try:
+            for row in rulebook_exec.run(smoke=True):
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("rulebook_exec_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("rulebook_exec_smoke,0.0,OK", flush=True)
+        return
 
     suites = [
         ("fig9a_search", search_speedup.run),

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the rulebook-execution smoke benchmark.
+#
+#   scripts/ci.sh            # full tier-1 suite, then the smoke gate
+#   scripts/ci.sh --fast     # -x (stop at first failure) for quick loops
+#
+# The smoke benchmark (benchmarks/run.py --smoke) runs the fused
+# output-stationary kernel in Pallas interpret mode on tiny shapes and
+# exits nonzero on parity drift against the XLA rulebook oracle or on any
+# fusion-audit regression (materialized gather / post-kernel scatter-add /
+# partial-product array reappearing in the fused path's jaxpr).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-x)
+fi
+
+echo "== tier-1 tests =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== rulebook smoke benchmark =="
+python -m benchmarks.run --smoke
+
+echo "CI OK"

@@ -112,10 +112,12 @@ def _maybe_cached(cache: PlanCache | None, arrays, statics, build):
 
 def subm3_plan(coords, batch, valid, *, max_blocks: int,
                method: str = "octree", grid_bits: int = 7,
-               batch_bits: int = 4, bm: int = 128,
+               batch_bits: int = 4, bm: int = 128, bo: int | None = None,
                cache: PlanCache | None = None) -> ConvPlan:
-    """Submanifold 3x3x3 plan: outputs == inputs, 27 taps."""
-    statics = ("subm3", max_blocks, method, grid_bits, batch_bits, bm)
+    """Submanifold 3x3x3 plan: outputs == inputs, 27 taps. ``bo`` is the
+    output-block height of the output-stationary tile layout (DESIGN.md
+    §5/§6); None picks the build default."""
+    statics = ("subm3", max_blocks, method, grid_bits, batch_bits, bm, bo)
 
     def build():
         MAPSEARCH_CALLS[0] += 1
@@ -140,7 +142,7 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
                 grid_bits=grid_bits, batch_bits=batch_bits)
         else:
             raise ValueError(f"unknown map search method {method!r}")
-        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo)
         return ConvPlan("subm3", kmap, tiles, coords.shape[0], 27,
                         None, None, None, None)
 
@@ -148,10 +150,10 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
 
 
 def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
-                batch_bits: int = 4, bm: int = 128,
+                batch_bits: int = 4, bm: int = 128, bo: int | None = None,
                 cache: PlanCache | None = None) -> ConvPlan:
     """Gconv2 (k=2, s=2) plan: octant taps to octree parents (§IV-D1)."""
-    statics = ("gconv2", grid_bits, batch_bits, bm)
+    statics = ("gconv2", grid_bits, batch_bits, bm, bo)
 
     def build():
         MAPSEARCH_CALLS[0] += 1
@@ -160,7 +162,7 @@ def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
                                            batch_bits=batch_bits)
         n = coords.shape[0]
         kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
-        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo)
         return ConvPlan("gconv2", kmap, tiles, n, 8,
                         maps.out_coords, maps.out_batch, maps.out_valid, maps)
 
@@ -169,7 +171,8 @@ def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
 
 def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
                 batch_bits: int = 4, out_budget: int | None = None,
-                bm: int = 128, with_tiles: bool = True,
+                bm: int = 128, bo: int | None = None,
+                with_tiles: bool = True,
                 cache: PlanCache | None = None) -> ConvPlan:
     """Gconv3 (k=3, s=2) plan (§IV-D3). Carries the scatter maps so the
     input-stationary dataflow can execute from the same plan;
@@ -179,7 +182,7 @@ def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
     coordinate set costs a second search rather than returning a plan
     without the tiles the output-stationary path needs."""
     budget = out_budget if out_budget is not None else coords.shape[0]
-    statics = ("gconv3", grid_bits, batch_bits, budget, bm, with_tiles)
+    statics = ("gconv3", grid_bits, batch_bits, budget, bm, bo, with_tiles)
 
     def build():
         MAPSEARCH_CALLS[0] += 1
@@ -188,8 +191,8 @@ def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
                                            batch_bits=batch_bits,
                                            out_budget=budget)
         kmap = mapsearch.strided_to_kmap(maps, n_out=budget, n_taps=27)
-        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm) if with_tiles \
-            else None
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo) \
+            if with_tiles else None
         return ConvPlan("gconv3", kmap, tiles, budget, 27,
                         maps.out_coords, maps.out_batch, maps.out_valid, maps)
 
@@ -197,18 +200,18 @@ def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
 
 
 def tconv2_plan(gconv2_maps: StridedMaps, target_coords, target_batch,
-                target_valid, *, bm: int = 128,
+                target_valid, *, bm: int = 128, bo: int | None = None,
                 cache: PlanCache | None = None) -> ConvPlan:
     """Tconv2 plan: transposes the paired Gconv2 maps (§IV-D2 — map *reuse*,
     so this never counts as a map search)."""
-    statics = ("tconv2", bm)
+    statics = ("tconv2", bm, bo)
 
     def build():
         maps = mapsearch.transpose_maps(gconv2_maps, target_coords,
                                         target_batch, target_valid)
         n = target_valid.shape[0]
         kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
-        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm)
+        tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo)
         return ConvPlan("tconv2", kmap, tiles, n, 8,
                         target_coords, target_batch, target_valid, maps)
 

@@ -14,7 +14,11 @@ Arranger scatters. Here that is three executable paths:
     framework-level face of the non-uniform caching strategy (§V-C):
     weight-stationary processing of the hottest taps first means W_center /
     W_mid are fetched once and stay resident. Wired into the tile layout by
-    kernels/spconv_gemm/ops.build_tap_tiles (DESIGN.md §5).
+    kernels/spconv_gemm/ops.build_tap_tiles (DESIGN.md §5), which since the
+    output-stationary rework applies the schedule *within each bo-row
+    output block* so the fused kernel can also accumulate each block's
+    partial sums on chip (:func:`blocked_tap_counts` gives the per-block
+    histogram that layout pads against).
 """
 from __future__ import annotations
 
@@ -35,6 +39,21 @@ def tap_counts(kmap: jnp.ndarray) -> jnp.ndarray:
 def tap_schedule(counts: jnp.ndarray) -> jnp.ndarray:
     """Descending-count tap order (hot taps first => maximal weight reuse)."""
     return jnp.argsort(-counts)
+
+
+def blocked_tap_counts(kmap: jnp.ndarray, bo: int) -> jnp.ndarray:
+    """(n_blocks, K) histogram of maps per (bo-row output block, tap).
+
+    The output-stationary tile layout pads each of these groups to a bm
+    multiple; benchmarks use the histogram to model the padding overhead
+    and the per-block weight refetch count of the fused kernel."""
+    n_out, k = kmap.shape
+    n_blocks = -(-n_out // bo)
+    block = jnp.repeat(jnp.arange(n_out, dtype=jnp.int32) // bo, k)
+    taps = jnp.tile(jnp.arange(k, dtype=jnp.int32), n_out)
+    key = jnp.where(kmap.reshape(-1) >= 0, block * k + taps, n_blocks * k)
+    return jnp.bincount(key, length=n_blocks * k + 1)[:-1].reshape(
+        n_blocks, k)
 
 
 @partial(jax.jit, static_argnames=("unroll",))

@@ -68,7 +68,8 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
                batch_bits: int = 4, spac: bool = True,
                plan: planlib.ConvPlan | None = None,
                cache: planlib.PlanCache | None = None,
-               impl: str | None = None, bm: int = 128) -> SparseTensor:
+               impl: str | None = None, bm: int = 128,
+               bo: int | None = None) -> SparseTensor:
     """Submanifold 3x3x3 SpConv (Subm3): coordinates unchanged (Fig. 2).
 
     Pass ``cache`` to share map search across stacked blocks on the same
@@ -78,7 +79,7 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
         plan = planlib.subm3_plan(st.coords, st.batch, st.valid,
                                   max_blocks=max_blocks, method=method,
                                   grid_bits=grid_bits, batch_bits=batch_bits,
-                                  bm=bm, cache=cache)
+                                  bm=bm, bo=bo, cache=cache)
     out = planlib.execute(plan, st.feats, params["w"], params["b"],
                           spac=spac, impl=impl)
     out = jnp.where(st.valid[:, None], out, 0)
@@ -88,7 +89,9 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
 def gconv2(st: SparseTensor, params: dict, *, grid_bits: int = 7,
            batch_bits: int = 4, plan: planlib.ConvPlan | None = None,
            cache: planlib.PlanCache | None = None, impl: str | None = None,
-           bm: int = 128) -> tuple[SparseTensor, mapsearch.StridedMaps]:
+           bm: int = 128,
+           bo: int | None = None) -> tuple[SparseTensor,
+                                           mapsearch.StridedMaps]:
     """Generalized 2x2x2 stride-2 SpConv (downsampling). Output-stationary:
     each octree parent gathers its children through octant taps (§IV-D1).
 
@@ -97,7 +100,8 @@ def gconv2(st: SparseTensor, params: dict, *, grid_bits: int = 7,
     if plan is None:
         plan = planlib.gconv2_plan(st.coords, st.batch, st.valid,
                                    grid_bits=grid_bits,
-                                   batch_bits=batch_bits, bm=bm, cache=cache)
+                                   batch_bits=batch_bits, bm=bm, bo=bo,
+                                   cache=cache)
     out = planlib.execute(plan, st.feats, params["w"], params["b"],
                           spac=False, impl=impl)
     out = jnp.where(plan.out_valid[:, None], out, 0)
@@ -110,7 +114,9 @@ def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
            batch_bits: int = 4, dataflow: str = "output_stationary",
            plan: planlib.ConvPlan | None = None,
            cache: planlib.PlanCache | None = None, impl: str | None = None,
-           bm: int = 128) -> tuple[SparseTensor, mapsearch.StridedMaps]:
+           bm: int = 128,
+           bo: int | None = None) -> tuple[SparseTensor,
+                                           mapsearch.StridedMaps]:
     """Generalized 3x3x3 stride-2 SpConv. The paper runs this input-
     stationary (§IV-D3); both dataflows are provided and agree bit-for-bit
     (tests) — the output-stationary one is the TPU perf path (pure gathers,
@@ -120,7 +126,7 @@ def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
         plan = planlib.gconv3_plan(st.coords, st.batch, st.valid,
                                    grid_bits=grid_bits,
                                    batch_bits=batch_bits,
-                                   out_budget=st.n_max, bm=bm,
+                                   out_budget=st.n_max, bm=bm, bo=bo,
                                    with_tiles=dataflow != "input_stationary",
                                    cache=cache)
     m = plan.n_out
@@ -139,12 +145,12 @@ def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
 def tconv2(st: SparseTensor, params: dict, gconv2_maps: mapsearch.StridedMaps,
            target: SparseTensor, *, plan: planlib.ConvPlan | None = None,
            cache: planlib.PlanCache | None = None, impl: str | None = None,
-           bm: int = 128) -> SparseTensor:
+           bm: int = 128, bo: int | None = None) -> SparseTensor:
     """Transposed 2x2x2 stride-2 SpConv: recovers the coordinate set from
     before the paired Gconv2 by transposing its maps (§IV-D2)."""
     if plan is None:
         plan = planlib.tconv2_plan(gconv2_maps, target.coords, target.batch,
-                                   target.valid, bm=bm, cache=cache)
+                                   target.valid, bm=bm, bo=bo, cache=cache)
     out = planlib.execute(plan, st.feats, params["w"], params["b"],
                           spac=False, impl=impl)
     out = jnp.where(target.valid[:, None], out, 0)

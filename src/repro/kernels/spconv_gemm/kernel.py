@@ -1,31 +1,33 @@
 """Pallas TPU kernels: tap-grouped (ragged) gather-GEMM for SpConv.
 
-The SPAC core + non-uniform caching (paper §V) mapped onto the MXU:
+The SPAC pipeline of paper §V (gather / MAC / arrangement stages overlapped,
+output-stationary partial sums on chip) mapped onto the MXU:
 
-  * the 16x16 MAC array becomes (bm x C_in) @ (C_in x bn) MXU tiles;
-  * the rulebook is pre-sorted by weight tap and padded so every m-tile is
-    single-tap; ``tile_tap`` (scalar-prefetched) drives the *weight*
-    BlockSpec index_map, so consecutive tiles of the same hot tap (W_center,
-    W_mid — 45-83 % of maps, Fig. 8(a)) reuse the VMEM-resident weight block
-    with zero HBM re-fetch. Tap scheduling hottest-first makes those runs
-    maximally long — the non-uniform caching strategy as a BlockSpec.
+  * the 16x16 MAC array becomes (bm x bk) @ (bk x bn) MXU tiles;
+  * the rulebook is pre-sorted output-block-major, tap-minor (hottest tap
+    first within each block) and padded so every m-tile is single-tap and
+    single-output-block; ``tile_tap`` (scalar-prefetched) drives the
+    *weight* BlockSpec index_map so consecutive tiles of the same tap reuse
+    the VMEM-resident weight block, and ``tile_ob`` drives the *output*
+    BlockSpec so a run of tiles targeting the same output block accumulates
+    into one VMEM-resident output block (the Ofmap Arranger, §V-A).
   * ``tile_nz`` marks tiles that are all padding or whose gathered rows are
-    all zero (post-ReLU): the whole MXU tile is skipped via @pl.when — the
-    SPAC elision at tile grain.
+    all zero (post-ReLU): compute AND row DMAs are skipped via @pl.when —
+    the SPAC elision at tile grain.
 
 Two entry points (DESIGN.md §6):
 
-  * :func:`spconv_gemm`       — takes a pre-gathered, bm-padded lhs. The
-    original materialized form: the caller pays an (M_pad, C_in) HBM
-    intermediate for the gather.
-  * :func:`spconv_gemm_fused` — takes the *full* feature array plus the
-    scalar-prefetched per-slot gather indices; rows are pulled straight out
-    of HBM by per-row DMA into a VMEM scratch, so the (M_pad, C_in) gathered
-    copy never exists and skipped tiles are never fetched at all. This is
-    the default execution backend (core/plan.py).
-
-Grid: (m_tiles, n_tiles); C_in is kept whole per tile (SpConv channel widths
-are <= 512 in the paper's benchmarks; ops.py asserts the VMEM budget).
+  * :func:`spconv_gemm`       — takes a pre-gathered, bm-padded lhs and
+    returns (M_pad, Cout) partial products for an external scatter-add.
+    The original materialized baseline.
+  * :func:`spconv_gemm_fused` — the default execution backend
+    (core/plan.py). Takes the *full* feature array plus scalar-prefetched
+    gather indices and per-tile run metadata; rows are pulled straight out
+    of HBM by double-buffered DMAs (tile r+1's copies fly while tile r
+    computes), C_in is processed in bk-sized blocks with an f32 VMEM
+    accumulator, and partial sums are scatter-added *inside the kernel*
+    into the output block — neither the (M_pad, C_in) gathered copy nor
+    the (M_pad, C_out) partial-product array ever exists in HBM.
 """
 from __future__ import annotations
 
@@ -37,6 +39,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import tpu_compiler_params
+
+# Contiguity metadata granularity: gather runs are detected per GRP-slot
+# group at plan-build time (ops.build_tap_tiles); a contiguous group is one
+# strided DMA instead of GRP per-row DMAs, and a whole-tile run is a single
+# bm-row DMA. Must divide bm (ops asserts); bm/GRP <= 32 so the per-tile
+# masks fit int32.
+GRP = 8
 
 
 def _kernel(tile_tap_ref, tile_nz_ref, lhs_ref, w_ref, out_ref):
@@ -60,7 +69,7 @@ def spconv_gemm(lhs: jnp.ndarray, weights: jnp.ndarray,
                 tile_tap: jnp.ndarray, tile_nz: jnp.ndarray,
                 *, bm: int = 128, bn: int = 128,
                 interpret: bool = False) -> jnp.ndarray:
-    """lhs (M, Cin) pre-gathered rows (tap-sorted, bm-padded); weights
+    """lhs (M, Cin) pre-gathered rows (tile-sorted, bm-padded); weights
     (K, Cin, Cout); tile_tap/tile_nz (M/bm,). Returns (M, Cout) partial
     products, one row per map, ready for the scatter-add."""
     m, c_in = lhs.shape
@@ -90,78 +99,217 @@ def spconv_gemm(lhs: jnp.ndarray, weights: jnp.ndarray,
     )(tile_tap, tile_nz, lhs, weights)
 
 
-def _fused_kernel(tile_tap_ref, tile_nz_ref, gather_idx_ref,
-                  feats_ref, w_ref, out_ref, rows_ref, sem, *, bm: int):
+def _row_dmas(do, gidx_ref, tile_run_ref, grp_skip_ref, grp_contig_ref,
+              feats_ref, rows_ref, sem, i2, k2, slot, *, bm, bk, grp):
+    """Start or wait the gather DMAs of tile ``i2``, Cin-block ``k2`` into
+    buffer ``slot``. The wait path mirrors the start path exactly (same
+    descriptors on the same semaphore), so starts and waits always balance.
+
+    Copy granularity is chosen from the plan-build run metadata: a
+    whole-tile run is one bm-row strided copy; a contiguous GRP-slot group
+    is one GRP-row copy; everything else falls back to per-row copies.
+    Groups with no valid slot are skipped entirely — their (garbage) rows
+    are dropped by the in-kernel scatter, so they cost no bandwidth at all.
+    """
+    base = i2 * bm
+    col = k2 * bk
+
+    def cp(nrows, src_row, dst_row):
+        c = pltpu.make_async_copy(
+            feats_ref.at[pl.ds(src_row, nrows), pl.ds(col, bk)],
+            rows_ref.at[slot, pl.ds(dst_row, nrows)],
+            sem.at[slot])
+        c.start() if do == "start" else c.wait()
+
+    run = tile_run_ref[i2] != 0
+
+    @pl.when(run)
+    def _whole_tile():
+        cp(bm, gidx_ref[base], 0)
+
+    @pl.when(~run)
+    def _grouped():
+        for g in range(bm // grp):
+            live = ((grp_skip_ref[i2] >> g) & 1) == 0
+            contig = ((grp_contig_ref[i2] >> g) & 1) != 0
+
+            @pl.when(live & contig)
+            def _one_copy(g=g):
+                cp(grp, gidx_ref[base + g * grp], g * grp)
+
+            @pl.when(live & ~contig)
+            def _per_row(g=g):
+                for r in range(grp):
+                    cp(1, gidx_ref[base + g * grp + r], g * grp + r)
+
+
+def _os_kernel(tile_tap_ref, tile_nz_ref, tile_ob_ref, tile_first_ref,
+               tile_run_ref, grp_skip_ref, grp_contig_ref, gidx_ref,
+               scat_ref, feats_ref, w_ref, out_ref, rows_ref, acc_ref, sem,
+               *, bm: int, bn: int, bo: int, grp: int):
     i = pl.program_id(0)
-    j = pl.program_id(1)
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    n_m = pl.num_programs(0)
+    n_k = pl.num_programs(1)
+    n_n = pl.num_programs(2)
+    bk = rows_ref.shape[-1]
+    s = i * n_k + k                   # DMA step: one rows-block per (i, k)
+    slot = s % 2
 
-    # Gather once per m-tile (at the first n-step) straight from the full
-    # feature array in HBM, driven by the scalar-prefetched slot indices.
-    # Skipped tiles are never fetched — SPAC elision saves the DMA too.
-    @pl.when((tile_nz_ref[i] != 0) & (j == 0))
-    def _gather():
-        def body(r, _):
-            src = gather_idx_ref[i * bm + r]
-            cp = pltpu.make_async_copy(
-                feats_ref.at[pl.ds(src, 1)], rows_ref.at[pl.ds(r, 1)], sem)
-            cp.start()
-            cp.wait()
-            return 0
-        jax.lax.fori_loop(0, bm, body, 0)
+    dmas = functools.partial(
+        _row_dmas, gidx_ref=gidx_ref, tile_run_ref=tile_run_ref,
+        grp_skip_ref=grp_skip_ref, grp_contig_ref=grp_contig_ref,
+        feats_ref=feats_ref, rows_ref=rows_ref, sem=sem,
+        bm=bm, bk=bk, grp=grp)
 
-    @pl.when(tile_nz_ref[i] != 0)
+    nz = tile_nz_ref[i] != 0
+
+    # -- gather stage, double-buffered: step s+1's copies are started before
+    # step s's compute, so the next tile/Cin-block fetch overlaps the MACs.
+    # Skipped tiles start no copies and wait on none; slot parity stays
+    # consistent because start and wait are gated by the same tile_nz entry.
+    @pl.when(j == 0)
+    def _dma_schedule():
+        @pl.when((s == 0) & nz)
+        def _warmup():
+            dmas(do="start", i2=i, k2=k, slot=slot)
+
+        s1 = s + 1
+        i1 = jnp.minimum(s1 // n_k, n_m - 1)
+
+        @pl.when((s1 < n_m * n_k) & (tile_nz_ref[i1] != 0))
+        def _prefetch_next():
+            dmas(do="start", i2=i1, k2=s1 % n_k, slot=s1 % 2)
+
+        @pl.when(nz)
+        def _arrived():
+            dmas(do="wait", i2=i, k2=k, slot=slot)
+
+    # -- MAC stage: (bm, bk) @ (bk, bn) MXU tiles, f32 accumulation over the
+    # Cin blocks in a VMEM scratch (never written back to HBM)
+    @pl.when(nz)
     def _compute():
-        out_ref[...] = jax.lax.dot_general(
-            rows_ref[...], w_ref[0],
+        partial = jax.lax.dot_general(
+            rows_ref[slot], w_ref[0],
             (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).astype(out_ref.dtype)
+            preferred_element_type=jnp.float32)
 
-    @pl.when(tile_nz_ref[i] == 0)
-    def _skip():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[:, pl.ds(j * bn, bn)] = partial
+
+        @pl.when(k > 0)
+        def _accum():
+            acc_ref[:, pl.ds(j * bn, bn)] += partial
+
+    # -- arrangement stage: once per tile (at its last grid step), scatter
+    # the accumulated (bm, Cout) partial sums into the output block that
+    # owns this tile. Consecutive tiles of the same output block revisit
+    # the same out_ref index, so the block stays VMEM-resident for the
+    # whole run and is written back to HBM exactly once — the (M_pad, Cout)
+    # partial-product array never exists.
+    @pl.when((k == n_k - 1) & (j == n_n - 1))
+    def _arrange():
+        first = tile_first_ref[i] != 0
+
+        @pl.when(first & ~nz)
+        def _open_empty():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        @pl.when(nz)
+        def _scatter():
+            # local row of each slot inside this output block; slots whose
+            # target lies outside (padding and SPAC-elided maps) select no
+            # row of the one-hot matrix and are masked before the matmul so
+            # uninitialized gather rows can never poison the output.
+            local = scat_ref[0] - tile_ob_ref[i] * bo
+            inb = (local >= 0) & (local < bo)
+            sel = (jax.lax.broadcasted_iota(jnp.int32, (bo, bm), 0)
+                   == local[None, :]) & inb[None, :]
+            contrib = jax.lax.dot_general(
+                sel.astype(jnp.float32),
+                jnp.where(inb[:, None], acc_ref[...], 0.0),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+            @pl.when(first)
+            def _open():
+                out_ref[...] = contrib
+
+            @pl.when(~first)
+            def _add():
+                out_ref[...] += contrib
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bo", "bk", "n_out_pad",
+                              "interpret"))
 def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
-                      gather_idx: jnp.ndarray, tile_tap: jnp.ndarray,
-                      tile_nz: jnp.ndarray, *, bm: int = 128, bn: int = 128,
-                      interpret: bool = False) -> jnp.ndarray:
-    """Gather-fused rulebook GEMM: feats (N, Cin) stays whole in HBM;
-    gather_idx (M_pad,) maps each slot to its source row (0 for padding —
-    pad slots scatter to the drop row downstream, so their garbage partial
-    products are inert); tile_tap/tile_nz (M_pad/bm,) as in
-    :func:`spconv_gemm`. Returns (M_pad, Cout) partial products."""
+                      gather_idx: jnp.ndarray, scatter_idx: jnp.ndarray,
+                      tile_tap: jnp.ndarray, tile_nz: jnp.ndarray,
+                      tile_ob: jnp.ndarray, tile_first: jnp.ndarray,
+                      tile_run: jnp.ndarray, grp_skip: jnp.ndarray,
+                      grp_contig: jnp.ndarray, *, bm: int = 128,
+                      bn: int = 128, bo: int = 128, bk: int | None = None,
+                      n_out_pad: int, interpret: bool = False) -> jnp.ndarray:
+    """Output-stationary gather-fused rulebook GEMM (DESIGN.md §6).
+
+    feats (N, Cin) stays whole in HBM; gather_idx (M_pad,) maps each slot to
+    its source row; scatter_idx (M_pad,) maps it to its output row, which by
+    the ops.build_tap_tiles layout contract falls inside the bo-row output
+    block ``tile_ob[t]`` of its tile (or outside every block, for padding —
+    those slots are dropped in-kernel). tile_first flags the opening tile of
+    each output-block run; tile_run / grp_skip / grp_contig carry the
+    plan-built gather-run metadata (whole-tile runs, per-GRP-group
+    contiguity and liveness bitmasks). Returns the scattered (n_out_pad,
+    Cout) output — no (M_pad, Cin) gather copy, no (M_pad, Cout) partials.
+    """
     _, c_in = feats.shape
-    k, _, c_out = weights.shape
+    k_taps, _, c_out = weights.shape
     m = gather_idx.shape[0]
+    bk = c_in if bk is None else bk
     assert m % bm == 0 and c_out % bn == 0, (m, bm, c_out, bn)
-    n_m, n_n = m // bm, c_out // bn
-    assert tile_tap.shape[0] == n_m and tile_nz.shape[0] == n_m
+    assert c_in % bk == 0, (c_in, bk)
+    assert n_out_pad % bo == 0, (n_out_pad, bo)
+    grp = GRP if bm % GRP == 0 else bm
+    assert bm // grp <= 32, (bm, grp)
+    n_m, n_k, n_n = m // bm, c_in // bk, c_out // bn
+    for t in (tile_tap, tile_nz, tile_ob, tile_first, tile_run, grp_skip,
+              grp_contig):
+        assert t.shape[0] == n_m, (t.shape, n_m)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(n_m, n_n),
+        num_scalar_prefetch=8,
+        grid=(n_m, n_k, n_n),
         in_specs=[
+            # per-slot output targets as a VMEM row per tile (vector read;
+            # the scalar-prefetch SMEM copy only feeds address computation)
+            pl.BlockSpec((1, bm),
+                         lambda i, k, j, *pf: (i, 0)),
             # full feature array, un-blocked: rows are DMA'd on demand
             pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((1, c_in, bn),
-                         lambda i, j, tap, nz, gi: (tap[i], 0, j)),
+            # weight block chosen by the prefetched tap id and the Cin block
+            pl.BlockSpec((1, bk, bn),
+                         lambda i, k, j, tap, *pf: (tap[i], k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, tap, nz, gi: (i, j)),
+        out_specs=pl.BlockSpec(
+            (bo, c_out), lambda i, k, j, tap, nz, ob, *pf: (ob[i], 0)),
         scratch_shapes=[
-            pltpu.VMEM((bm, c_in), feats.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, bm, bk), feats.dtype),
+            pltpu.VMEM((bm, c_out), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_fused_kernel, bm=bm),
+        functools.partial(_os_kernel, bm=bm, bn=bn, bo=bo, grp=grp),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, c_out), feats.dtype),
-        # the gathered scratch is reused across n-steps of the same m-tile,
-        # so the inner dimension must execute in order
+        out_shape=jax.ShapeDtypeStruct((n_out_pad, c_out), feats.dtype),
+        # rows / acc scratch and the output block are carried across grid
+        # steps, so every dimension must execute in order
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="spconv_gemm_fused",
-    )(tile_tap, tile_nz, gather_idx, feats, weights)
+    )(tile_tap, tile_nz, tile_ob, tile_first, tile_run, grp_skip, grp_contig,
+      gather_idx, scatter_idx.reshape(n_m, bm), feats, weights)

@@ -1,22 +1,33 @@
-"""jit'd wrappers: kmap -> tap-sorted ragged tiles -> kernel -> scatter-add.
+"""jit'd wrappers: kmap -> output-blocked tap tiles -> fused kernel.
 
 ``build_tap_tiles`` is the Top Control Unit of Fig. 4 in data-parallel form:
-it turns the (N_out, K) kernel map into per-tap contiguous, bm-padded
-gather/scatter streams plus the scalar-prefetch metadata the kernel needs.
-Tap segments are laid out hottest-first (rulebook.tap_schedule, §V-C), so
-same-tap tile runs are maximal and the kernel's weight BlockSpec keeps the
-hot block (W_center / W_mid) VMEM-resident for the longest possible stretch.
+it turns the (N_out, K) kernel map into bm-padded gather/scatter streams
+plus the scalar-prefetch metadata the kernel needs. The layout is
+**output-block-major, tap-minor** (DESIGN.md §5): maps are grouped by the
+bo-row output block of their target, and within a block the tap segments
+are laid out hottest-first (rulebook.tap_schedule, §V-C). Every tile is
+single-tap and single-output-block, so the kernel can keep the tap's weight
+block VMEM-resident across a tap run *and* accumulate a block's partial
+sums on chip across its whole run of tiles (output-stationary, §V-A).
+Contiguous gather-index runs are detected here and recorded as per-tile
+metadata (``tile_run`` for whole-tile runs, ``grp_contig``/``grp_skip``
+bitmasks at GRP-slot granularity) so the kernel batches them into single
+strided DMAs.
 
 Execution comes in two forms (DESIGN.md §5, §6):
 
   * :func:`apply_kmap`       — materialized gather: an (M_pad, Cin) gathered
-    copy of the features is built in HBM and fed to ``spconv_gemm``.
-  * :func:`apply_kmap_fused` / :func:`apply_tiles` — gather-fused: the
-    kernel pulls rows straight from the full feature array via
-    scalar-prefetched indices (``spconv_gemm_fused``); no gathered
-    intermediate is ever allocated. ``apply_tiles`` additionally accepts
-    pre-built geometry tiles so a cached ConvPlan (core/plan.py) can skip
-    the whole sort/pad stage and only refresh tile liveness per layer.
+    copy of the features is built in HBM and fed to ``spconv_gemm``, with an
+    XLA scatter-add after. Kept as the comparison baseline.
+  * :func:`apply_kmap_fused` / :func:`apply_tiles` — gather-fused,
+    output-stationary: the kernel pulls rows straight from the full feature
+    array via double-buffered DMAs and scatter-adds in-kernel
+    (``spconv_gemm_fused``); neither the gathered intermediate nor the
+    (M_pad, Cout) partial products ever exist. ``apply_tiles`` additionally
+    accepts pre-built geometry tiles so a cached ConvPlan (core/plan.py)
+    can skip the whole sort/pad stage and only refresh tile liveness per
+    layer, and it picks the Cin block size ``bk`` from the DESIGN.md §6
+    VMEM budget automatically.
 
 The identical machinery drives ragged MoE dispatch (models/moe.py) — the
 paper's rulebook *is* an expert-dispatch table (DESIGN.md §5).
@@ -33,9 +44,14 @@ import jax.numpy as jnp
 
 from repro.core import rulebook as _rulebook
 from repro.core import sparsity as _sparsity
-from repro.kernels.spconv_gemm.kernel import spconv_gemm, spconv_gemm_fused
+from repro.kernels.spconv_gemm.kernel import (GRP, spconv_gemm,
+                                              spconv_gemm_fused)
 from repro.kernels.spconv_gemm.ref import (spconv_gemm_fused_ref,
                                            spconv_gemm_ref)
+
+#: VMEM working-set budget for the fused kernel (DESIGN.md §6): rows double
+#: buffer + weight block + f32 accumulator + resident output block.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
 def kernel_impl() -> str:
@@ -58,30 +74,58 @@ def hardware_impl() -> str:
 
 
 class TapTiles(NamedTuple):
-    gather_idx: jnp.ndarray    # (M_pad,) source row per map slot (0 for pad)
-    scatter_idx: jnp.ndarray   # (M_pad,) output row per map slot
-    slot_valid: jnp.ndarray    # (M_pad,) bool
-    tile_tap: jnp.ndarray      # (T,) weight tap per m-tile
-    tile_nz: jnp.ndarray       # (T,) 0 => tile skippable
+    """Output-blocked, tap-scheduled tile streams plus run metadata.
+
+    All per-slot arrays are (M_pad,), all per-tile arrays (T,) with
+    T = M_pad / bm. ``bo`` is the static output-block height the layout was
+    built for (a plain int: it never crosses a jit boundary — execution
+    configs carry it as a static).
+    """
+    gather_idx: jnp.ndarray    # source row per map slot (0 for pad)
+    scatter_idx: jnp.ndarray   # output row per map slot (n_out_pad for pad
+                               # — outside every output block, see build)
+    slot_valid: jnp.ndarray    # bool
+    tile_tap: jnp.ndarray      # weight tap per m-tile
+    tile_nz: jnp.ndarray       # 0 => tile skippable
+    tile_ob: jnp.ndarray       # output block per m-tile (monotone)
+    tile_first: jnp.ndarray    # 1 => opens its output block's run
+    tile_run: jnp.ndarray      # 1 => whole tile is one contiguous gather run
+    grp_skip: jnp.ndarray      # bitmask: GRP-group has no valid slot
+    grp_contig: jnp.ndarray    # bitmask: GRP-group is one contiguous run
+    bo: int                    # static output block rows
 
     @property
     def bm(self) -> int:
         return self.gather_idx.shape[0] // self.tile_tap.shape[0]
 
+    @property
+    def n_tiles(self) -> int:
+        return self.tile_tap.shape[0]
 
-def _padded_budget(n_out: int, k: int, bm: int) -> int:
-    # every tap may waste up to bm-1 slots to padding
-    return ((n_out * k + k * (bm - 1)) // bm + 1) * bm
+
+def _padded_budget(n_out: int, k: int, bm: int, bo: int) -> int:
+    # every (output block, tap) group may waste up to bm-1 slots to padding,
+    # and empty output blocks force one all-pad tile each so the kernel
+    # still opens (zeroes) their block
+    n_blocks = -(-n_out // bo)
+    return ((n_out * k + n_blocks * k * (bm - 1)) // bm + 1 + n_blocks) * bm
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "schedule"))
 def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
-                    *, bm: int = 128, schedule: bool = True) -> TapTiles:
-    """Sort maps by tap, pad each tap segment to a bm multiple.
+                    *, bm: int = 128, bo: int | None = None,
+                    schedule: bool = True) -> TapTiles:
+    """Sort maps by (output block, scheduled tap), pad each group to bm.
 
-    ``schedule=True`` orders the tap segments hottest-first
-    (rulebook.tap_schedule): the tile stream visits high-map-count taps in
-    one maximal run each, so the kernel's tap-indexed weight block stays
+    ``bo`` is the output-block height of the output-stationary layout;
+    every tile's valid slots target rows of one bo-row block, so the fused
+    kernel can scatter locally. None picks ``max(bm, 512)`` — taller blocks
+    amortize the per-(block, tap) tile padding (each group wastes up to
+    bm-1 slots) while a (bo, Cout) block still fits the §6 VMEM budget.
+
+    ``schedule=True`` orders each block's tap segments hottest-first
+    (rulebook.tap_schedule): within a block the tile stream visits
+    high-map-count taps in one run each, and consecutive blocks meet on the
+    hottest tap, so the kernel's tap-indexed weight block stays
     VMEM-resident longest (§V-C). ``tile_tap`` always carries the *actual*
     tap id per tile, whatever the segment order.
 
@@ -91,8 +135,21 @@ def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
     geometry-only tiles for a cached plan and refresh liveness per layer
     with :func:`tile_liveness` instead.
     """
+    if bo is None:
+        bo = max(bm, 512)
+    arrays = _build_tap_tiles(kmap, row_nz, bm=bm, bo=bo, schedule=schedule)
+    return TapTiles(*arrays, bo=bo)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bo", "schedule"))
+def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule):
     n_out, k = kmap.shape
-    m_pad = _padded_budget(n_out, k, bm)
+    n_blocks = -(-n_out // bo)
+    g_total = n_blocks * k
+    m_pad = _padded_budget(n_out, k, bm, bo)
+    grp = GRP if bm % GRP == 0 else bm
+    n_grp = bm // grp
+    assert n_grp <= 32, (bm, grp)
 
     flat_in = kmap.reshape(-1)
     taps = jnp.tile(jnp.arange(k, dtype=jnp.int32), n_out)
@@ -109,36 +166,68 @@ def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
     srank = jnp.zeros((k,), jnp.int32).at[sched].set(
         jnp.arange(k, dtype=jnp.int32))                 # tap -> schedule rank
 
-    # stable sort by schedule rank with invalid pushed to the end
-    key = jnp.where(valid, srank[taps], k)
-    order = jnp.argsort(key, stable=True)
-    skey = key[order]
-    # rank within segment (counts reindexed into schedule order)
-    scounts = counts[sched]
-    starts = jnp.concatenate([jnp.zeros(1, scounts.dtype),
-                              jnp.cumsum(scounts)])[:k]
-    rank = jnp.arange(n_out * k) - jnp.take(starts, jnp.minimum(skey, k - 1))
-    # padded segment starts
-    pcounts = ((scounts + bm - 1) // bm) * bm
-    pstarts = jnp.concatenate([jnp.zeros(1, pcounts.dtype), jnp.cumsum(pcounts)])
-    slot = jnp.where(skey < k,
-                     jnp.take(pstarts[:k], jnp.minimum(skey, k - 1)) + rank,
+    # group key: output block major, schedule rank minor; invalid at the end
+    gkey = jnp.where(valid, (outs // bo) * k + srank[taps], g_total)
+    order = jnp.argsort(gkey, stable=True)
+    skey = gkey[order]
+    counts_g = jnp.bincount(gkey, length=g_total + 1)[:g_total]
+    gstarts = jnp.concatenate([jnp.zeros(1, counts_g.dtype),
+                               jnp.cumsum(counts_g)])[:g_total]
+    rank = jnp.arange(n_out * k) - jnp.take(
+        gstarts, jnp.minimum(skey, g_total - 1))
+    # padded group starts; empty output blocks force one all-pad tile on
+    # their leading group so the kernel still opens (zeroes) the block
+    pcounts = ((counts_g + bm - 1) // bm) * bm
+    pc2 = pcounts.reshape(n_blocks, k)
+    pc2 = pc2.at[:, 0].add(jnp.where(pc2.sum(1) == 0, bm, 0))
+    pcounts = pc2.reshape(-1)
+    pstarts = jnp.concatenate([jnp.zeros(1, pcounts.dtype),
+                               jnp.cumsum(pcounts)])
+    slot = jnp.where(skey < g_total,
+                     jnp.take(pstarts[:g_total],
+                              jnp.minimum(skey, g_total - 1)) + rank,
                      m_pad)
 
     gather = jnp.zeros((m_pad,), jnp.int32).at[slot].set(
         jnp.maximum(flat_in[order], 0), mode="drop")
-    scatter = jnp.full((m_pad,), n_out, jnp.int32).at[slot].set(
+    # drop target for pad/elided slots: n_out_pad sits OUTSIDE every bo-row
+    # output block (blocks tile [0, n_blocks*bo)), so the kernel's in-block
+    # mask always zeroes such slots before the one-hot matmul — their rows
+    # may be unfetched (garbage) VMEM; n_out itself can fall *inside* the
+    # last block when bo does not divide n_out. The XLA paths drop it via
+    # scatter mode="drop" just the same.
+    scatter = jnp.full((m_pad,), n_blocks * bo, jnp.int32).at[slot].set(
         outs[order], mode="drop")
     svalid = jnp.zeros((m_pad,), bool).at[slot].set(
         valid[order], mode="drop")
 
     t = m_pad // bm
     tile_starts = jnp.arange(t) * bm
-    tile_rank = jnp.searchsorted(pstarts[1:], tile_starts, side="right")
-    tile_tap = sched[jnp.minimum(tile_rank, k - 1)].astype(jnp.int32)
-    # a tile is live iff it holds any valid slot
-    tile_nz = svalid.reshape(t, bm).any(axis=1).astype(jnp.int32)
-    return TapTiles(gather, scatter, svalid, tile_tap, tile_nz)
+    grank = jnp.searchsorted(pstarts[1:], tile_starts, side="right")
+    capped = jnp.minimum(grank, g_total - 1)
+    tile_tap = sched[capped % k].astype(jnp.int32)
+    tile_ob = (capped // k).astype(jnp.int32)
+    v2 = svalid.reshape(t, bm)
+    tile_nz = v2.any(axis=1).astype(jnp.int32)
+    tile_first = jnp.concatenate(
+        [jnp.ones(1, jnp.int32),
+         (tile_ob[1:] != tile_ob[:-1]).astype(jnp.int32)])
+
+    # gather-run metadata: successive-slot contiguity, summarized per tile
+    # and per GRP-slot group so the kernel batches runs into strided DMAs
+    g2 = gather.reshape(t, bm)
+    nxt = (g2[:, 1:] == g2[:, :-1] + 1) & v2[:, 1:] & v2[:, :-1]
+    tile_run = (v2.all(axis=1) & nxt.all(axis=1)).astype(jnp.int32)
+    pair3 = jnp.concatenate([nxt, jnp.ones((t, 1), bool)],
+                            axis=1).reshape(t, n_grp, grp)[..., :grp - 1]
+    v3 = v2.reshape(t, n_grp, grp)
+    bits = (1 << jnp.arange(n_grp, dtype=jnp.int32))
+    grp_contig = ((v3.all(-1) & pair3.all(-1)).astype(jnp.int32)
+                  * bits).sum(-1).astype(jnp.int32)
+    grp_skip = ((~v3.any(-1)).astype(jnp.int32) * bits).sum(-1).astype(
+        jnp.int32)
+    return (gather, scatter, svalid, tile_tap, tile_nz, tile_ob, tile_first,
+            tile_run, grp_skip, grp_contig)
 
 
 def tile_liveness(tiles: TapTiles, row_nz: jnp.ndarray) -> jnp.ndarray:
@@ -154,6 +243,24 @@ def tile_liveness(tiles: TapTiles, row_nz: jnp.ndarray) -> jnp.ndarray:
     return live.reshape(-1, tiles.bm).any(axis=1).astype(jnp.int32)
 
 
+def pick_bk(c_in: int, *, bm: int, bn: int, bo: int, c_out: int,
+            budget_bytes: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest Cin block dividing ``c_in`` that keeps the fused kernel's
+    §6 working set in budget: double-buffered rows (2*bm*bk), the weight
+    block (bk*bn), the f32 accumulator (bm*c_out) and the resident output
+    block (bo*c_out). Caps bk at 512 (the old whole-Cin residency limit) so
+    wide backbones stop relying on whole-Cin VMEM residency; falls back to
+    whole-Cin when nothing divides."""
+    fixed = 4 * (bm * c_out + bo * c_out)
+    for bk in sorted((d for d in range(1, c_in + 1) if c_in % d == 0),
+                     reverse=True):
+        if bk > 512:
+            continue
+        if fixed + 4 * (2 * bm * bk + bk * bn) <= budget_bytes:
+            return bk
+    return c_in
+
+
 def _pad_cout(weights: jnp.ndarray, bn: int) -> jnp.ndarray:
     """Zero-pad the Cout axis to a bn multiple (kernel lane contract);
     callers slice the output back to the true Cout."""
@@ -166,7 +273,12 @@ def _pad_cout(weights: jnp.ndarray, bn: int) -> jnp.ndarray:
 
 def _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
                    *, n_out, bm, bn):
-    """Differentiable pure-XLA math of the fused execution (pre-bias)."""
+    """Differentiable pure-XLA math of the fused execution (pre-bias).
+
+    Mathematically identical to the output-stationary kernel on the first
+    n_out rows: both add, per valid slot, feats[gather] @ W[tap] into
+    out[scatter]; padding lands in the drop row here and in sliced-off
+    block-pad rows there."""
     ps = spconv_gemm_fused_ref(feats, w, gather_idx, tile_tap, tile_nz,
                                bm=bm, bn=bn)
     out = jnp.zeros((n_out + 1, w.shape[-1]), ps.dtype)
@@ -174,32 +286,38 @@ def _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx):
+def _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
+                tile_ob, tile_first, tile_run, grp_skip, grp_contig):
     """Fused-kernel execution with an XLA-math backward (the Pallas kernel
     has no transpose rule; the gradient re-derives through the oracle)."""
-    n_out, bm, bn, interpret = cfg
-    ps = spconv_gemm_fused(feats, w, gather_idx, tile_tap, tile_nz,
-                           bm=bm, bn=bn, interpret=interpret)
-    out = jnp.zeros((n_out + 1, w.shape[-1]), ps.dtype)
-    return out.at[scatter_idx].add(ps, mode="drop")[:n_out]
+    n_out, n_out_pad, bm, bn, bo, bk, interpret = cfg
+    out = spconv_gemm_fused(feats, w, gather_idx, scatter_idx, tile_tap,
+                            tile_nz, tile_ob, tile_first, tile_run,
+                            grp_skip, grp_contig, bm=bm, bn=bn, bo=bo,
+                            bk=bk, n_out_pad=n_out_pad, interpret=interpret)
+    return out[:n_out]
 
 
-def _exec_fused_fwd(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx):
+def _exec_fused_fwd(cfg, feats, w, gather_idx, tile_tap, tile_nz,
+                    scatter_idx, tile_ob, tile_first, tile_run, grp_skip,
+                    grp_contig):
     out = _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz,
-                      scatter_idx)
-    return out, (feats, w, gather_idx, tile_tap, tile_nz, scatter_idx)
+                      scatter_idx, tile_ob, tile_first, tile_run, grp_skip,
+                      grp_contig)
+    return out, (feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
+                 tile_ob, tile_first, tile_run, grp_skip, grp_contig)
 
 
 def _exec_fused_bwd(cfg, res, g):
-    n_out, bm, bn, _ = cfg
-    feats, w, gather_idx, tile_tap, tile_nz, scatter_idx = res
+    n_out, _, bm, bn, *_ = cfg
+    feats, w, gather_idx, tile_tap, tile_nz, scatter_idx, *ints = res
     _, vjp = jax.vjp(
         lambda f, ww: _exec_ref_math(f, ww, gather_idx, tile_tap, tile_nz,
                                      scatter_idx, n_out=n_out, bm=bm, bn=bn),
         feats, w)
     dfeats, dw = vjp(g)
     zeros_i32 = [np.zeros(a.shape, jax.dtypes.float0)
-                 for a in (gather_idx, tile_tap, tile_nz, scatter_idx)]
+                 for a in (gather_idx, tile_tap, tile_nz, scatter_idx, *ints)]
     return (dfeats, dw, *zeros_i32)
 
 
@@ -209,25 +327,34 @@ _exec_fused.defvjp(_exec_fused_fwd, _exec_fused_bwd)
 def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
                 bias: jnp.ndarray | None = None, *, n_out: int,
                 row_nz: jnp.ndarray | None = None, bn: int = 128,
+                bk: int | None = None,
                 impl: str | None = None) -> jnp.ndarray:
     """Execute a rulebook from pre-built tiles (the ConvPlan hot path).
 
-    feats stays un-gathered; the fused kernel (or its oracle) pulls rows by
-    ``tiles.gather_idx``. ``row_nz`` refreshes tile liveness for SPAC; when
-    None the build-time ``tile_nz`` is used as-is. C_out is zero-padded to a
-    bn multiple for the kernel and sliced back afterwards. Differentiable
-    under every impl (the Pallas paths carry a custom VJP that re-derives
-    the gradient through the XLA oracle math).
+    feats stays un-gathered; the output-stationary fused kernel (or its
+    oracle) pulls rows by ``tiles.gather_idx`` and scatter-adds in-kernel.
+    ``row_nz`` refreshes tile liveness for SPAC; when None the build-time
+    ``tile_nz`` is used as-is. C_out is zero-padded to a bn multiple for
+    the kernel and sliced back afterwards; the Cin block ``bk`` is picked
+    from the DESIGN.md §6 VMEM budget unless given. Differentiable under
+    every impl (the Pallas paths carry a custom VJP that re-derives the
+    gradient through the XLA oracle math).
     """
     impl = impl or kernel_impl()
-    bm = tiles.bm
+    bm, bo = tiles.bm, tiles.bo
     tile_nz = tiles.tile_nz if row_nz is None else tile_liveness(tiles, row_nz)
     c_out = weights.shape[-1]
     w = _pad_cout(weights, bn)
     if impl in ("pallas", "interpret"):
-        cfg = (n_out, bm, bn, impl == "interpret")
+        c_out_pad = w.shape[-1]
+        if bk is None:
+            bk = pick_bk(feats.shape[1], bm=bm, bn=bn, bo=bo, c_out=c_out_pad)
+        n_out_pad = -(-n_out // bo) * bo
+        cfg = (n_out, n_out_pad, bm, bn, bo, bk, impl == "interpret")
         out = _exec_fused(cfg, feats, w, tiles.gather_idx, tiles.tile_tap,
-                          tile_nz, tiles.scatter_idx)
+                          tile_nz, tiles.scatter_idx, tiles.tile_ob,
+                          tiles.tile_first, tiles.tile_run, tiles.grp_skip,
+                          tiles.grp_contig)
     elif impl == "ref":
         out = _exec_ref_math(feats, w, tiles.gather_idx, tiles.tile_tap,
                              tile_nz, tiles.scatter_idx, n_out=n_out,
@@ -243,36 +370,40 @@ def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
 def apply_kmap_fused(feats: jnp.ndarray, weights: jnp.ndarray,
                      kmap: jnp.ndarray, bias: jnp.ndarray | None = None, *,
                      spac: bool = True, bm: int = 128, bn: int = 128,
+                     bo: int | None = None, bk: int | None = None,
                      impl: str | None = None) -> jnp.ndarray:
-    """One-shot fused path: build tiles (row elision folded in when
-    ``spac``) and execute without materializing the gathered lhs."""
+    """One-shot fused path: build output-blocked tiles (row elision folded
+    in when ``spac``) and execute without materializing the gathered lhs."""
     impl = impl or kernel_impl()
     row_nz = _sparsity.row_nonzero(feats) if spac else None
-    tiles = build_tap_tiles(kmap, row_nz, bm=bm)
+    tiles = build_tap_tiles(kmap, row_nz, bm=bm, bo=bo)
     return apply_tiles(feats, weights, tiles, bias, n_out=kmap.shape[0],
-                       bn=bn, impl=impl)
+                       bn=bn, bk=bk, impl=impl)
 
 
 def apply_kmap(feats: jnp.ndarray, weights: jnp.ndarray, kmap: jnp.ndarray,
                bias: jnp.ndarray | None = None, *, spac: bool = True,
-               bm: int = 128, bn: int = 128,
+               bm: int = 128, bn: int = 128, bo: int | None = None,
                impl: str | None = None) -> jnp.ndarray:
     """Materialized-gather baseline: semantically identical to
     rulebook.apply_kmap_gather (tested), but pays an (M_pad, Cin) HBM
-    intermediate for the gather. Kept as the comparison point for
+    intermediate for the gather, an (M_pad, Cout) partial-product array,
+    and a post-kernel XLA scatter-add. Kept as the comparison point for
     benchmarks/rulebook_exec.py; the default backend is the fused path."""
     impl = impl or kernel_impl()
+    if bo is None:
+        bo = max(bm, 512)
     return _apply_kmap_materialized(feats, weights, kmap, bias, spac=spac,
-                                    bm=bm, bn=bn, impl=impl)
+                                    bm=bm, bn=bn, bo=bo, impl=impl)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spac", "bm", "bn", "impl"))
+                   static_argnames=("spac", "bm", "bn", "bo", "impl"))
 def _apply_kmap_materialized(feats, weights, kmap, bias=None, *, spac, bm,
-                             bn, impl):
+                             bn, bo, impl):
     n_out = kmap.shape[0]
     row_nz = _sparsity.row_nonzero(feats) if spac else None
-    tiles = build_tap_tiles(kmap, row_nz, bm=bm)
+    tiles = build_tap_tiles(kmap, row_nz, bm=bm, bo=bo)
     lhs = jnp.take(feats, tiles.gather_idx, axis=0)
     lhs = jnp.where(tiles.slot_valid[:, None], lhs, 0)
     c_out = weights.shape[-1]

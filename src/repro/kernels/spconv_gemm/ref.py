@@ -23,10 +23,31 @@ def spconv_gemm_fused_ref(feats: jnp.ndarray, weights: jnp.ndarray,
                           gather_idx: jnp.ndarray, tile_tap: jnp.ndarray,
                           tile_nz: jnp.ndarray, *, bm: int = 128,
                           bn: int = 128) -> jnp.ndarray:
-    """Oracle for :func:`kernel.spconv_gemm_fused`.
+    """Partial-product oracle shared by both fused kernel generations.
 
     Materializes the gather (it is the *reference*, not the perf path) and
-    reuses the tiled-GEMM oracle on top.
+    reuses the tiled-GEMM oracle on top. ops._exec_ref_math scatter-adds
+    these rows to finish the output-stationary math — identical, on the
+    first n_out rows, to what spconv_gemm_fused accumulates in-kernel.
     """
     lhs = jnp.take(feats, gather_idx, axis=0)
     return spconv_gemm_ref(lhs, weights, tile_tap, tile_nz, bm=bm, bn=bn)
+
+
+def spconv_gemm_os_ref(feats: jnp.ndarray, weights: jnp.ndarray,
+                       gather_idx: jnp.ndarray, scatter_idx: jnp.ndarray,
+                       tile_tap: jnp.ndarray, tile_nz: jnp.ndarray,
+                       tile_ob: jnp.ndarray, *, bm: int = 128,
+                       bo: int = 128, n_out_pad: int) -> jnp.ndarray:
+    """Exact mirror of the output-stationary kernel's (n_out_pad, Cout)
+    result: each tile's partial products land at their in-block local rows;
+    slots targeting outside their tile's block are dropped (the kernel's
+    one-hot scatter contract)."""
+    ps = spconv_gemm_fused_ref(feats, weights, gather_idx, tile_tap,
+                               tile_nz, bm=bm)
+    local = scatter_idx - jnp.repeat(tile_ob, bm) * bo
+    inb = (local >= 0) & (local < bo)
+    tgt = jnp.where(inb, scatter_idx, n_out_pad)
+    out = jnp.zeros((n_out_pad + 1, weights.shape[-1]), jnp.float32)
+    out = out.at[tgt].add(ps.astype(jnp.float32), mode="drop")
+    return out[:n_out_pad].astype(feats.dtype)

@@ -31,6 +31,7 @@ import jax
 from repro.configs import SHAPE_CELLS, cell_applicable, get_config, list_archs
 from repro.launch import hlo_analysis, shardings
 from repro.launch.mesh import make_production_mesh
+from repro.runtime.sharding_compat import set_mesh
 from repro.launch.train import make_train_step
 from repro.models import api
 from repro.optim import adamw
@@ -95,7 +96,7 @@ def measure_costs(cfg, cell, mesh, *, strategy: str = "tp",
         fn, args, in_sh, out_sh, dn = build_cell(
             model, cell, mesh, strategy=strategy, kv_layout=kv_layout)
         with flags.unroll_for_cost():
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 compiled = jax.jit(
                     fn, in_shardings=in_sh, out_shardings=out_sh,
                     donate_argnums=dn if donate else (),
@@ -149,7 +150,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
         fn, args, in_sh, out_sh, dn = build_cell(
             model, cell, mesh, strategy=strategy, kv_layout=kv_layout)
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             t0 = time.time()
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=dn if donate else ())

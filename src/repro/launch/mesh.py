@@ -5,18 +5,17 @@ touches jax device state.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.runtime.sharding_compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_test_mesh(n_data: int = 2, n_model: int = 4):
     """Small host-device mesh for integration tests (8 devices)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

@@ -11,6 +11,7 @@ import jax
 from jax.sharding import NamedSharding
 
 from repro.runtime import sharding as rs
+from repro.runtime.sharding_compat import set_mesh
 
 # weight matrices whose LAST dim is the TP-sharded output features
 _LAST = {"wq", "wk", "wv", "w_gate", "w_up", "lm_head", "pred_head",
@@ -67,7 +68,7 @@ def _param_dims(name: str, rank: int, strategy: str = "tp"):
 
 def param_shardings(abstract_params, mesh, strategy: str = "tp"):
     """NamedSharding pytree for a parameter tree (also fits AdamW m/v)."""
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def one(path, leaf):
             dims = _param_dims(_leaf_name(path), len(leaf.shape), strategy)
             spec = rs.resolve(*dims, shape=tuple(leaf.shape))
@@ -82,7 +83,7 @@ def opt_state_shardings(abstract_opt, mesh, strategy: str = "tp"):
     pure_dp shards m/v over the whole mesh on the first divisible dim
     (ZeRO-1): params stay replicated but optimizer state is 1/N per chip.
     """
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def one(path, leaf):
             rank = len(leaf.shape)
             if strategy == "pure_dp" and rank >= 1:
@@ -103,7 +104,7 @@ def opt_state_shardings(abstract_opt, mesh, strategy: str = "tp"):
 
 def batch_shardings(abstract_batch, mesh):
     """Model inputs: leading dim is the global batch (set_batch_axes)."""
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def one(path, leaf):
             dims = ("batch",) + (None,) * (len(leaf.shape) - 1)
             spec = rs.resolve(*dims, shape=tuple(leaf.shape))
@@ -115,7 +116,7 @@ def batch_shardings(abstract_batch, mesh):
 def cache_shardings(abstract_cache, mesh, kv_layout: str = "kv"):
     rules = dict(_CACHE_RULES)
     rules.update(_CACHE_RULES_CTX if kv_layout == "ctx" else _CACHE_RULES_KV)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def one(path, leaf):
             name = _leaf_name(path)
             rank = len(leaf.shape)

@@ -29,6 +29,9 @@ class MinkUNetConfig:
     batch_bits: int = 4
     map_method: str = "octree"      # paper | 'sorted' beyond-paper variant
     spac: bool = True               # §V-B sparsity-aware elision
+    bm: int = 128                   # rulebook tile rows (kernel m-tile)
+    bo: int | None = None           # output-stationary block rows (None:
+                                    # build default, DESIGN.md §5)
 
 
 SMALL = MinkUNetConfig()
@@ -70,7 +73,7 @@ def _apply_subm(st, params, cfg, training, n_max, cache, impl):
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
                            batch_bits=cfg.batch_bits, spac=cfg.spac,
-                           cache=cache, impl=impl)
+                           cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
     return spconv.relu(st)
 
@@ -99,7 +102,7 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
         stage = params[f"enc{i}"]
         down, maps = spconv.gconv2(st, stage["down"]["conv"], grid_bits=gb,
                                    batch_bits=cfg.batch_bits, cache=cache,
-                                   impl=impl)
+                                   impl=impl, bm=cfg.bm, bo=cfg.bo)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"], training=training)
         st = spconv.relu(down)
         for b in range(cfg.blocks):
@@ -113,7 +116,7 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
         maps = maps_stack[-(i + 1)]
         target = skips[-(i + 2)]
         up = spconv.tconv2(st, stage["up"]["conv"], maps, target,
-                           cache=cache, impl=impl)
+                           cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
         up, _ = spconv.batch_norm(up, stage["up"]["bn"], training=training)
         up = spconv.relu(up)
         st = up.replace_feats(

@@ -118,7 +118,10 @@ def moe_ffn(params, x, cfg):
             and "model" not in rs.batch_axes()):
         from jax.sharding import PartitionSpec as P
 
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.runtime.sharding_compat import get_abstract_mesh
+        from repro.runtime.sharding_compat import shard_map as _shard_map
+
+        mesh = get_abstract_mesh()
         bspec = rs.resolve("batch", shape=(b,))[0]
 
         def body(xp_l, gate_l, tok_l, wg_l, wu_l, wd_l):
@@ -126,7 +129,7 @@ def moe_ffn(params, x, cfg):
                                       wd_l, act=cfg.act, s=s, e=e)
             return jax.lax.psum(out, "model")    # reduce AFTER combine
 
-        sm = jax.shard_map(
+        sm = _shard_map(
             body, mesh=mesh,
             in_specs=(P(bspec, None, None), P(bspec, None),
                       P(bspec, None),

@@ -34,6 +34,8 @@ class SECONDConfig:
     n_batch: int = 2
     map_method: str = "octree"
     spac: bool = True
+    bm: int = 128                   # rulebook tile rows (kernel m-tile)
+    bo: int | None = None           # output-stationary block rows
 
 
 SMALL = SECONDConfig()
@@ -69,7 +71,7 @@ def _subm_block(st, params, cfg, training, n_max, cache, impl):
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
                            batch_bits=cfg.batch_bits, spac=cfg.spac,
-                           cache=cache, impl=impl)
+                           cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
     return spconv.relu(st)
 
@@ -90,7 +92,8 @@ def middle_extractor(params, st: SparseTensor, cfg: SECONDConfig, *,
                                 batch_bits=cfg.batch_bits,
                                 dataflow="input_stationary" if i == 0
                                 else "output_stationary",
-                                cache=cache, impl=impl)
+                                cache=cache, impl=impl, bm=cfg.bm,
+                                bo=cfg.bo)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"],
                                     training=training)
         st = spconv.relu(down)

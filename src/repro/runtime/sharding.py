@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.sharding_compat import get_abstract_mesh
+
 AXIS_POD = "pod"
 AXIS_DATA = "data"
 AXIS_MODEL = "model"
@@ -34,7 +36,7 @@ def batch_axes() -> tuple[str, ...]:
 
 
 def active_axes() -> tuple[str, ...]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     return tuple(mesh.axis_names) if mesh is not None and not mesh.empty else ()
 
 
@@ -47,7 +49,7 @@ def resolve(*dims, shape: tuple[int, ...] | None = None) -> P:
     heads or vocab 50280 on a 16-way model axis -> replicated), so one model
     definition stays valid across meshes and architectures.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     axes = active_axes()
     used: set[str] = set()        # a mesh axis may shard at most one dim
 
@@ -86,7 +88,7 @@ def shard(x: jax.Array, *dims) -> jax.Array:
 
 
 def axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or name not in mesh.axis_names:
         return 1
     return mesh.shape[name]

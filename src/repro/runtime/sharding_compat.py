@@ -1,0 +1,91 @@
+"""Version compatibility shims for ``jax.sharding`` APIs.
+
+The runtime/launch stack targets the current mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.shard_map``, ``AxisType``), but
+the pinned toolchain may ship an older jax (<= 0.4.x) where those live
+elsewhere or do not exist. Resolving them here — the pattern of
+``kernels/pallas_compat.py`` — keeps every caller on one code path and
+makes the tier-1 suite runnable on whatever jax the image bakes in.
+
+Fallback semantics on old jax:
+
+  * :func:`set_mesh` enters the physical mesh's resource-env context
+    (``with mesh:``), which is what pre-0.5 jit/shard_map consult.
+  * :func:`get_abstract_mesh` then reports that physical mesh (it quacks
+    like an AbstractMesh for every use here: ``axis_names`` / ``shape`` /
+    ``empty`` and being passed back to :func:`shard_map`). Returns None
+    when no mesh is active.
+  * :func:`shard_map` maps the modern ``check_vma`` flag onto the legacy
+    ``check_rep`` one.
+  * :class:`AxisType` degrades to a stand-in enum and :func:`make_mesh`
+    drops the ``axis_types`` kwarg the old factory does not accept.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+
+
+def get_abstract_mesh():
+    """The mesh active in the current trace/context, or None."""
+    native = getattr(jax.sharding, "get_abstract_mesh", None)
+    if native is not None:
+        return native()
+    from jax._src import mesh as mesh_lib
+    abstract = getattr(mesh_lib, "get_abstract_mesh", lambda: None)()
+    if abstract is not None and getattr(abstract, "axis_names", ()):
+        return abstract
+    physical = mesh_lib.thread_resources.env.physical_mesh
+    if physical is not None and not physical.empty:
+        return physical
+    return None
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — jax.set_mesh when it exists, else the
+    legacy resource-env context manager of the physical mesh."""
+    native = getattr(jax, "set_mesh", None)
+    if native is not None:
+        with native(mesh):
+            yield mesh
+        return
+    with mesh:
+        yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map with the modern signature; maps check_vma onto the
+    legacy check_rep flag on old jax."""
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+if AxisType is None:
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType on old jax: every axis is
+        Auto (GSPMD-decided), which is the only mode the old mesh factory
+        supported anyway."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates factories without ``axis_types``."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -24,11 +24,11 @@ def run_script(body: str, timeout=420) -> str:
 def test_pipeline_matches_sequential():
     out = run_script("""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.runtime.sharding_compat import AxisType, make_mesh, set_mesh
 from repro.runtime.pipeline import pipeline_apply, stack_stages
 
-mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("pod", "data"),
+                 axis_types=(AxisType.Auto,) * 2)
 L, D, M, MB = 8, 16, 6, 4
 rng = np.random.default_rng(0)
 w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.2, jnp.float32)
@@ -43,7 +43,7 @@ def stage_fn(params, h):
     return h
 
 stages = stack_stages(w, 4)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     got = pipeline_apply(stages, x, stage_fn, mesh=mesh, axis="pod")
 ref = x
 for i in range(L):
@@ -58,19 +58,21 @@ print("PIPELINE_OK")
 def test_compressed_psum_close_to_exact():
     out = run_script("""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from repro.runtime.compress import compressed_psum_mean
+from repro.runtime.sharding_compat import (AxisType, make_mesh, set_mesh,
+                                           shard_map)
 
-mesh = jax.make_mesh((8,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("pod",), axis_types=(AxisType.Auto,))
 rng = np.random.default_rng(1)
 g = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
 
 def f(x):
     return compressed_psum_mean(x[0], "pod")
 
-fn = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"),), out_specs=P(),
-                   check_vma=False)
-with jax.set_mesh(mesh):
+fn = shard_map(f, mesh=mesh, in_specs=(P("pod"),), out_specs=P(),
+               check_vma=False)
+with set_mesh(mesh):
     got = fn(g)
 exact = np.asarray(g).mean(0)
 err = np.abs(np.asarray(got) - exact).max()
@@ -88,6 +90,7 @@ def test_sharded_train_step_matches_single_device():
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch import shardings
+from repro.runtime.sharding_compat import set_mesh
 from repro.launch.mesh import make_test_mesh
 from repro.launch.train import make_train_step, init_state
 from repro.models import api
@@ -110,7 +113,7 @@ p_sh = shardings.param_shardings(params_abs, mesh)
 o_sh = shardings.opt_state_shardings(opt_abs, mesh)
 b_sh = shardings.batch_shardings(
     jax.eval_shape(lambda: batch), mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     fn = jax.jit(step, in_shardings=((p_sh, o_sh), b_sh),
                  out_shardings=((p_sh, o_sh), None))
     new_state, metrics = fn(state, batch)
@@ -133,6 +136,7 @@ def test_dryrun_cell_on_test_mesh():
 import numpy as np, jax
 from repro.configs import get_config, SHAPE_CELLS
 from repro.launch.mesh import make_test_mesh
+from repro.runtime.sharding_compat import set_mesh
 from repro.launch import shardings
 from repro.launch.dryrun import build_cell
 from repro.models import api
@@ -144,9 +148,11 @@ import dataclasses
 cell = dataclasses.replace(cell, seq_len=64, global_batch=8)
 mesh = make_test_mesh(2, 4)
 fn, args, in_sh, out_sh, _donate = build_cell(model, cell, mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     compiled = jax.jit(fn, in_shardings=in_sh,
                        out_shardings=out_sh).lower(*args).compile()
-print("DRYRUN_OK", compiled.cost_analysis().get("flops"))
+ca = compiled.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca   # dict on new jax
+print("DRYRUN_OK", ca.get("flops"))
 """)
     assert "DRYRUN_OK" in out

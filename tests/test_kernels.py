@@ -11,8 +11,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.masked_matmul.kernel import masked_matmul
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
 from repro.kernels.spconv_gemm import ops as sg_ops
-from repro.kernels.spconv_gemm.kernel import spconv_gemm
-from repro.kernels.spconv_gemm.ref import spconv_gemm_ref
+from repro.kernels.spconv_gemm.kernel import spconv_gemm, spconv_gemm_fused
+from repro.kernels.spconv_gemm.ref import spconv_gemm_os_ref, spconv_gemm_ref
 from tests.proptest import forall
 
 # ---------------------------------------------------------------------------
@@ -41,6 +41,33 @@ def test_spconv_gemm_interpret_matches_ref(mt, cin, cout, bm, bn, k, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@forall(6)
+def test_spconv_gemm_fused_matches_os_oracle(rng):
+    """The output-stationary kernel's raw (n_out_pad, Cout) result —
+    in-kernel one-hot scatter, block-local drops, tile_nz gating — against
+    its exact oracle, straight from build_tap_tiles metadata."""
+    n_out, k, bm, bo = int(rng.integers(10, 40)), 27, 8, 16
+    cin, cout = 16, 128
+    feats = jnp.asarray(rng.standard_normal((n_out, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n_out, (n_out, k)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((k, cin, cout)) * 0.1, jnp.float32)
+    tiles = sg_ops.build_tap_tiles(kmap, bm=bm, bo=bo)
+    n_out_pad = -(-n_out // bo) * bo
+    got = spconv_gemm_fused(
+        feats, w, tiles.gather_idx, tiles.scatter_idx, tiles.tile_tap,
+        tiles.tile_nz, tiles.tile_ob, tiles.tile_first, tiles.tile_run,
+        tiles.grp_skip, tiles.grp_contig, bm=bm, bo=bo,
+        n_out_pad=n_out_pad, interpret=True)
+    ref = spconv_gemm_os_ref(
+        feats, w, tiles.gather_idx, tiles.scatter_idx, tiles.tile_tap,
+        tiles.tile_nz, tiles.tile_ob, bm=bm, bo=bo, n_out_pad=n_out_pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    # pad rows beyond n_out are exactly zero: drop targets sit outside
+    # every output block (never in the last block's tail)
+    assert np.all(np.asarray(got)[n_out:] == 0)
 
 
 @forall(10)

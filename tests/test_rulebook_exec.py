@@ -1,10 +1,14 @@
 """Planned/fused rulebook execution: parity, plan cache, tap schedule.
 
-Covers the DESIGN.md §4-§6 contract: the gather-fused plan path agrees
-with both rulebook oracles for all four layer types, plans are memoized by
+Covers the DESIGN.md §4-§6 contract: the output-stationary fused plan path
+agrees with both rulebook oracles for all four layer types (including
+multi-output-block and Cin-blocked configurations), plans are memoized by
 coordinate identity (map search once per stage), tap segments are laid out
-hottest-first, and the fused kernel allocates no (M_pad, Cin) gathered
-intermediate.
+hottest-first within each output block, gradients of the custom VJP match
+native autodiff through the oracle math (including skipped tiles and
+padding slots), and the fused kernel allocates no (M_pad, Cin) gathered
+intermediate, no (M_pad, Cout) partial products, and no post-kernel
+scatter-add.
 """
 import numpy as np
 import jax
@@ -192,32 +196,47 @@ def test_minkunet_forward_shares_plans_across_stages():
 
 
 # ---------------------------------------------------------------------------
-# Tap schedule (§V-C): hottest-first tile layout
+# Tap schedule (§V-C): hottest-first tile layout, per output block
 # ---------------------------------------------------------------------------
 
 @forall(8)
 def test_tile_tap_runs_are_monotone_in_schedule_order(rng):
+    """Within each output block, live tiles visit taps in schedule order
+    and the hottest tap leads; output blocks themselves are monotone so
+    each block is one consecutive run (the output-stationary contract)."""
     n_out, k, bm = int(rng.integers(8, 48)), 27, 8
+    bo = int(rng.choice([8, 16, 128]))
     kmap = rng.integers(-1, n_out, size=(n_out, k)).astype(np.int32)
     # skew the tap histogram so the schedule is nontrivial
     kmap[:, int(rng.integers(0, k))] = rng.integers(0, n_out, n_out)
-    tiles = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=bm)
+    tiles = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=bm, bo=bo)
 
     counts = np.asarray(rulebook.tap_counts(jnp.asarray(kmap)))
     sched = np.asarray(rulebook.tap_schedule(jnp.asarray(counts)))
     srank = np.zeros(k, np.int64)
     srank[sched] = np.arange(k)
 
+    obs = np.asarray(tiles.tile_ob)
+    assert (np.diff(obs) >= 0).all(), obs        # blocks: one run each
+    first = np.asarray(tiles.tile_first) != 0
+    np.testing.assert_array_equal(
+        first, np.concatenate([[True], obs[1:] != obs[:-1]]))
+
     live = np.asarray(tiles.tile_nz) != 0
-    ranks = srank[np.asarray(tiles.tile_tap)][live]
-    assert (np.diff(ranks) >= 0).all(), ranks
-    # hottest tap leads the stream
-    if live.any():
-        assert ranks[0] == 0
-    # per-tap tile budget: ceil(count/bm) live tiles at most
-    taps_of_live = np.asarray(tiles.tile_tap)[live]
-    for t in range(k):
-        assert (taps_of_live == t).sum() <= -(-int(counts[t]) // bm)
+    ranks = srank[np.asarray(tiles.tile_tap)]
+    bcounts = np.asarray(rulebook.blocked_tap_counts(jnp.asarray(kmap), bo))
+    for b in range(obs.max() + 1):
+        sel = live & (obs == b)
+        if not sel.any():
+            continue
+        assert (np.diff(ranks[sel]) >= 0).all(), (b, ranks[sel])
+        # hottest populated tap leads the block
+        populated = srank[np.nonzero(bcounts[b])[0]]
+        assert ranks[sel][0] == populated.min()
+        # per-(block, tap) tile budget: ceil(count/bm) live tiles at most
+        taps_of_live = np.asarray(tiles.tile_tap)[sel]
+        for t in range(k):
+            assert (taps_of_live == t).sum() <= -(-int(bcounts[b, t]) // bm)
 
 
 def test_schedule_off_keeps_tap_order():
@@ -307,3 +326,115 @@ def test_fused_kernel_matches_materialized_kernel():
     ref = sg_ops.apply_kmap(feats, w, kmap, b, bm=BM, impl="ref")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary kernel: multi-block runs, Cin blocking, fused scatter
+# ---------------------------------------------------------------------------
+
+@forall(6)
+def test_fused_multiblock_matches_oracle(rng):
+    """Small bo forces many output blocks (tile_ob runs, tile_first opens,
+    in-kernel local scatter) — parity must hold against the tap scan."""
+    n, cin, cout = int(rng.integers(20, 48)), 8, 12
+    bo = int(rng.choice([8, 16]))
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n, size=(n, 27)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    ref = rulebook.apply_kmap_gather(feats, w, kmap)
+    got = sg_ops.apply_kmap_fused(feats, w, kmap, bm=BM, bo=bo, spac=False,
+                                  impl=KIMPL)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_empty_output_block_is_zeroed():
+    """An output block whose rows have no maps at all must still be opened
+    (zeroed) by its forced all-pad tile, never left as garbage."""
+    rng = np.random.default_rng(9)
+    n, cin, cout, bo = 32, 8, 12, 8
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = rng.integers(0, n, size=(n, 8)).astype(np.int32)
+    kmap[8:16] = -1                      # output block 1 entirely unmapped
+    kmap = jnp.asarray(kmap)
+    got = sg_ops.apply_kmap_fused(feats, jnp.asarray(
+        rng.standard_normal((8, cin, cout)) * 0.1, jnp.float32), kmap,
+        bm=BM, bo=bo, spac=False, impl=KIMPL)
+    assert np.all(np.asarray(got)[8:16] == 0)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_fused_cin_blocked_wide_channels():
+    """Cin = 1024 > the whole-Cin residency cap: apply_tiles must pick a
+    Cin block from the §6 VMEM budget (k-dimension in the grid) and still
+    match the oracle."""
+    rng = np.random.default_rng(10)
+    n, cin, cout = 24, 1024, 16
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n, size=(n, 27)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.02, jnp.float32)
+    bk = sg_ops.pick_bk(cin, bm=BM, bn=128, bo=128, c_out=128)
+    assert bk < cin and cin % bk == 0    # wide layers stop relying on
+    tiles = sg_ops.build_tap_tiles(kmap, bm=BM)      # whole-Cin residency
+    ref = sg_ops.apply_tiles(feats, w, tiles, n_out=n, impl="ref")
+    got = sg_ops.apply_tiles(feats, w, tiles, n_out=n, impl=KIMPL)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # an explicit (smaller) bk must agree too
+    got2 = sg_ops.apply_tiles(feats, w, tiles, n_out=n, bk=256, impl=KIMPL)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_output_stationary_vjp_with_skipped_tiles_and_padding(rng=None):
+    """Gradient parity of the output-stationary VJP vs the XLA oracle when
+    SPAC skips whole tiles (zero rows) and tap segments carry padding
+    slots: d/dfeats of elided rows must be exactly the oracle's, and pad
+    slots must contribute nothing."""
+    rng = np.random.default_rng(11)
+    n, cin, cout = 40, 8, 12
+    feats = rng.standard_normal((n, cin)).astype(np.float32)
+    feats[rng.random(n) < 0.5] = 0       # post-ReLU rows => skipped tiles
+    feats = jnp.asarray(feats)
+    kmap = rng.integers(-1, n, size=(n, 27)).astype(np.int32)
+    kmap[::3] = -1                       # heavy padding in every segment
+    kmap = jnp.asarray(kmap)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+
+    def loss(f, ww, bb, impl):
+        out = sg_ops.apply_kmap_fused(f, ww, kmap, bb, bm=BM, bo=16,
+                                      impl=impl)
+        return (out ** 2).sum()
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(feats, w, b, "ref")
+    g_ker = jax.jit(jax.grad(lambda f, ww, bb: loss(f, ww, bb, KIMPL),
+                             argnums=(0, 1, 2)))(feats, w, b)
+    for a, c in zip(g_ref, g_ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+    # elided zero rows still receive their true (oracle) gradient
+    assert np.isfinite(np.asarray(g_ker[0])).all()
+
+
+def test_fused_path_has_no_scatter_add_and_no_partials():
+    """Acceptance audit: the plan hot path (pre-built tiles) emits no
+    post-kernel scatter-add op and no (M_pad, Cout) partial-product array;
+    the materialized baseline emits both."""
+    from benchmarks.rulebook_exec import (partial_product_bytes,
+                                          scatter_add_ops)
+    rng = np.random.default_rng(12)
+    n, cin, cout = 32, 8, 16
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    kmap = jnp.asarray(rng.integers(-1, n, size=(n, 27)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    tiles = sg_ops.build_tap_tiles(kmap, bm=BM, bo=16)
+    m_pad = tiles.gather_idx.shape[0]
+
+    fused = lambda f: sg_ops.apply_tiles(f, w, tiles, n_out=n, impl=KIMPL)
+    assert scatter_add_ops(fused, feats) == 0
+    assert partial_product_bytes(fused, feats, rows=m_pad,
+                                 min_cols=cout) == 0
+
+    mat = lambda f: sg_ops.apply_kmap(f, w, kmap, bm=BM, impl=KIMPL)
+    assert scatter_add_ops(mat, feats) > 0
