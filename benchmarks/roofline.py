@@ -8,7 +8,9 @@ rulebook-execution measurements (BENCH_rulebook.json, written by
 benchmarks/rulebook_exec.py): per workload, the fused kernel's modeled HBM
 traffic vs the materialized gather-GEMM-scatter baseline — the bandwidth
 ratio that decides whether a layer is memory-bound, which dense FLOP
-roofline rows cannot show.
+roofline rows cannot show. BENCH_search.json (benchmarks/search_speedup.py)
+adds the map-search side: fused OCTENT query vs dense-table XLA vs host
+hash, and the sort-free vs argsort plan-build comparison with its audits.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import os
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 RULEBOOK_JSON = "BENCH_rulebook.json"
+SEARCH_JSON = "BENCH_search.json"
 
 
 def load(mesh: str = "single", tag: str = "") -> list[dict]:
@@ -105,6 +108,37 @@ def load_rulebook(path: str = RULEBOOK_JSON) -> list[dict]:
         return json.load(f)
 
 
+def search_table(recs: list[dict]) -> str:
+    """§Roofline (map search) rows: fused OCTENT engine vs its baselines
+    plus the sort-free plan-build comparison, from BENCH_search.json."""
+    hdr = ("| workload | voxels | model speedup | kernel us | ref us "
+           "| xla us | hash us | plan sort-free us | plan argsort us "
+           "| build speedup |")
+    sep = "|" + "---|" * 10
+    lines = ["", "## Map search (OCTENT fused query + sort-free build)",
+             "", hdr, sep]
+    for r in recs:
+        s, p = r["search_us"], r["plan_build_us"]
+        hash_s = (f"{s['host_hash']:.0f}" if "host_hash" in s else "-")
+        lines.append(
+            f"| {r['workload']} | {r['voxels']} "
+            f"| {r['cycle_model']['total_speedup']:.1f}x "
+            f"| {s['octent_kernel']:.1f} | {s['octent_ref']:.1f} "
+            f"| {s['xla_dense']:.1f} | {hash_s} "
+            f"| {p['counting']:.1f} | {p['argsort']:.1f} "
+            f"| {r['plan_build_speedup']:.2f}x |")
+    audited = all(r["sort_ops"]["counting"] == 0
+                  and r["query_tensor_ops"] == 0 and r["parity"]
+                  for r in recs)
+    sortfree_wins = all(r["plan_build_speedup"] > 1.0 for r in recs)
+    lines.append("")
+    lines.append(f"search audit (kmap parity / zero sort ops / no HBM "
+                 f"query tensor): {'PASS' if audited else 'FAIL'}; "
+                 f"sort-free build faster on all workloads: "
+                 f"{'PASS' if sortfree_wins else 'FAIL'}")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
@@ -112,12 +146,18 @@ def main() -> None:
     ap.add_argument("--rulebook", default=RULEBOOK_JSON,
                     help="BENCH_rulebook.json from benchmarks/rulebook_exec"
                          " (section skipped when the file is absent)")
+    ap.add_argument("--search", default=SEARCH_JSON,
+                    help="BENCH_search.json from benchmarks/search_speedup"
+                         " (section skipped when the file is absent)")
     args = ap.parse_args()
     recs = load(args.mesh, args.tag)
     print(table(recs))
     rb = load_rulebook(args.rulebook)
     if rb:
         print(rulebook_table(rb))
+    sr = load_rulebook(args.search)
+    if sr:
+        print(search_table(sr))
     ok = [r for r in recs if r["status"] == "ok"]
     if ok:
         doms = {}

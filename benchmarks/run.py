@@ -4,10 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows. REPRO_BENCH_FAST=1 runs the
 reduced sweep (CI); the full sweep reproduces every claim band in
 EXPERIMENTS.md §Paper-fidelity.
 
-``--smoke`` runs only the rulebook-execution suite in Pallas interpret
-mode on tiny shapes: it exercises the whole fused-kernel contract (jaxpr
-audits + parity against the XLA oracle) in seconds and exits nonzero on
-any parity drift — the CI gate wired into scripts/ci.sh.
+``--smoke`` runs the rulebook-execution suite plus the OCTENT search gate
+in Pallas interpret mode on tiny shapes: it exercises the whole
+fused-kernel contract (jaxpr audits + parity against the XLA oracle) and
+the fused map-search kernel (bit-exact vs the host hash oracle, sort-free
+plan-build audit) in seconds and exits nonzero on any parity drift — the
+CI gate wired into scripts/ci.sh.
 """
 from __future__ import annotations
 
@@ -20,8 +22,9 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-shape interpret-mode rulebook_exec only; "
-                         "fails on parity drift")
+                    help="tiny-shape interpret-mode gates: rulebook_exec "
+                         "plus the octent search-parity check; fails on "
+                         "parity drift or audit regression")
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
     from benchmarks import (caching_energy, overall_comparison,
@@ -38,6 +41,14 @@ def main() -> None:
             print("rulebook_exec_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("rulebook_exec_smoke,0.0,OK", flush=True)
+        try:
+            for row in search_speedup.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("search_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("search_smoke,0.0,OK", flush=True)
         return
 
     suites = [

@@ -1,30 +1,118 @@
 """Fig. 9(a): map-search latency reduction (OCTENT algorithm + architecture).
 
-Two complementary measurements per benchmark workload:
+Three complementary measurements per benchmark workload, written to
+``BENCH_search.json`` (picked up by benchmarks/roofline.py --search):
 
   * cycle model (core.cyclemodel) — the paper's own evaluation method:
     serial hash baseline vs serial OCTENT vs 8-bank parallel OCTENT.
     Paper claims: >65 % (algo) + 66.7-68.3 % (arch) => 8.8-21.2x total.
-  * wall clock on this host — jitted OCTENT (vectorized stage-1 + stage-2)
-    vs the serial host-side hash probing loop of [9]. This is a CPU, so the
-    number demonstrates the *deserialization* win, not ASIC latency.
+  * search wall clock on this host — the fused OCTENT engine
+    (kernels/octent: Pallas kernel under ops.hardware_impl, i.e. compiled
+    on TPU / interpreted elsewhere, plus its XLA bit-oracle ``ref``)
+    against the legacy dense-table ``xla`` builder and the serial
+    host-side hash probing loop of [9]. On CPU the numbers demonstrate
+    the *deserialization* win, not ASIC latency.
+  * plan-build wall clock — the sort-free path (Morton-radix unique
+    passes + closed-form counting tile layout) vs the retained global-
+    argsort baseline, with the jaxpr sort-op audit attached. The
+    acceptance claim is sort-free < argsort on every workload.
+
+``--smoke`` (also wired into benchmarks/run.py --smoke and scripts/ci.sh)
+runs the interpret-mode kernel on a tiny cloud with bit-exact parity
+against the host hash oracle plus the sort-free audits, exiting nonzero
+on any drift — the CI search-parity gate.
 """
 from __future__ import annotations
 
+import json
+import time
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import BENCHMARKS, csv_row, time_fn, workload
-from repro.core import cyclemodel, mapsearch, morton
+from repro.core import binning, cyclemodel, mapsearch, morton
+from repro.kernels.octent import ops as oct_ops
+from repro.kernels.spconv_gemm import ops as sg_ops
+
+OUT_JSON = "BENCH_search.json"
 
 # dataset-dependent hash probe factor (occupancy/collision regime): indoor
 # scans are denser (longer chains), sweeping the paper's 8.8-21.2x band
 PROBE = {"Seg(i)": 6.0, "Seg(o)": 3.4, "Det(k)": 2.6, "Det(n)": 3.0}
 
 
+def _search_case(coords, batch, valid, *, max_blocks, kimpl, bm=128):
+    """Timings + parity + audits for one coordinate set."""
+
+    def kernel_path():
+        return oct_ops.build_kmap(coords, batch, valid,
+                                  max_blocks=max_blocks, impl=kimpl)[0]
+
+    def ref_path():
+        return oct_ops.build_kmap(coords, batch, valid,
+                                  max_blocks=max_blocks, impl="ref")[0]
+
+    def xla_path():
+        return oct_ops.build_kmap(coords, batch, valid,
+                                  max_blocks=max_blocks, impl="xla")[0]
+
+    # plan-build comparison isolates the *binning* change: both sides run
+    # the same octent ref search engine, differing only in the ordering
+    # passes (radix counting vs the retained global argsorts)
+    def plan_counting():
+        kmap, _ = oct_ops.build_kmap(coords, batch, valid,
+                                     max_blocks=max_blocks, impl="ref")
+        return sg_ops.build_tap_tiles(kmap, bm=bm).gather_idx
+
+    def plan_argsort():
+        kmap, _ = oct_ops.build_kmap(coords, batch, valid,
+                                     max_blocks=max_blocks, impl="ref",
+                                     binning_mode="argsort")
+        return sg_ops.build_tap_tiles(kmap, bm=bm,
+                                      binning="argsort").gather_idx
+
+    km_kernel = np.asarray(kernel_path())
+    km_ref = np.asarray(ref_path())
+    km_xla = np.asarray(xla_path())
+    if not (km_kernel == km_ref).all() or not (km_kernel == km_xla).all():
+        raise AssertionError("octent kmap parity drift across impls")
+
+    sort_ops = {"counting": binning.sort_op_count(
+                    plan_counting),
+                "argsort": binning.sort_op_count(plan_argsort)}
+    assert sort_ops["counting"] == 0, "sort-free plan build emitted a sort"
+    assert sort_ops["argsort"] > 0, "argsort baseline lost its sort op"
+    n = coords.shape[0]
+    qt_audit = binning.avals_with_shape(kernel_path, shape=(n, 27, 3))
+    assert qt_audit == 0, "fused path materialized the query tensor"
+
+    rec = {
+        "kernel_impl": kimpl,
+        "search_us": {
+            "octent_kernel": time_fn(kernel_path) * 1e6,
+            "octent_ref": time_fn(ref_path) * 1e6,
+            "xla_dense": time_fn(xla_path) * 1e6,
+        },
+        "plan_build_us": {
+            "counting": time_fn(plan_counting) * 1e6,
+            "argsort": time_fn(plan_argsort) * 1e6,
+        },
+        "sort_ops": sort_ops,
+        "query_tensor_ops": qt_audit,
+        "parity": True,
+    }
+    rec["search_speedup_vs_xla"] = (rec["search_us"]["xla_dense"]
+                                    / rec["search_us"]["octent_kernel"])
+    rec["plan_build_speedup"] = (rec["plan_build_us"]["argsort"]
+                                 / rec["plan_build_us"]["counting"])
+    return rec, km_kernel
+
+
 def run(full: bool = True) -> list[str]:
-    rows = []
-    offs = jnp.asarray(morton.subm3_offsets())
+    rows, records = [], []
+    kimpl = oct_ops.hardware_impl()
     for name in BENCHMARKS:
         vb = workload(name)
         n = int(vb.valid.sum())
@@ -32,23 +120,77 @@ def run(full: bool = True) -> list[str]:
         coords = jnp.asarray(vb.coords)
         batch = jnp.asarray(vb.batch)
         valid = jnp.asarray(vb.valid)
-
-        def octree():
-            return mapsearch.build_kmap_octree(
-                coords, batch, valid, offs, max_blocks=vb.coords.shape[0])
-
-        t_oct = time_fn(octree)
-        t_hash = None
+        rec, km = _search_case(coords, batch, valid,
+                               max_blocks=vb.coords.shape[0], kimpl=kimpl)
+        rec.update(workload=name, voxels=n,
+                   cycle_model={
+                       "algo_saving": lat.serial_algo_saving,
+                       "arch_saving": lat.parallel_arch_saving,
+                       "total_speedup": lat.total_speedup})
         if full:
-            import time as _t
-            t0 = _t.perf_counter()
-            mapsearch.build_kmap_hash(vb.coords, vb.batch, vb.valid,
-                                      np.asarray(offs))
-            t_hash = _t.perf_counter() - t0
+            t0 = time.perf_counter()
+            km_hash = mapsearch.build_kmap_hash(
+                vb.coords, vb.batch, vb.valid,
+                np.asarray(morton.subm3_offsets()))
+            rec["search_us"]["host_hash"] = (time.perf_counter() - t0) * 1e6
+            if not (km == km_hash).all():
+                raise AssertionError(f"{name}: kmap drift vs hash oracle")
+        records.append(rec)
+
         derived = (f"voxels={n};algo_saving={lat.serial_algo_saving:.3f};"
                    f"arch_saving={lat.parallel_arch_saving:.3f};"
                    f"model_speedup={lat.total_speedup:.1f}x")
-        if t_hash is not None:
-            derived += f";host_speedup_vs_serial_hash={t_hash / t_oct:.1f}x"
-        rows.append(csv_row(f"fig9a_search/{name}", t_oct * 1e6, derived))
+        s = rec["search_us"]
+        if "host_hash" in s:
+            derived += (f";host_speedup_vs_serial_hash="
+                        f"{s['host_hash'] / s['octent_kernel']:.1f}x")
+        rows.append(csv_row(f"fig9a_search/{name}", s["octent_kernel"],
+                            derived))
+        for path in ("octent_ref", "xla_dense"):
+            rows.append(csv_row(f"fig9a_search/{name}/{path}", s[path],
+                                f"impl={kimpl}"))
+        p = rec["plan_build_us"]
+        rows.append(csv_row(
+            f"fig9a_search/{name}/plan_build", p["counting"],
+            f"argsort_us={p['argsort']:.1f};"
+            f"sortfree_speedup={rec['plan_build_speedup']:.2f}x;"
+            f"sort_ops={rec['sort_ops']['counting']}"))
+    with open(OUT_JSON, "w") as f:
+        json.dump(records, f, indent=2)
     return rows
+
+
+def run_smoke(n: int = 96) -> list[str]:
+    """Interpret-mode search-parity gate (tiny shapes, seconds): the
+    octent kernel must match the host hash oracle bit for bit and the
+    plan build must audit sort-free. Raises on any drift."""
+    rng = np.random.default_rng(0)
+    ext = 24
+    lin = rng.choice(ext ** 3, size=n, replace=False)    # unique coords
+    coords = np.stack([lin % ext, (lin // ext) % ext, lin // ext ** 2],
+                      axis=-1).astype(np.int32)
+    bidx = rng.integers(0, 2, n).astype(np.int32)
+    valid = np.arange(n) < n - 8
+    km_hash = mapsearch.build_kmap_hash(coords, bidx, valid,
+                                        morton.subm3_offsets())
+    c, b, v = jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+    rec, km = _search_case(c, b, v, max_blocks=n, kimpl="interpret", bm=8)
+    if not (km == km_hash).all():
+        raise AssertionError("octent kernel drifted from the hash oracle")
+    s = rec["search_us"]
+    return [csv_row("search_smoke/octent_kernel", s["octent_kernel"],
+                    f"impl=interpret;parity=hash;voxels={n}"),
+            csv_row("search_smoke/plan_build",
+                    rec["plan_build_us"]["counting"],
+                    f"sort_ops={rec['sort_ops']['counting']};"
+                    f"query_tensor_ops={rec['query_tensor_ops']}")]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="interpret-mode parity gate on tiny shapes")
+    args = ap.parse_args()
+    for row in (run_smoke() if args.smoke else run(full=False)):
+        print(row)

@@ -9,6 +9,12 @@
 # exits nonzero on parity drift against the XLA rulebook oracle or on any
 # fusion-audit regression (materialized gather / post-kernel scatter-add /
 # partial-product array reappearing in the fused path's jaxpr).
+#
+# The smoke run also carries the octent search-parity gate
+# (search_speedup.run_smoke, standalone: benchmarks/search_speedup.py
+# --smoke), exercising the map-search kernel under the Pallas interpreter
+# on every run: bit-exact kmap parity vs the host hash oracle, zero XLA
+# sort ops in the plan build, and no HBM query tensor on the fused path.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,7 +28,7 @@ fi
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook smoke benchmark =="
+echo "== rulebook + octent search smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

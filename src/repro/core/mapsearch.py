@@ -7,12 +7,18 @@ implementations are provided so the paper's own baselines exist in-tree:
   * :func:`build_kmap_hash`        — host-side dict probing, the GPU-style
     hash baseline of [9]; oracle + Fig. 9(a) baseline.
   * :func:`build_kmap_octree`      — OCTENT: blockwise octree tables with the
-    8-bank (= 8-lane) parallel query of Fig. 5(c). Fully jittable.
+    8-bank (= 8-lane) parallel query of Fig. 5(c). Fully jittable. Since
+    PR 3 this dense-table XLA form is the ``search_impl='xla'`` oracle of
+    the fused Pallas engine in kernels/octent (DESIGN.md §3), which is the
+    default subm3 backend via plan.subm3_plan.
   * :func:`build_kmap_sorted`      — beyond-paper variant: no tables at all,
     binary search over the globally sorted (block, phi) key stream. O(log n)
     per query but O(1) extra memory; wins at very low block occupancy.
 
 All jittable functions use static shapes with validity masks (TPU contract).
+The unique passes (:func:`sorted_unique`, :func:`unique_pairs`) default to
+sort-free Morton-radix counting (core/binning.py) with the argsort
+baselines retained behind ``binning_mode='argsort'``.
 
 Map representation ("kernel map", gather form — output stationary):
     kmap  : (N_out, K) int32  — input row feeding output i through tap k
@@ -31,9 +37,30 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import morton
+from repro.core import binning, morton
 
 INVALID = jnp.iinfo(jnp.int32).max
+
+
+def _stable_order(codes: jnp.ndarray, nbits: int | None,
+                  binning_mode: str) -> jnp.ndarray:
+    """Stable ascending order of codes where INVALID marks invalid entries.
+
+    ``binning_mode='counting'`` uses Morton-radix counting passes (no XLA
+    sort primitive; requires the static bit budget ``nbits`` of valid
+    codes); ``'argsort'`` is the retained global-sort baseline.
+    """
+    if binning_mode == "argsort" or nbits is None:
+        return jnp.argsort(codes).astype(jnp.int32)
+    if binning_mode != "counting":
+        raise ValueError(f"unknown binning mode {binning_mode!r}")
+    if nbits <= 30:
+        # map the INVALID sentinel to the first out-of-budget value so the
+        # radix only needs nbits + 1 passes-worth of key
+        rk = jnp.where(codes == INVALID, jnp.int32(1 << nbits), codes)
+        return binning.counting_argsort(rk, nbits + 1)
+    # 31-bit budget: INVALID == int32 max already is the largest key
+    return binning.counting_argsort(codes, 31)
 
 
 class BlockTable(NamedTuple):
@@ -54,13 +81,17 @@ class BlockTable(NamedTuple):
     n_blocks: jnp.ndarray   # () int32
 
 
-def sorted_unique(codes: jnp.ndarray, size: int):
+def sorted_unique(codes: jnp.ndarray, size: int, *, nbits: int | None = None,
+                  binning_mode: str = "counting"):
     """Sorted unique with static output ``size`` for int32 keys.
 
     Invalid inputs must be INVALID. Returns (uniq padded with INVALID,
-    count, rank_of_each_input via searchsorted). jit-safe.
+    count, rank_of_each_input via searchsorted). jit-safe. ``nbits`` is the
+    static bit budget of valid codes; with it the ordering pass is
+    sort-free (Morton-radix counting, core/binning.py) — without it (or
+    with ``binning_mode='argsort'``) the global argsort baseline runs.
     """
-    order = jnp.argsort(codes)
+    order = _stable_order(codes, nbits, binning_mode)
     s = codes[order]
     is_new = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]]) & (s != INVALID)
     pos = jnp.cumsum(is_new) - 1
@@ -71,13 +102,19 @@ def sorted_unique(codes: jnp.ndarray, size: int):
     return uniq, count, rank
 
 
-def unique_pairs(hi: jnp.ndarray, lo: jnp.ndarray, valid: jnp.ndarray, size: int):
+def unique_pairs(hi: jnp.ndarray, lo: jnp.ndarray, valid: jnp.ndarray,
+                 size: int, *, hi_bits: int | None = None,
+                 lo_bits: int = morton.LOCAL_CODE_BITS,
+                 binning_mode: str = "counting"):
     """Unique over lexicographic (hi, lo) int32 pair keys, no wide arithmetic.
 
     Avoids int64: composite voxel keys (block key << 12 | phi) can exceed 31
-    bits, so uniqueness is established by lexsort + neighbor comparison and
-    ranks are scattered back through the sort permutation instead of being
-    recovered by searchsorted.
+    bits, so uniqueness is established by a stable lexicographic order +
+    neighbor comparison and ranks are scattered back through the
+    permutation instead of being recovered by searchsorted. With the static
+    bit budgets ``hi_bits``/``lo_bits`` the order comes from Morton-radix
+    counting passes (no XLA sort primitive); without ``hi_bits`` — or with
+    ``binning_mode='argsort'`` — the retained lexsort baseline runs.
 
     Returns (rep, count, rank): ``rep[r]`` is the original index of the
     representative of unique key r (-1 padding); ``rank[i]`` is the unique id
@@ -86,7 +123,15 @@ def unique_pairs(hi: jnp.ndarray, lo: jnp.ndarray, valid: jnp.ndarray, size: int
     n = hi.shape[0]
     hi = jnp.where(valid, hi, INVALID)
     lo = jnp.where(valid, lo, INVALID)
-    order = jnp.lexsort((lo, hi))
+    if (binning_mode == "argsort" or hi_bits is None or hi_bits > 30
+            or lo_bits > 30):
+        order = jnp.lexsort((lo, hi))
+    else:
+        # minor key first; invalid entries pushed past every valid hi key
+        rlo = jnp.where(valid, lo, 0)
+        rhi = jnp.where(valid, hi, jnp.int32(1 << hi_bits))
+        order = binning.counting_lexsort((rlo, rhi),
+                                         (lo_bits, hi_bits + 1))
     shi, slo, sval = hi[order], lo[order], valid[order]
     is_new = jnp.concatenate(
         [jnp.array([True]),
@@ -144,14 +189,18 @@ def build_kmap_hash(coords: np.ndarray, batch: np.ndarray,
 # OCTENT stage 1: build the blockwise octree table (Fig. 5(c) lines 1-6)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_blocks", "grid_bits", "batch_bits"))
+@partial(jax.jit, static_argnames=("max_blocks", "grid_bits", "batch_bits",
+                                   "binning_mode"))
 def build_block_table(coords: jnp.ndarray, batch: jnp.ndarray,
                       valid: jnp.ndarray, *, max_blocks: int,
-                      grid_bits: int = 7, batch_bits: int = 4) -> BlockTable:
+                      grid_bits: int = 7, batch_bits: int = 4,
+                      binning_mode: str = "counting") -> BlockTable:
     n = coords.shape[0]
     bkey = jnp.where(valid, morton.block_key(coords, batch, grid_bits, batch_bits),
                      INVALID)
-    ublocks, n_blocks, rank = sorted_unique(bkey, max_blocks)
+    ublocks, n_blocks, rank = sorted_unique(
+        bkey, max_blocks, nbits=3 * grid_bits + batch_bits,
+        binning_mode=binning_mode)
     phi = morton.local_code(coords)
     # flat layout [block, bank(phi_1), row(phi_hi)] — Fig. 6(a)'s banked SRAM
     bank, row = morton.bank_and_row(phi)
@@ -191,17 +240,23 @@ def query_block_table(table: BlockTable, qcoords: jnp.ndarray,
     return jnp.where(hit, cand, -1)
 
 
-@partial(jax.jit, static_argnames=("max_blocks", "grid_bits", "batch_bits"))
+@partial(jax.jit, static_argnames=("max_blocks", "grid_bits", "batch_bits",
+                                   "binning_mode"))
 def build_kmap_octree(coords: jnp.ndarray, batch: jnp.ndarray,
                       valid: jnp.ndarray, offsets: jnp.ndarray, *,
                       max_blocks: int, grid_bits: int = 7,
-                      batch_bits: int = 4) -> jnp.ndarray:
+                      batch_bits: int = 4,
+                      binning_mode: str = "counting") -> jnp.ndarray:
     """OCTENT map search for submanifold convolution (outputs == inputs).
 
-    Returns kmap (N, K) int32 with -1 for misses.
+    Returns kmap (N, K) int32 with -1 for misses. This is the dense-table
+    XLA builder, retained as the ``search_impl='xla'`` oracle of the fused
+    engine (kernels/octent); ``binning_mode='argsort'`` additionally
+    restores the pre-PR-3 global-argsort table build for baselines.
     """
     table = build_block_table(coords, batch, valid, max_blocks=max_blocks,
-                              grid_bits=grid_bits, batch_bits=batch_bits)
+                              grid_bits=grid_bits, batch_bits=batch_bits,
+                              binning_mode=binning_mode)
     q = coords[:, None, :] + offsets[None, :, :]            # (N, K, 3)
     qb = jnp.broadcast_to(batch[:, None], q.shape[:2])
     qv = jnp.broadcast_to(valid[:, None], q.shape[:2])
@@ -287,7 +342,8 @@ def build_maps_gconv2(coords: jnp.ndarray, batch: jnp.ndarray,
     parent = coords >> 1
     hi = morton.block_key(parent, batch, grid_bits, batch_bits)
     lo = morton.local_code(parent)
-    rep, n_out, rank = unique_pairs(hi, lo, valid, n)
+    rep, n_out, rank = unique_pairs(hi, lo, valid, n,
+                                    hi_bits=3 * grid_bits + batch_bits)
     parents_all = parent
     out_coords, ok = _gather_rep(rep, parents_all)
     out_batch, _ = _gather_rep(rep, batch)
@@ -330,7 +386,8 @@ def build_maps_gconv3(coords: jnp.ndarray, batch: jnp.ndarray,
     # clouds, so callers cap the 8N candidate space (overflow truncates —
     # the standard padded-shape contract; n_out reports the true count).
     budget = out_budget if out_budget is not None else m
-    rep, n_out, rank = unique_pairs(hi, lo, ok_flat, budget)
+    rep, n_out, rank = unique_pairs(hi, lo, ok_flat, budget,
+                                    hi_bits=3 * grid_bits + batch_bits)
     ok_flat = ok_flat & (rank < budget)
     out_coords, okv = _gather_rep(rep, out.reshape(-1, 3))
     out_batch, _ = _gather_rep(rep, ob.reshape(-1))

@@ -55,17 +55,28 @@ def _compact1by2(v: jnp.ndarray, bits: int) -> jnp.ndarray:
     return v & ((1 << bits) - 1)
 
 
-def interleave3(coords: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Morton-encode ``coords[..., (x, y, z)]`` -> int32 code, x at bit 0.
+def interleave_xyz(x: jnp.ndarray, y: jnp.ndarray, z: jnp.ndarray,
+                   bits: int) -> jnp.ndarray:
+    """Morton-encode separate x/y/z channels -> int32 code, x at bit 0.
 
-    Matches eq. (3): each octal digit is {z y x}.
+    The split-coordinate form of :func:`interleave3` — pure shift/mask VPU
+    ops on whatever shape the channels have, so Pallas kernels can encode
+    in-register tiles without stacking a (..., 3) axis first.
     """
-    x, y, z = coords[..., 0], coords[..., 1], coords[..., 2]
     return (
         _part1by2(x, bits)
         | (_part1by2(y, bits) << 1)
         | (_part1by2(z, bits) << 2)
     )
+
+
+def interleave3(coords: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Morton-encode ``coords[..., (x, y, z)]`` -> int32 code, x at bit 0.
+
+    Matches eq. (3): each octal digit is {z y x}.
+    """
+    return interleave_xyz(coords[..., 0], coords[..., 1], coords[..., 2],
+                          bits)
 
 
 def deinterleave3(code: jnp.ndarray, bits: int) -> jnp.ndarray:

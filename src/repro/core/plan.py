@@ -30,11 +30,20 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import mapsearch, morton, rulebook, sparsity
 from repro.core.mapsearch import StridedMaps
 from repro.kernels.spconv_gemm import ops as sg_ops
+
+
+def _octent_ops():
+    # deferred: kernels/octent itself imports repro.core (morton/binning),
+    # so a module-level import here would cycle when the octent package is
+    # the first thing a process imports
+    from repro.kernels.octent import ops as oct_ops
+    return oct_ops
 
 MAPSEARCH_CALLS = [0]
 
@@ -67,6 +76,8 @@ class ConvPlan(NamedTuple):
     out_batch: jnp.ndarray | None
     out_valid: jnp.ndarray | None
     maps: StridedMaps | None
+    overflow: jnp.ndarray | None = None  # () bool: block table overflowed
+                                         # (subm3 under jit; eager raises)
 
 
 class PlanCache:
@@ -110,22 +121,60 @@ def _maybe_cached(cache: PlanCache | None, arrays, statics, build):
 # Plan builders — one per layer type
 # ---------------------------------------------------------------------------
 
+def _require_block_capacity(n_blocks, max_blocks: int):
+    """Surface octree-table overflow instead of silently dropping voxels.
+
+    The table build scatters with mode='drop': a scene with more occupied
+    16^3 blocks than ``max_blocks`` would quietly lose every map touching
+    the dropped blocks (the sibling of the grid_bits clamp PR 1 outlawed
+    for the sorted variant). Eagerly this raises; under jit the comparison
+    is a tracer, so the flag is returned and carried on the plan
+    (``ConvPlan.overflow``) for the caller to assert on.
+    """
+    overflow = jnp.asarray(n_blocks, jnp.int32) > max_blocks
+    try:
+        concrete = bool(overflow)
+    except jax.errors.ConcretizationTypeError:
+        return overflow
+    if concrete:
+        raise ValueError(
+            f"octree block table overflow: the scene occupies "
+            f"{int(n_blocks)} 16^3 blocks but max_blocks={max_blocks}; "
+            f"voxels in the dropped blocks would silently lose their maps "
+            f"— raise max_blocks (or coarsen the scene)")
+    return overflow
+
+
 def subm3_plan(coords, batch, valid, *, max_blocks: int,
                method: str = "octree", grid_bits: int = 7,
                batch_bits: int = 4, bm: int = 128, bo: int | None = None,
+               search_impl: str | None = None,
                cache: PlanCache | None = None) -> ConvPlan:
     """Submanifold 3x3x3 plan: outputs == inputs, 27 taps. ``bo`` is the
     output-block height of the output-stationary tile layout (DESIGN.md
-    §5/§6); None picks the build default."""
-    statics = ("subm3", max_blocks, method, grid_bits, batch_bits, bm, bo)
+    §5/§6); None picks the build default.
+
+    ``method='octree'`` runs the fused OCTENT engine (kernels/octent):
+    ``search_impl`` picks its backend — pallas | interpret | ref | xla,
+    None resolving via ``octent.ops.search_impl()`` (the Pallas kernel on
+    TPU, its XLA bit-oracle elsewhere); 'xla' is the retained dense-table
+    builder. The resolved impl is part of the cache key.
+    """
+    simpl = (search_impl or _octent_ops().search_impl()) \
+        if method == "octree" else None
+    statics = ("subm3", max_blocks, method, simpl, grid_bits, batch_bits,
+               bm, bo)
 
     def build():
         MAPSEARCH_CALLS[0] += 1
         offs = jnp.asarray(morton.subm3_offsets())
+        overflow = None
         if method == "octree":
-            kmap = mapsearch.build_kmap_octree(
-                coords, batch, valid, offs, max_blocks=max_blocks,
-                grid_bits=grid_bits, batch_bits=batch_bits)
+            kmap, n_blocks = _octent_ops().build_kmap(
+                coords, batch, valid, max_blocks=max_blocks,
+                grid_bits=grid_bits, batch_bits=batch_bits, impl=simpl,
+                offsets=offs)
+            overflow = _require_block_capacity(n_blocks, max_blocks)
         elif method == "sorted":
             if not mapsearch.sorted_key_fits(grid_bits, batch_bits):
                 raise ValueError(
@@ -144,7 +193,7 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
             raise ValueError(f"unknown map search method {method!r}")
         tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo)
         return ConvPlan("subm3", kmap, tiles, coords.shape[0], 27,
-                        None, None, None, None)
+                        None, None, None, None, overflow)
 
     return _maybe_cached(cache, (coords, batch, valid), statics, build)
 

@@ -37,8 +37,20 @@ def tap_counts(kmap: jnp.ndarray) -> jnp.ndarray:
 
 
 def tap_schedule(counts: jnp.ndarray) -> jnp.ndarray:
-    """Descending-count tap order (hot taps first => maximal weight reuse)."""
-    return jnp.argsort(-counts)
+    """Descending-count tap order (hot taps first => maximal weight reuse).
+
+    Sort-free (plan builds must emit zero XLA ``sort`` ops, DESIGN.md §5):
+    with K <= 27 taps, each tap's schedule position is its stable
+    descending rank from an O(K^2) pairwise comparison — identical to the
+    old ``argsort(-counts)`` result, including tie order.
+    """
+    k = counts.shape[0]
+    idx = jnp.arange(k, dtype=jnp.int32)
+    beats = (counts[None, :] > counts[:, None]).sum(axis=1)
+    ties_before = ((counts[None, :] == counts[:, None])
+                   & (idx[None, :] < idx[:, None])).sum(axis=1)
+    rank = (beats + ties_before).astype(jnp.int32)   # tap -> schedule slot
+    return jnp.zeros((k,), jnp.int32).at[rank].set(idx)
 
 
 def blocked_tap_counts(kmap: jnp.ndarray, bo: int) -> jnp.ndarray:

@@ -68,18 +68,21 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
                batch_bits: int = 4, spac: bool = True,
                plan: planlib.ConvPlan | None = None,
                cache: planlib.PlanCache | None = None,
-               impl: str | None = None, bm: int = 128,
-               bo: int | None = None) -> SparseTensor:
+               impl: str | None = None, search_impl: str | None = None,
+               bm: int = 128, bo: int | None = None) -> SparseTensor:
     """Submanifold 3x3x3 SpConv (Subm3): coordinates unchanged (Fig. 2).
 
     Pass ``cache`` to share map search across stacked blocks on the same
     coordinate set, or ``plan`` to reuse an explicit prebuilt plan.
+    ``impl`` selects the rulebook-execution backend, ``search_impl`` the
+    OCTENT query backend (kernels/octent/ops.search_impl resolves None).
     """
     if plan is None:
         plan = planlib.subm3_plan(st.coords, st.batch, st.valid,
                                   max_blocks=max_blocks, method=method,
                                   grid_bits=grid_bits, batch_bits=batch_bits,
-                                  bm=bm, bo=bo, cache=cache)
+                                  bm=bm, bo=bo, search_impl=search_impl,
+                                  cache=cache)
     out = planlib.execute(plan, st.feats, params["w"], params["b"],
                           spac=spac, impl=impl)
     out = jnp.where(st.valid[:, None], out, 0)

@@ -1,0 +1,4 @@
+from repro.kernels.octent import kernel, ops, ref  # noqa: F401
+from repro.kernels.octent.ops import (QueryTable, build_kmap,  # noqa: F401
+                                      build_query_table, hardware_impl,
+                                      search_impl)

@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: fused OCTENT map-search query (paper Fig. 5(c) l.7-13).
+
+The XLA builder (`mapsearch.build_kmap_octree`) materializes the full
+(N, K, 3) query tensor plus broadcast batch/valid arrays in HBM, then runs
+`searchsorted` and the banked-table gather as separate HBM-roundtripping
+ops. This kernel is the Query Transmitter of Fig. 6(a) as one pass: each
+grid step pulls a ``bq``-voxel tile of packed coordinates into VMEM,
+generates all K offset queries **in-register** (broadcast adds over the
+static offset list), Morton-encodes them with the same shift/mask ladder
+the ASIC wires into PNELUT, and resolves them against the VMEM-resident
+block directory + compacted banked table with two in-register binary
+searches. The kmap tile is written straight to the output block — no
+query tensor, no bkey array, no searchsorted intermediate ever exists in
+HBM (jaxpr-audited in tests/test_mapsearch.py).
+
+Table layout (built sort-free by kernels/octent/ops.build_query_table):
+
+  * ``ublocks`` (max_blocks,)  — sorted occupied block keys, the octree
+    directory. First search: block key -> block rank.
+  * ``tkey``    (n_pad,)       — sorted compacted table addresses
+    ``rank * 4096 + bank * 512 + row`` — exactly the flat address space of
+    the paper's 8-bank SRAM (Fig. 6(a)), minus the empty slots, so the
+    second search lands on the same (bank, row) cell the ASIC's parallel
+    banks would strobe. ``tval`` holds the voxel index per slot.
+
+Searching the *compacted* table instead of direct-addressing the dense
+(max_blocks * 4096) one trades log2(N) in-register steps for a table that
+actually fits VMEM (4N bytes vs 16 KiB per block) — the dense table stays
+the XLA oracle's representation.
+
+The two binary searches index VMEM-resident int32 vectors with computed
+(K, bq) index tiles (``jnp.take``); on hosts without the Mosaic dynamic-
+gather lowering the wrapper runs under the Pallas interpreter, mirroring
+the spconv_gemm kernels (`ops.hardware_impl`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import morton
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+#: lane width of the table arrays (tkey/tval/ublocks are padded to this)
+LANE = 128
+
+
+def _lower_bound(arr: jnp.ndarray, key: jnp.ndarray, size: int,
+                 hi0: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """Vectorized first-position-not-less-than over a sorted 1D array.
+
+    Fixed ``steps`` iterations (the grid has no data-dependent trip
+    counts); each step gathers one probe per query lane. ``hi0`` bounds
+    the live prefix of ``arr`` (entries beyond it are sentinel-padded).
+    """
+    lo = jnp.zeros(key.shape, jnp.int32)
+    hi = jnp.broadcast_to(hi0, key.shape).astype(jnp.int32)
+    for _ in range(steps):
+        cont = lo < hi
+        mid = (lo + hi) >> 1
+        mv = jnp.take(arr, jnp.minimum(mid, size - 1))
+        right = cont & (mv < key)
+        lo = jnp.where(right, mid + 1, lo)
+        hi = jnp.where(cont & ~right, mid, hi)
+    return lo
+
+
+def _octent_kernel(nblk_ref, q_ref, offs_ref, ub_ref, tkey_ref, tval_ref,
+                   out_ref, *, grid_bits: int, batch_bits: int,
+                   max_blocks: int, nb_steps: int, nt_steps: int):
+    k = out_ref.shape[0]
+    ub = ub_ref[0]
+    tkey = tkey_ref[0]
+    tval = tval_ref[0]
+    n_blocks = jnp.minimum(nblk_ref[0], max_blocks)
+
+    # -- query generation, in-register: (K, bq) per coordinate channel
+    x = q_ref[0][None, :] + offs_ref[:, 0][:, None]
+    y = q_ref[1][None, :] + offs_ref[:, 1][:, None]
+    z = q_ref[2][None, :] + offs_ref[:, 2][:, None]
+    bt = jnp.broadcast_to(q_ref[3][None, :], (k, x.shape[1]))
+    v = q_ref[4][None, :] != 0
+
+    limit = (1 << grid_bits) * morton.BLOCK_SIZE
+    inb = ((x >= 0) & (x < limit) & (y >= 0) & (y < limit)
+           & (z >= 0) & (z < limit) & v)
+    cx = jnp.clip(x, 0, limit - 1)
+    cy = jnp.clip(y, 0, limit - 1)
+    cz = jnp.clip(z, 0, limit - 1)
+
+    # -- octree encoding (eq. 3), the PNELUT shift/mask ladder on the VPU
+    bkey = (morton.interleave_xyz(cx >> morton.BLOCK_BITS,
+                                  cy >> morton.BLOCK_BITS,
+                                  cz >> morton.BLOCK_BITS, grid_bits)
+            | (bt << (3 * grid_bits)))
+    phi = morton.interleave_xyz(cx & (morton.BLOCK_SIZE - 1),
+                                cy & (morton.BLOCK_SIZE - 1),
+                                cz & (morton.BLOCK_SIZE - 1),
+                                morton.BLOCK_BITS)
+    bank, row = morton.bank_and_row(phi)
+
+    # -- stage 1: block key -> rank in the directory
+    rank = _lower_bound(ub, bkey, ub.shape[0], n_blocks, nb_steps)
+    hit_b = ((rank < n_blocks)
+             & (jnp.take(ub, jnp.minimum(rank, ub.shape[0] - 1)) == bkey))
+
+    # -- stage 2: (rank, bank, row) -> voxel via the compacted banked table
+    key2 = rank * morton.TABLE_SIZE + bank * morton.BANK_ROWS + row
+    n_t = tkey.shape[0]
+    pos = _lower_bound(tkey, key2, n_t, n_t, nt_steps)
+    pos_c = jnp.minimum(pos, n_t - 1)
+    hit = hit_b & inb & (jnp.take(tkey, pos_c) == key2)
+    out_ref[...] = jnp.where(hit, jnp.take(tval, pos_c), -1)
+
+
+@functools.partial(jax.jit, static_argnames=("grid_bits", "batch_bits", "bq",
+                                             "interpret"))
+def octent_query(qpack: jnp.ndarray, offsets: jnp.ndarray,
+                 ublocks: jnp.ndarray, tkey: jnp.ndarray, tval: jnp.ndarray,
+                 n_blocks: jnp.ndarray, *, grid_bits: int = 7,
+                 batch_bits: int = 4, bq: int = 128,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Fused query over a packed voxel stream. Returns (K, N_pad) int32.
+
+    qpack (5, N_pad): rows x, y, z, batch, valid — N_pad a bq multiple.
+    offsets (K, 3); ublocks/tkey/tval from ops.build_query_table (tkey and
+    tval LANE-padded, ublocks INVALID-padded); n_blocks () or (1,).
+    """
+    five, n_pad = qpack.shape
+    assert five == 5 and n_pad % bq == 0, (qpack.shape, bq)
+    k = offsets.shape[0]
+    max_blocks = ublocks.shape[0]
+    mb_pad = -(-max_blocks // LANE) * LANE
+    ub = jnp.pad(ublocks, (0, mb_pad - max_blocks),
+                 constant_values=jnp.iinfo(jnp.int32).max)
+    n_t = tkey.shape[0]
+    assert n_t % LANE == 0 and tval.shape[0] == n_t, (n_t, tval.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // bq,),
+        in_specs=[
+            pl.BlockSpec((5, bq), lambda i, nblk: (0, i)),
+            pl.BlockSpec((k, 3), lambda i, nblk: (0, 0)),
+            pl.BlockSpec((1, mb_pad), lambda i, nblk: (0, 0)),
+            pl.BlockSpec((1, n_t), lambda i, nblk: (0, 0)),
+            pl.BlockSpec((1, n_t), lambda i, nblk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, bq), lambda i, nblk: (0, i)),
+    )
+    kernel = functools.partial(
+        _octent_kernel, grid_bits=grid_bits, batch_bits=batch_bits,
+        max_blocks=max_blocks, nb_steps=max(mb_pad.bit_length(), 1),
+        nt_steps=max(n_t.bit_length(), 1))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, n_pad), jnp.int32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+        name="octent_query",
+    )(jnp.atleast_1d(n_blocks).astype(jnp.int32), qpack, offsets,
+      ub.reshape(1, mb_pad), tkey.reshape(1, n_t), tval.reshape(1, n_t))

@@ -1,0 +1,161 @@
+"""OCTENT engine ops: sort-free table build + impl-dispatched fused query.
+
+This is the map-search sibling of kernels/spconv_gemm/ops.py: the plan
+layer (core/plan.py) calls :func:`build_kmap` and gets whichever backend
+fits the host —
+
+  * ``pallas``    — compiled fused query kernel (TPU).
+  * ``interpret`` — same kernel under the Pallas interpreter (CI/CPU).
+  * ``ref``       — pure-XLA bit-level oracle of the same math (ref.py);
+    the default off-TPU backend.
+  * ``xla``       — the original dense-table builder
+    (mapsearch.build_kmap_octree), retained as the PR-1-style oracle.
+
+All backends return bit-identical kmaps (tested against the host hash
+probe of [9]).
+
+Stage 1 (:func:`build_query_table`) builds the octree directory + the
+*compacted* banked table with zero XLA ``sort`` ops: block keys and flat
+table addresses are bounded composites, so Morton-radix counting passes
+(core/binning.py) reproduce the stable order the old global argsorts
+produced. ``n_blocks`` reports the true occupied-block count — callers
+must check it against ``max_blocks`` (plan.subm3_plan raises/flags; the
+dense XLA builder silently dropped overflowing voxels before PR 3).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning, mapsearch, morton
+from repro.kernels.octent.kernel import LANE, octent_query
+from repro.kernels.octent.ref import octent_query_ref
+
+
+def search_impl() -> str:
+    """pallas | interpret | ref | xla — resolved once per call site.
+
+    Resolve *outside* jit boundaries and cache keys (core/plan.py does):
+    the env var must be re-read per call, not frozen into a trace.
+    """
+    impl = os.environ.get("REPRO_SEARCH_IMPL", "auto")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def hardware_impl() -> str:
+    """The impl that exercises the Pallas query kernel on this host: the
+    compiled kernel on TPU, the interpreter elsewhere (tests/CI)."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+class QueryTable(NamedTuple):
+    """Sort-free OCTENT search structure (kernel.py module doc).
+
+    ``ublocks`` is the sorted block directory (INVALID padded); ``tkey`` /
+    ``tval`` the compacted banked table: sorted flat addresses
+    ``rank * 4096 + bank * 512 + row`` (LANE-padded with the out-of-range
+    sentinel ``max_blocks * 4096``) and the voxel index per slot (-1 pad).
+    ``n_blocks`` is the *true* occupied-block count — it may exceed
+    ``max_blocks``, which is the caller's overflow signal.
+    """
+
+    ublocks: jnp.ndarray   # (max_blocks,) int32
+    n_blocks: jnp.ndarray  # () int32
+    tkey: jnp.ndarray      # (n_pad,) int32, sorted
+    tval: jnp.ndarray      # (n_pad,) int32
+
+
+@functools.partial(jax.jit, static_argnames=("max_blocks", "grid_bits",
+                                             "batch_bits", "binning_mode"))
+def build_query_table(coords: jnp.ndarray, batch: jnp.ndarray,
+                      valid: jnp.ndarray, *, max_blocks: int,
+                      grid_bits: int = 7, batch_bits: int = 4,
+                      binning_mode: str = "counting") -> QueryTable:
+    n = coords.shape[0]
+    sentinel = max_blocks * morton.TABLE_SIZE
+    assert sentinel < 2 ** 31, (
+        f"max_blocks={max_blocks}: compacted table addresses overflow int32")
+    bkey = jnp.where(valid,
+                     morton.block_key(coords, batch, grid_bits, batch_bits),
+                     mapsearch.INVALID)
+    ublocks, n_blocks, rank = mapsearch.sorted_unique(
+        bkey, max_blocks, nbits=3 * grid_bits + batch_bits,
+        binning_mode=binning_mode)
+    bank, row = morton.bank_and_row(morton.local_code(coords))
+    tk = rank * morton.TABLE_SIZE + bank * morton.BANK_ROWS + row
+    tk = jnp.where(valid & (rank < max_blocks), tk, sentinel)
+    if binning_mode == "counting":
+        order = binning.counting_argsort(tk, sentinel.bit_length())
+    else:
+        order = jnp.argsort(tk).astype(jnp.int32)
+    tkey = tk[order]
+    tval = jnp.where(tkey < sentinel, order, -1)
+    pad = -(-n // LANE) * LANE - n
+    tkey = jnp.pad(tkey, (0, pad), constant_values=sentinel)
+    tval = jnp.pad(tval, (0, pad), constant_values=-1)
+    return QueryTable(ublocks, n_blocks.astype(jnp.int32), tkey, tval)
+
+
+@functools.partial(jax.jit, static_argnames=("bq",))
+def _pack_queries(coords, batch, valid, *, bq: int) -> jnp.ndarray:
+    """Pack the voxel stream as (5, N_pad) int32 rows x/y/z/batch/valid."""
+    n = coords.shape[0]
+    n_pad = -(-n // bq) * bq
+    q = jnp.zeros((5, n_pad), jnp.int32)
+    q = q.at[0:3, :n].set(coords.T.astype(jnp.int32))
+    q = q.at[3, :n].set(batch.astype(jnp.int32))
+    return q.at[4, :n].set(valid.astype(jnp.int32))
+
+
+def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
+               *, max_blocks: int, grid_bits: int = 7, batch_bits: int = 4,
+               impl: str | None = None, bq: int = 128,
+               offsets: jnp.ndarray | None = None,
+               binning_mode: str = "counting"
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Submanifold OCTENT map search. Returns (kmap (N, K) int32, n_blocks).
+
+    ``n_blocks`` is the true occupied-block count for the caller's
+    overflow check; kmap misses are -1, exactly as the oracles.
+    ``binning_mode='argsort'`` swaps the stage-1 build's radix passes for
+    the retained global sorts (benchmark baseline; same kmap either way).
+    """
+    impl = impl or search_impl()
+    if offsets is None:
+        offsets = jnp.asarray(morton.subm3_offsets())
+    if impl == "xla":
+        table = mapsearch.build_block_table(
+            coords, batch, valid, max_blocks=max_blocks,
+            grid_bits=grid_bits, batch_bits=batch_bits,
+            binning_mode=binning_mode)
+        q = coords[:, None, :] + offsets[None, :, :]
+        qb = jnp.broadcast_to(batch[:, None], q.shape[:2])
+        qv = jnp.broadcast_to(valid[:, None], q.shape[:2])
+        kmap = mapsearch.query_block_table(table, q, qb, qv,
+                                           grid_bits=grid_bits,
+                                           batch_bits=batch_bits)
+        return kmap, table.n_blocks.astype(jnp.int32)
+    qt = build_query_table(coords, batch, valid, max_blocks=max_blocks,
+                           grid_bits=grid_bits, batch_bits=batch_bits,
+                           binning_mode=binning_mode)
+    if impl == "ref":
+        kmap = octent_query_ref(coords, batch, valid, offsets, qt.ublocks,
+                                qt.tkey, qt.tval, qt.n_blocks,
+                                grid_bits=grid_bits, batch_bits=batch_bits)
+    elif impl in ("pallas", "interpret"):
+        n = coords.shape[0]
+        qpack = _pack_queries(coords, batch, valid, bq=bq)
+        out = octent_query(qpack, offsets.astype(jnp.int32), qt.ublocks,
+                           qt.tkey, qt.tval, qt.n_blocks,
+                           grid_bits=grid_bits, batch_bits=batch_bits,
+                           bq=bq, interpret=impl == "interpret")
+        kmap = out[:, :n].T
+    else:
+        raise ValueError(f"unknown search impl {impl!r}")
+    return kmap, qt.n_blocks

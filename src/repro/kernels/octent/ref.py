@@ -1,0 +1,47 @@
+"""Pure-XLA reference of the fused OCTENT query (bit-level oracle).
+
+Mirrors kernel._octent_kernel's math exactly — same clipping, same Morton
+ladder, same two lower-bound searches over the same sort-free tables — but
+vectorized over the whole cloud in plain jnp, so every intermediate (the
+(N, K, 3) query tensor included) materializes. That is the point: it is
+the readable, HBM-roundtripping form the kernel fuses away, and the default
+map-search backend on hosts without a TPU (`ops.search_impl`). Integer
+in/integer out, so kernel-vs-ref parity is bit-exact, not tolerance-based.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import morton
+
+
+@partial(jax.jit, static_argnames=("grid_bits", "batch_bits"))
+def octent_query_ref(coords: jnp.ndarray, batch: jnp.ndarray,
+                     valid: jnp.ndarray, offsets: jnp.ndarray,
+                     ublocks: jnp.ndarray, tkey: jnp.ndarray,
+                     tval: jnp.ndarray, n_blocks: jnp.ndarray, *,
+                     grid_bits: int = 7, batch_bits: int = 4) -> jnp.ndarray:
+    """Resolve all K offset queries per voxel. Returns kmap (N, K) int32."""
+    max_blocks = ublocks.shape[0]
+    q = coords[:, None, :] + offsets[None, :, :]          # (N, K, 3)
+    limit = (1 << grid_bits) * morton.BLOCK_SIZE
+    inb = jnp.all((q >= 0) & (q < limit), axis=-1) & valid[:, None]
+    qc = jnp.clip(q, 0, limit - 1)
+    bt = jnp.broadcast_to(batch[:, None], q.shape[:2]).astype(jnp.int32)
+    bkey = (morton.interleave3(qc >> morton.BLOCK_BITS, grid_bits)
+            | (bt << (3 * grid_bits)))
+    nb = jnp.minimum(jnp.asarray(n_blocks, jnp.int32), max_blocks)
+    rank = jnp.minimum(jnp.searchsorted(ublocks, bkey).astype(jnp.int32), nb)
+    hit_b = ((rank < nb)
+             & (ublocks[jnp.minimum(rank, max_blocks - 1)] == bkey))
+    phi = morton.interleave3(qc & (morton.BLOCK_SIZE - 1), morton.BLOCK_BITS)
+    bank, row = morton.bank_and_row(phi)
+    key2 = rank * morton.TABLE_SIZE + bank * morton.BANK_ROWS + row
+    n_t = tkey.shape[0]
+    pos = jnp.minimum(jnp.searchsorted(tkey, key2).astype(jnp.int32),
+                      n_t - 1)
+    hit = hit_b & inb & (tkey[pos] == key2)
+    return jnp.where(hit, tval[pos], -1)

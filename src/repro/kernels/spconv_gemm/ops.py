@@ -113,7 +113,8 @@ def _padded_budget(n_out: int, k: int, bm: int, bo: int) -> int:
 
 def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
                     *, bm: int = 128, bo: int | None = None,
-                    schedule: bool = True) -> TapTiles:
+                    schedule: bool = True,
+                    binning: str = "counting") -> TapTiles:
     """Sort maps by (output block, scheduled tap), pad each group to bm.
 
     ``bo`` is the output-block height of the output-stationary layout;
@@ -134,15 +135,26 @@ def build_tap_tiles(kmap: jnp.ndarray, row_nz: jnp.ndarray | None = None,
     ASIC's Gather Unit shrinks operand vectors. Leave it None when building
     geometry-only tiles for a cached plan and refresh liveness per layer
     with :func:`tile_liveness` instead.
+
+    ``binning`` selects the layout's ordering pass (DESIGN.md §5): the
+    default ``'counting'`` derives every slot position in closed form
+    (group starts from a bincount, stable within-group ranks from a
+    segment-reset cumsum — exactly one map per (output row, tap) makes the
+    stable counting rank computable without reordering anything), so the
+    build contains zero XLA ``sort`` ops. ``'argsort'`` is the retained
+    27N-key global-argsort baseline; both produce bit-identical tiles
+    (tested).
     """
     if bo is None:
         bo = max(bm, 512)
-    arrays = _build_tap_tiles(kmap, row_nz, bm=bm, bo=bo, schedule=schedule)
+    arrays = _build_tap_tiles(kmap, row_nz, bm=bm, bo=bo, schedule=schedule,
+                              binning=binning)
     return TapTiles(*arrays, bo=bo)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bo", "schedule"))
-def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bo", "schedule", "binning"))
+def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule, binning):
     n_out, k = kmap.shape
     n_blocks = -(-n_out // bo)
     g_total = n_blocks * k
@@ -168,13 +180,33 @@ def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule):
 
     # group key: output block major, schedule rank minor; invalid at the end
     gkey = jnp.where(valid, (outs // bo) * k + srank[taps], g_total)
-    order = jnp.argsort(gkey, stable=True)
-    skey = gkey[order]
     counts_g = jnp.bincount(gkey, length=g_total + 1)[:g_total]
-    gstarts = jnp.concatenate([jnp.zeros(1, counts_g.dtype),
-                               jnp.cumsum(counts_g)])[:g_total]
-    rank = jnp.arange(n_out * k) - jnp.take(
-        gstarts, jnp.minimum(skey, g_total - 1))
+    if binning == "argsort":
+        # retained baseline: global stable argsort of the 27N group keys
+        order = jnp.argsort(gkey, stable=True)
+        skey = gkey[order]
+        gstarts = jnp.concatenate([jnp.zeros(1, counts_g.dtype),
+                                   jnp.cumsum(counts_g)])[:g_total]
+        rank = jnp.arange(n_out * k) - jnp.take(
+            gstarts, jnp.minimum(skey, g_total - 1))
+        src = order
+        src_valid = skey < g_total
+    elif binning == "counting":
+        # sort-free: each output row holds exactly one map per tap, and a
+        # (block, schedule-slot) group is one tap's maps within one block,
+        # so the stable within-group rank of entry (row, tap) is just the
+        # count of valid same-tap entries on earlier rows of the block — a
+        # cumsum over rows, reset at block boundaries. No reordering pass.
+        v2 = valid.reshape(n_out, k).astype(jnp.int32)
+        csum = jnp.cumsum(v2, axis=0)                      # inclusive
+        first_row = (jnp.arange(n_out, dtype=jnp.int32) // bo) * bo
+        carried = jnp.take(csum, jnp.maximum(first_row - 1, 0), axis=0)
+        carried = jnp.where(first_row[:, None] > 0, carried, 0)
+        rank = (csum - v2 - carried).reshape(-1)
+        src = jnp.arange(n_out * k, dtype=jnp.int32)
+        src_valid = valid
+    else:
+        raise ValueError(f"unknown binning mode {binning!r}")
     # padded group starts; empty output blocks force one all-pad tile on
     # their leading group so the kernel still opens (zeroes) the block
     pcounts = ((counts_g + bm - 1) // bm) * bm
@@ -183,13 +215,18 @@ def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule):
     pcounts = pc2.reshape(-1)
     pstarts = jnp.concatenate([jnp.zeros(1, pcounts.dtype),
                                jnp.cumsum(pcounts)])
-    slot = jnp.where(skey < g_total,
+    if binning == "argsort":
+        gkey_p, flat_p, outs_p, valid_p = (gkey[src], flat_in[src],
+                                           outs[src], valid[src])
+    else:
+        gkey_p, flat_p, outs_p, valid_p = gkey, flat_in, outs, valid
+    slot = jnp.where(src_valid,
                      jnp.take(pstarts[:g_total],
-                              jnp.minimum(skey, g_total - 1)) + rank,
+                              jnp.minimum(gkey_p, g_total - 1)) + rank,
                      m_pad)
 
     gather = jnp.zeros((m_pad,), jnp.int32).at[slot].set(
-        jnp.maximum(flat_in[order], 0), mode="drop")
+        jnp.maximum(flat_p, 0), mode="drop")
     # drop target for pad/elided slots: n_out_pad sits OUTSIDE every bo-row
     # output block (blocks tile [0, n_blocks*bo)), so the kernel's in-block
     # mask always zeroes such slots before the one-hot matmul — their rows
@@ -197,9 +234,9 @@ def _build_tap_tiles(kmap, row_nz, *, bm, bo, schedule):
     # last block when bo does not divide n_out. The XLA paths drop it via
     # scatter mode="drop" just the same.
     scatter = jnp.full((m_pad,), n_blocks * bo, jnp.int32).at[slot].set(
-        outs[order], mode="drop")
+        outs_p, mode="drop")
     svalid = jnp.zeros((m_pad,), bool).at[slot].set(
-        valid[order], mode="drop")
+        valid_p, mode="drop")
 
     t = m_pad // bm
     tile_starts = jnp.arange(t) * bm

@@ -36,8 +36,13 @@ def forall(n_cases: int = N_CASES):
 
 
 def random_cloud(rng: np.random.Generator, n: int, extent: int, batch: int = 1,
-                 n_valid: int | None = None):
-    """Random voxel cloud: unique (batch, coord) rows, padded with invalid."""
+                 n_valid: int | None = None, origin: int = 0):
+    """Random voxel cloud: unique (batch, coord) rows, padded with invalid.
+
+    ``origin`` shifts the sample window to [origin, origin + extent) per
+    axis — place it against the grid limit to exercise out-of-grid
+    neighbor queries (the OCTENT Query Transmitter's rejection mask).
+    """
     n_valid = n if n_valid is None else n_valid
     seen = set()
     coords = np.zeros((n, 3), dtype=np.int32)
@@ -45,7 +50,7 @@ def random_cloud(rng: np.random.Generator, n: int, extent: int, batch: int = 1,
     valid = np.zeros((n,), dtype=bool)
     i = 0
     while i < n_valid:
-        c = tuple(rng.integers(0, extent, size=3).tolist())
+        c = tuple(rng.integers(origin, origin + extent, size=3).tolist())
         b = int(rng.integers(0, batch))
         if (b, c) in seen:
             continue

@@ -1,8 +1,16 @@
-"""OCTENT map search vs brute-force / hash oracles (paper §IV)."""
+"""OCTENT map search vs brute-force / hash oracles (paper §IV).
+
+Covers the four interchangeable builders plus the fused Pallas engine
+(kernels/octent): interpret-mode kernel parity against the host hash probe
+on randomized clouds (including grid-boundary/out-of-grid queries, empty
+table blocks and all-invalid inputs), bit-parity of the sort-free counting
+table build against the retained argsort baseline, and the jaxpr audits of
+the fused path (zero XLA ``sort`` ops, no (N, K, 3) query tensor)."""
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import mapsearch, morton
+from repro.core import binning, mapsearch, morton
+from repro.kernels.octent import ops as oct_ops
 from tests.proptest import forall, random_cloud
 
 OFFS = morton.subm3_offsets()
@@ -132,6 +140,122 @@ def test_gconv3_maps_against_definition(rng):
         if mv:
             got.add((int(ii), (int(ob[oi]),) + tuple(oc[oi].tolist()), int(tp)))
     assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Fused OCTENT engine (kernels/octent): kernel parity + sort-free audits
+# ---------------------------------------------------------------------------
+
+@forall(8)
+def test_octent_engine_matches_hash_oracle(rng):
+    """ref and interpret-mode Pallas backends are bit-exact vs the host
+    hash probe, across partial validity and multiple batch items. Fixed
+    shape so every case reuses one kernel trace."""
+    n = 48
+    coords, bidx, valid = random_cloud(rng, n, extent=24, batch=2,
+                                       n_valid=int(rng.integers(0, n + 1)))
+    ref = mapsearch.build_kmap_hash(coords, bidx, valid, OFFS)
+    c, b, v = _to_jnp(coords, bidx, valid)
+    for impl in ("ref", "interpret"):
+        km, n_blocks = oct_ops.build_kmap(c, b, v, max_blocks=n, impl=impl,
+                                          bq=16)
+        np.testing.assert_array_equal(np.asarray(km), ref, err_msg=impl)
+    assert int(n_blocks) <= n
+
+
+@forall(6)
+def test_octent_kernel_out_of_grid_queries(rng):
+    """Voxels pressed against the grid limit: their +1 neighbor queries
+    leave the grid and must be rejected, not clipped into an alias."""
+    n = 32
+    limit = (1 << 2) * morton.BLOCK_SIZE          # grid_bits=2 -> 64
+    coords, bidx, valid = random_cloud(rng, n, extent=16, batch=1,
+                                       origin=limit - 16)
+    ref = mapsearch.build_kmap_hash(coords, bidx, valid, OFFS)
+    km, _ = oct_ops.build_kmap(*_to_jnp(coords, bidx, valid), max_blocks=n,
+                               grid_bits=2, impl="interpret", bq=16)
+    np.testing.assert_array_equal(np.asarray(km), ref)
+    # the boundary actually bit: some query went out of grid and missed
+    assert (np.asarray(km) == -1).any()
+
+
+def test_octent_kernel_all_invalid_and_empty_blocks():
+    """All-invalid input -> all-miss kmap; a huge max_blocks leaves most
+    of the directory/table as padding, which must stay inert."""
+    n = 16
+    coords = np.zeros((n, 3), np.int32)
+    bidx = np.zeros(n, np.int32)
+    valid = np.zeros(n, bool)
+    km, n_blocks = oct_ops.build_kmap(*_to_jnp(coords, bidx, valid),
+                                      max_blocks=64, impl="interpret", bq=8)
+    assert (np.asarray(km) == -1).all()
+    assert int(n_blocks) == 0
+    # sparse occupancy with generous padding: parity must hold
+    rng = np.random.default_rng(0)
+    coords, bidx, valid = random_cloud(rng, n, extent=100, batch=1)
+    ref = mapsearch.build_kmap_hash(coords, bidx, valid, OFFS)
+    km, _ = oct_ops.build_kmap(*_to_jnp(coords, bidx, valid),
+                               max_blocks=256, impl="interpret", bq=8)
+    np.testing.assert_array_equal(np.asarray(km), ref)
+
+
+@forall(6)
+def test_query_table_counting_matches_argsort(rng):
+    """The sort-free table build is bit-identical to the argsort build."""
+    n = int(rng.integers(8, 64))
+    coords, bidx, valid = random_cloud(rng, n, extent=48, batch=2,
+                                       n_valid=int(rng.integers(1, n + 1)))
+    c, b, v = _to_jnp(coords, bidx, valid)
+    t1 = oct_ops.build_query_table(c, b, v, max_blocks=n)
+    t2 = oct_ops.build_query_table(c, b, v, max_blocks=n,
+                                   binning_mode="argsort")
+    for name, x, y in zip(t1._fields, t1, t2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+@forall(6)
+def test_unique_pairs_counting_matches_lexsort(rng):
+    n = int(rng.integers(8, 128))
+    valid = rng.random(n) < 0.8
+    hi = rng.integers(0, 1 << 25, n).astype(np.int32)
+    lo = rng.integers(0, 1 << 12, n).astype(np.int32)
+    args = (jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(valid), n)
+    p1 = mapsearch.unique_pairs(*args, hi_bits=25)
+    p2 = mapsearch.unique_pairs(*args, binning_mode="argsort")
+    for x, y in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_octent_build_is_sort_free_and_query_tensor_free():
+    """Acceptance audits: the fused path's jaxpr carries zero XLA ``sort``
+    ops and never materializes the (N, K, 3) query tensor; the retained
+    xla/argsort oracles show both, proving the audits bite."""
+    rng = np.random.default_rng(1)
+    n = 32
+    coords, bidx, valid = random_cloud(rng, n, extent=24, batch=2)
+    c, b, v = _to_jnp(coords, bidx, valid)
+
+    fused = lambda c, b, v: oct_ops.build_kmap(c, b, v, max_blocks=n,
+                                               impl="interpret", bq=8)[0]
+    ref = lambda c, b, v: oct_ops.build_kmap(c, b, v, max_blocks=n,
+                                             impl="ref")[0]
+    xla = lambda c, b, v: oct_ops.build_kmap(c, b, v, max_blocks=n,
+                                             impl="xla")[0]
+    assert binning.sort_op_count(fused, c, b, v) == 0
+    assert binning.sort_op_count(ref, c, b, v) == 0
+    assert binning.avals_with_shape(fused, c, b, v, shape=(n, 27, 3)) == 0
+    assert binning.avals_with_shape(xla, c, b, v, shape=(n, 27, 3)) > 0
+
+    argsort_xla = lambda c, b, v: mapsearch.build_kmap_octree(
+        c, b, v, jnp.asarray(OFFS), max_blocks=n, binning_mode="argsort")
+    assert binning.sort_op_count(argsort_xla, c, b, v) > 0
+
+    # strided builders (the unique passes of gconv2/gconv3) are sort-free
+    g2 = lambda c, b, v: mapsearch.build_maps_gconv2(c, b, v)
+    g3 = lambda c, b, v: mapsearch.build_maps_gconv3(c, b, v)
+    assert binning.sort_op_count(g2, c, b, v) == 0
+    assert binning.sort_op_count(g3, c, b, v) == 0
 
 
 def test_strided_to_kmap_roundtrip():

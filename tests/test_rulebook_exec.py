@@ -249,6 +249,80 @@ def test_schedule_off_keeps_tap_order():
 
 
 # ---------------------------------------------------------------------------
+# Sort-free plan build: counting layout == argsort layout, zero sort ops
+# ---------------------------------------------------------------------------
+
+@forall(8)
+def test_tap_tiles_counting_matches_argsort_bit_exact(rng):
+    """The closed-form counting layout must reproduce the argsort layout
+    bit for bit across bm/bo/schedule combinations — every TapTiles field,
+    including the run metadata the kernel's DMAs key off."""
+    from repro.core import binning
+    n_out = int(rng.integers(8, 64))
+    k = int(rng.choice([8, 27]))
+    bm = int(rng.choice([8, 16]))
+    bo = int(rng.choice([8, 16, 128, 512]))
+    schedule = bool(rng.integers(0, 2))
+    kmap = rng.integers(-1, n_out, size=(n_out, k)).astype(np.int32)
+    kmap[:, int(rng.integers(0, k))] = rng.integers(0, n_out, n_out)
+    t_cnt = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=bm, bo=bo,
+                                   schedule=schedule, binning="counting")
+    t_arg = sg_ops.build_tap_tiles(jnp.asarray(kmap), bm=bm, bo=bo,
+                                   schedule=schedule, binning="argsort")
+    for name, x, y in zip(t_cnt._fields, t_cnt, t_arg):
+        if name == "bo":
+            assert x == y
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=(name, bm, bo, schedule))
+
+
+def test_plan_build_contains_zero_sort_ops():
+    """Acceptance audit: build_tap_tiles and every map-search unique pass
+    of the default plan path emit no XLA ``sort`` primitive; the retained
+    argsort baseline emits one, proving the audit bites."""
+    from repro.core import binning
+    rng = np.random.default_rng(13)
+    kmap = jnp.asarray(rng.integers(-1, 32, size=(32, 27)), jnp.int32)
+    counting = lambda km: sg_ops._build_tap_tiles(
+        km, None, bm=8, bo=16, schedule=True, binning="counting")
+    argsort = lambda km: sg_ops._build_tap_tiles(
+        km, None, bm=8, bo=16, schedule=True, binning="argsort")
+    assert binning.sort_op_count(counting, kmap) == 0
+    assert binning.sort_op_count(argsort, kmap) > 0
+
+    # full default subm3 plan build (octent search + tiles), under trace
+    coords, bidx, valid = random_cloud(rng, 32, extent=20, batch=2)
+    c, b, v = jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+
+    def full_build(c, b, v):
+        plan = planlib.subm3_plan(c, b, v, max_blocks=32, bm=8,
+                                  search_impl=KIMPL)
+        return plan.kmap, plan.tiles.gather_idx
+    assert binning.sort_op_count(full_build, c, b, v) == 0
+
+
+def test_subm3_plan_surfaces_block_table_overflow():
+    """More occupied blocks than max_blocks must raise eagerly (voxels
+    would silently lose maps) and set the plan's overflow flag under jit."""
+    rng = np.random.default_rng(14)
+    # 16 voxels spread across 16 distinct 16^3 blocks
+    coords, bidx, valid = random_cloud(rng, 16, extent=100, batch=1)
+    coords = (coords // 16) * 16
+    seen = {tuple(x) for x in coords.tolist()}
+    assert len(seen) > 4
+    c, b, v = jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+    with pytest.raises(ValueError, match="overflow"):
+        planlib.subm3_plan(c, b, v, max_blocks=2, bm=BM)
+    ok = planlib.subm3_plan(c, b, v, max_blocks=32, bm=BM)
+    assert ok.overflow is not None and not bool(ok.overflow)
+
+    flag = jax.jit(lambda c, b, v: planlib.subm3_plan(
+        c, b, v, max_blocks=2, bm=BM).overflow)(c, b, v)
+    assert bool(flag)
+
+
+# ---------------------------------------------------------------------------
 # Sorted map search bit budget (satellite: no silent clamp)
 # ---------------------------------------------------------------------------
 
