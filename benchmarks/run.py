@@ -9,7 +9,10 @@ in Pallas interpret mode on tiny shapes: it exercises the whole
 fused-kernel contract (jaxpr audits + parity against the XLA oracle) and
 the fused map-search kernel (bit-exact vs the host hash oracle, sort-free
 plan-build audit) in seconds and exits nonzero on any parity drift — the
-CI gate wired into scripts/ci.sh.
+CI gate wired into scripts/ci.sh. It finishes with the 8-host-CPU-device
+sharded map-search gate (sharded-vs-single kmap parity on one small
+cloud + the per-device table-slice audit, subprocessed because XLA's
+device count is fixed at jax init).
 """
 from __future__ import annotations
 
@@ -49,6 +52,14 @@ def main() -> None:
             print("search_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("search_smoke,0.0,OK", flush=True)
+        try:
+            for row in search_speedup.run_smoke_sharded():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("sharded_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("sharded_smoke,0.0,OK", flush=True)
         return
 
     suites = [

@@ -20,11 +20,16 @@ Three complementary measurements per benchmark workload, written to
 ``--smoke`` (also wired into benchmarks/run.py --smoke and scripts/ci.sh)
 runs the interpret-mode kernel on a tiny cloud with bit-exact parity
 against the host hash oracle plus the sort-free audits, exiting nonzero
-on any drift — the CI search-parity gate.
+on any drift — the CI search-parity gate. It also spawns the 8-host-CPU-
+device sharded gate (:func:`run_smoke_sharded`): sharded-vs-single kmap
+parity on one small cloud over 2/8-way meshes plus the per-device
+table-slice jaxpr audit (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -186,11 +191,92 @@ def run_smoke(n: int = 96) -> list[str]:
                     f"query_tensor_ops={rec['query_tensor_ops']}")]
 
 
+def sharded_smoke_child(n: int = 96) -> list[str]:
+    """Body of the 8-device sharded gate (run via run_smoke_sharded —
+    the device-count flag must be set before jax initializes): sharded
+    vs single-device kmap parity on one small cloud over 2/8-way meshes,
+    plus the full-table-never-on-one-device jaxpr audit."""
+    from jax.sharding import Mesh
+    from repro.core import binning
+    from repro.kernels.octent import sharded
+    from repro.runtime.sharding_compat import set_mesh
+
+    assert len(jax.devices()) >= 8, (
+        "sharded smoke needs 8 host devices; run benchmarks/search_speedup "
+        "--smoke (the parent sets XLA_FLAGS) instead of --sharded-smoke")
+    rng = np.random.default_rng(0)
+    ext = 24
+    lin = rng.choice(ext ** 3, size=n, replace=False)
+    coords = np.stack([lin % ext, (lin // ext) % ext, lin // ext ** 2],
+                      axis=-1).astype(np.int32)
+    bidx = rng.integers(0, 2, n).astype(np.int32)
+    valid = np.arange(n) < n - 8
+    c, b, v = jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+    km_ref, nb_ref = oct_ops.build_kmap(c, b, v, max_blocks=n, impl="ref")
+    rows = []
+    for shape, names, nd in [((2,), ("data",), 2), ((8,), ("data",), 8)]:
+        mesh = Mesh(np.array(jax.devices()[:nd]).reshape(shape), names)
+        with set_mesh(mesh):
+            jfn = jax.jit(lambda c, b, v: oct_ops.build_kmap(
+                c, b, v, max_blocks=n, impl="sharded"))
+            km, nb = jfn(c, b, v)
+            jax.block_until_ready(km)    # first call pays trace+compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(c, b, v)[0])
+            us = (time.perf_counter() - t0) * 1e6
+            # audit shapes come from the actually-built table, so the
+            # check cannot desynchronize from the padding policy
+            sqt = sharded.build_query_table_sharded(c, b, v, max_blocks=n)
+            s = sqt.n_shards
+            n_pad = sqt.tkey.shape[0]
+            fn = lambda c, b, v: sharded.build_kmap_sharded(
+                c, b, v, max_blocks=n)[0]
+            full = binning.shard_body_avals_with_shape(fn, c, b, v,
+                                                       shape=(n_pad,))
+            loc = binning.shard_body_avals_with_shape(fn, c, b, v,
+                                                      shape=(n_pad // s,))
+        if not (np.asarray(km) == np.asarray(km_ref)).all():
+            raise AssertionError(f"sharded kmap drift on mesh {shape}")
+        if int(nb) != int(nb_ref):
+            raise AssertionError(f"sharded n_blocks drift on mesh {shape}")
+        if s > 1 and (full != 0 or loc == 0):
+            raise AssertionError(
+                f"sharded audit: full-table avals={full}, slice avals={loc}")
+        rows.append(csv_row(f"sharded_smoke/{s}way", us,
+                            f"parity=ref;voxels={n};full_table_avals={full}"))
+    return rows
+
+
+def run_smoke_sharded() -> list[str]:
+    """8-host-CPU-device sharded smoke gate (XLA's device count is fixed
+    at jax init, so the child body runs through the shared
+    tests/proptest.run_script subprocess harness). Raises on parity drift
+    or audit regression; returns the child's CSV rows."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from tests.proptest import run_script
+    out = run_script(
+        "from benchmarks.search_speedup import sharded_smoke_child\n"
+        "for row in sharded_smoke_child():\n"
+        "    print(row)\n", timeout=600)
+    return [ln for ln in out.splitlines() if ln.startswith("sharded_smoke")]
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="interpret-mode parity gate on tiny shapes")
+    ap.add_argument("--sharded-smoke", action="store_true",
+                    help="8-device sharded parity gate (child mode; use "
+                         "--smoke from a 1-device shell — it spawns this)")
     args = ap.parse_args()
-    for row in (run_smoke() if args.smoke else run(full=False)):
+    if args.sharded_smoke:
+        rows = sharded_smoke_child()
+    elif args.smoke:
+        rows = run_smoke() + run_smoke_sharded()
+    else:
+        rows = run(full=False)
+    for row in rows:
         print(row)

@@ -15,6 +15,10 @@
 # --smoke), exercising the map-search kernel under the Pallas interpreter
 # on every run: bit-exact kmap parity vs the host hash oracle, zero XLA
 # sort ops in the plan build, and no HBM query tensor on the fused path.
+# It ends with the 8-device host-CPU sharded gate
+# (search_speedup.run_smoke_sharded): sharded-vs-single kmap parity on
+# one small cloud over 2/8-way meshes plus the jaxpr audit that no shard
+# ever holds the full voxel table.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -125,3 +125,31 @@ def avals_with_shape(fn, *args, shape: tuple[int, ...]) -> int:
     return sum(tuple(getattr(ov.aval, "shape", ())) == tuple(shape)
                for jpr in _walk_jaxprs(jaxpr) for eqn in jpr.eqns
                for ov in eqn.outvars)
+
+
+def shard_body_avals_with_shape(fn, *args, shape: tuple[int, ...]) -> int:
+    """Number of values (inputs and op outputs) with exactly ``shape``
+    inside the shard_map bodies of ``fn``'s jaxpr.
+
+    The per-device audit of the sharded OCTENT search: the mapped region
+    must only ever hold (n_pad/S,)-shaped table slices, so counting
+    full-table (n_pad,) avals here must give 0 — while counting the
+    slice shape gives > 0, proving the audit looks inside the body.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    hits = 0
+    for jpr in _walk_jaxprs(jaxpr):
+        for eqn in jpr.eqns:
+            if eqn.primitive.name != "shard_map":
+                continue
+            body = eqn.params["jaxpr"]
+            body = getattr(body, "jaxpr", body)      # ClosedJaxpr on new jax
+            for inner in _walk_jaxprs(body):
+                inner = getattr(inner, "jaxpr", inner)   # unwrap ClosedJaxpr
+                hits += sum(
+                    tuple(getattr(v.aval, "shape", ())) == tuple(shape)
+                    for v in inner.invars)
+                hits += sum(
+                    tuple(getattr(ov.aval, "shape", ())) == tuple(shape)
+                    for e in inner.eqns for ov in e.outvars)
+    return hits

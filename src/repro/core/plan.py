@@ -17,11 +17,16 @@ What is cacheable and what is not (DESIGN.md §4):
     the *current* features, refreshed per layer by ops.tile_liveness.
 
 Cache keys are object identities of the coordinate arrays plus the static
-search parameters. Identity keying is exactly right under jit: stacked
-blocks see the *same* tracer objects for coords/batch/valid (feats-only
-updates go through SparseTensor._replace), while any recomputed coordinate
-set is a new object and correctly misses. Entries pin their key arrays so
-ids cannot be recycled while the entry lives; capacity-bounded FIFO.
+search parameters plus the active mesh's (axis, extent) fingerprint.
+Identity keying is exactly right under jit: stacked blocks see the *same*
+tracer objects for coords/batch/valid (feats-only updates go through
+SparseTensor._replace), while any recomputed coordinate set is a new
+object and correctly misses. The mesh fingerprint makes the cache
+mesh-aware: a plan built under one mesh embeds that mesh's sharded
+search (and its collectives), so the same coordinate arrays under a
+different mesh shape rebuild instead of replaying a stale partitioning.
+Entries pin their key arrays so ids cannot be recycled while the entry
+lives; capacity-bounded FIFO.
 
 ``MAPSEARCH_CALLS`` counts actual map-search invocations (trace-time), so
 tests can assert a 4-block stage searches once.
@@ -36,6 +41,7 @@ import jax.numpy as jnp
 from repro.core import mapsearch, morton, rulebook, sparsity
 from repro.core.mapsearch import StridedMaps
 from repro.kernels.spconv_gemm import ops as sg_ops
+from repro.runtime import sharding
 
 
 def _octent_ops():
@@ -98,7 +104,8 @@ class PlanCache:
         return len(self._entries)
 
     def lookup(self, arrays, statics, build):
-        key = tuple(id(a) for a in arrays) + tuple(statics)
+        key = (tuple(id(a) for a in arrays) + tuple(statics)
+               + sharding.mesh_fingerprint())
         hit = self._entries.get(key)
         if hit is not None:
             self.hits += 1
@@ -155,10 +162,14 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
     §5/§6); None picks the build default.
 
     ``method='octree'`` runs the fused OCTENT engine (kernels/octent):
-    ``search_impl`` picks its backend — pallas | interpret | ref | xla,
-    None resolving via ``octent.ops.search_impl()`` (the Pallas kernel on
-    TPU, its XLA bit-oracle elsewhere); 'xla' is the retained dense-table
-    builder. The resolved impl is part of the cache key.
+    ``search_impl`` picks its backend — pallas | interpret | ref | xla |
+    sharded, None resolving via ``octent.ops.search_impl()`` (the mesh-
+    partitioned engine when the active mesh shards the block-key axes,
+    else the Pallas kernel on TPU / its XLA bit-oracle elsewhere); 'xla'
+    is the retained dense-table builder. The resolved impl is part of the
+    cache key, alongside the mesh fingerprint (PlanCache); on the sharded
+    path ``n_blocks`` — and therefore ``ConvPlan.overflow`` — comes from
+    the replicated stage-1 build, so every shard sees the same flag.
     """
     simpl = (search_impl or _octent_ops().search_impl()) \
         if method == "octree" else None

@@ -1,4 +1,8 @@
-from repro.kernels.octent import kernel, ops, ref  # noqa: F401
+from repro.kernels.octent import kernel, ops, ref, sharded  # noqa: F401
 from repro.kernels.octent.ops import (QueryTable, build_kmap,  # noqa: F401
                                       build_query_table, hardware_impl,
                                       search_impl)
+from repro.kernels.octent.sharded import (ShardedQueryTable,  # noqa: F401
+                                          build_kmap_sharded,
+                                          build_query_table_sharded,
+                                          octent_query_sharded)

@@ -37,13 +37,20 @@ from repro.kernels.octent.ref import octent_query_ref
 
 
 def search_impl() -> str:
-    """pallas | interpret | ref | xla — resolved once per call site.
+    """pallas | interpret | ref | xla | sharded — resolved per call site.
 
     Resolve *outside* jit boundaries and cache keys (core/plan.py does):
-    the env var must be re-read per call, not frozen into a trace.
+    the env var must be re-read per call, not frozen into a trace. When
+    the active mesh splits the block-key axes (data/model) more than
+    one way, ``auto`` resolves to the mesh-partitioned engine
+    (kernels/octent/sharded.py) so models simply pick it up by running
+    under the mesh.
     """
     impl = os.environ.get("REPRO_SEARCH_IMPL", "auto")
     if impl == "auto":
+        from repro.runtime import sharding
+        if sharding.blockkey_shards() > 1:
+            return "sharded"
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
 
@@ -125,10 +132,19 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
     overflow check; kmap misses are -1, exactly as the oracles.
     ``binning_mode='argsort'`` swaps the stage-1 build's radix passes for
     the retained global sorts (benchmark baseline; same kmap either way).
+    ``impl='sharded'`` partitions the table by block-key range over the
+    active mesh (kernels/octent/sharded.py) — bit-identical kmap, reduced
+    n_blocks.
     """
     impl = impl or search_impl()
     if offsets is None:
         offsets = jnp.asarray(morton.subm3_offsets())
+    if impl == "sharded":
+        from repro.kernels.octent import sharded
+        return sharded.build_kmap_sharded(
+            coords, batch, valid, max_blocks=max_blocks,
+            grid_bits=grid_bits, batch_bits=batch_bits, offsets=offsets,
+            binning_mode=binning_mode)
     if impl == "xla":
         table = mapsearch.build_block_table(
             coords, batch, valid, max_blocks=max_blocks,

@@ -18,6 +18,30 @@ import jax.numpy as jnp
 from repro.core import morton
 
 
+def encode_queries(coords: jnp.ndarray, batch: jnp.ndarray,
+                   valid: jnp.ndarray, offsets: jnp.ndarray, *,
+                   grid_bits: int):
+    """Generate all K offset queries per voxel and their OCTENT search
+    keys. Returns (inb, bkey, bank, row), each (N, K): the in-grid mask
+    (out-of-grid and invalid-voxel queries rejected), the batch-tagged
+    block Morton key, and the banked-table address of the local code.
+
+    Shared by this oracle and the sharded engine (kernels/octent/
+    sharded.py) — their bit-identity contract starts at this function,
+    so neither may fork its own copy of the query math.
+    """
+    q = coords[:, None, :] + offsets[None, :, :]          # (N, K, 3)
+    limit = (1 << grid_bits) * morton.BLOCK_SIZE
+    inb = jnp.all((q >= 0) & (q < limit), axis=-1) & valid[:, None]
+    qc = jnp.clip(q, 0, limit - 1)
+    bt = jnp.broadcast_to(batch[:, None], q.shape[:2]).astype(jnp.int32)
+    bkey = (morton.interleave3(qc >> morton.BLOCK_BITS, grid_bits)
+            | (bt << (3 * grid_bits)))
+    phi = morton.interleave3(qc & (morton.BLOCK_SIZE - 1), morton.BLOCK_BITS)
+    bank, row = morton.bank_and_row(phi)
+    return inb, bkey, bank, row
+
+
 @partial(jax.jit, static_argnames=("grid_bits", "batch_bits"))
 def octent_query_ref(coords: jnp.ndarray, batch: jnp.ndarray,
                      valid: jnp.ndarray, offsets: jnp.ndarray,
@@ -26,19 +50,12 @@ def octent_query_ref(coords: jnp.ndarray, batch: jnp.ndarray,
                      grid_bits: int = 7, batch_bits: int = 4) -> jnp.ndarray:
     """Resolve all K offset queries per voxel. Returns kmap (N, K) int32."""
     max_blocks = ublocks.shape[0]
-    q = coords[:, None, :] + offsets[None, :, :]          # (N, K, 3)
-    limit = (1 << grid_bits) * morton.BLOCK_SIZE
-    inb = jnp.all((q >= 0) & (q < limit), axis=-1) & valid[:, None]
-    qc = jnp.clip(q, 0, limit - 1)
-    bt = jnp.broadcast_to(batch[:, None], q.shape[:2]).astype(jnp.int32)
-    bkey = (morton.interleave3(qc >> morton.BLOCK_BITS, grid_bits)
-            | (bt << (3 * grid_bits)))
+    inb, bkey, bank, row = encode_queries(coords, batch, valid, offsets,
+                                          grid_bits=grid_bits)
     nb = jnp.minimum(jnp.asarray(n_blocks, jnp.int32), max_blocks)
     rank = jnp.minimum(jnp.searchsorted(ublocks, bkey).astype(jnp.int32), nb)
     hit_b = ((rank < nb)
              & (ublocks[jnp.minimum(rank, max_blocks - 1)] == bkey))
-    phi = morton.interleave3(qc & (morton.BLOCK_SIZE - 1), morton.BLOCK_BITS)
-    bank, row = morton.bank_and_row(phi)
     key2 = rank * morton.TABLE_SIZE + bank * morton.BANK_ROWS + row
     n_t = tkey.shape[0]
     pos = jnp.minimum(jnp.searchsorted(tkey, key2).astype(jnp.int32),

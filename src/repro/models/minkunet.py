@@ -129,6 +129,28 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
     return jnp.where(st.valid[:, None], logits, 0)
 
 
+def forward_multicloud(params, clouds, cfg: MinkUNetConfig, *,
+                       training: bool = False,
+                       cache: planlib.PlanCache | None = None,
+                       impl: str | None = None) -> list:
+    """Batched multi-cloud inference: per-voxel logits for each cloud.
+
+    Serving-scale entry point: run it under an active device mesh and
+    every map search routes through the sharded OCTENT engine
+    (kernels/octent/sharded.py) while rulebook execution follows the
+    mesh's tensor sharding. Each cloud keeps its own plans — plan keys
+    are coordinate-array identities plus the mesh fingerprint, so the
+    shared cache naturally separates clouds and still reuses plans
+    *within* each cloud's enc/dec stages (one search per resolution).
+    The cache is sized so no cloud evicts another's stage plans mid-pass.
+    """
+    if cache is None:
+        per_cloud = 2 * (len(cfg.enc) + len(cfg.dec)) + 2
+        cache = planlib.PlanCache(capacity=max(64, per_cloud * len(clouds)))
+    return [forward(params, st, cfg, training=training, cache=cache,
+                    impl=impl) for st in clouds]
+
+
 def segmentation_loss(params, batch, cfg: MinkUNetConfig):
     """batch: SparseTensor fields + labels (N,) int32."""
     st = SparseTensor(batch["coords"], batch["batch"], batch["valid"],

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.runtime.sharding_compat import get_abstract_mesh
+from repro.runtime.sharding_compat import (concrete_device_ids,
+                                           get_abstract_mesh)
 
 AXIS_POD = "pod"
 AXIS_DATA = "data"
@@ -92,3 +93,61 @@ def axis_size(name: str) -> int:
     if mesh is None or mesh.empty or name not in mesh.axis_names:
         return 1
     return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# Block-key sharding: the axes the OCTENT octree table partitions over
+# ---------------------------------------------------------------------------
+
+#: axes eligible to hold a block-key range of the octree table. ``pod``
+#: stays a pure data-parallel/pipeline axis (DESIGN.md §4): block keys are
+#: batch-tagged Morton codes, maps never cross batch items, so everything
+#: *inside* a pod — data and model parallel alike — can serve table shards.
+SHARD_AXES = (AXIS_DATA, AXIS_MODEL)
+
+
+def blockkey_axes(mesh=None) -> tuple[str, ...]:
+    """Mesh axes the sorted block directory shards over: every data/model
+    axis present in ``mesh`` (default: the active mesh)."""
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    return tuple(a for a in SHARD_AXES if a in mesh.axis_names)
+
+
+def blockkey_shards(mesh=None) -> int:
+    """Number of contiguous block-key ranges the octree table splits into
+    (the product of the blockkey axes' extents); 1 off-mesh."""
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    n = 1
+    for a in blockkey_axes(mesh):
+        n *= int(mesh.shape[a])
+    return n
+
+
+def mesh_fingerprint(mesh=None) -> tuple:
+    """Hashable signature of the active mesh — () off-mesh.
+
+    Part of every PlanCache key: a plan built for one mesh carries that
+    mesh's sharded search structure (and the devices its arrays are
+    committed to), so the same coordinate arrays under a different mesh
+    must miss and rebuild. (axis, extent) pairs alone are not enough —
+    two same-shape meshes over different device subsets would replay a
+    plan pinned to the wrong chips — so the fingerprint also carries the
+    device ids backing the mesh (recovered from the context's concrete
+    mesh when the active mesh is abstract; see
+    sharding_compat.concrete_device_ids).
+    """
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    fp = tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+    ids = concrete_device_ids(mesh)
+    if ids:
+        fp += (ids,)
+    return fp

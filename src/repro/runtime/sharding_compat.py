@@ -43,6 +43,33 @@ def get_abstract_mesh():
     return None
 
 
+def concrete_device_ids(mesh=None) -> tuple:
+    """Device ids backing ``mesh`` (or the active mesh); () if unknowable.
+
+    Physical meshes carry them directly. Abstract meshes (modern
+    ``jax.set_mesh``) do not, so this falls back to the concrete mesh
+    recorded by the mesh library for the current context — without the
+    ids, two same-shape meshes over different device subsets would be
+    indistinguishable to callers keying caches on the mesh.
+    """
+    if mesh is not None:
+        ids = getattr(mesh, "device_ids", None)
+        if ids is not None:
+            return tuple(int(i) for i in ids.ravel())
+    try:
+        from jax._src import mesh as mesh_lib
+        conc = getattr(mesh_lib, "get_concrete_mesh", lambda: None)()
+        ids = getattr(conc, "device_ids", None)
+        if ids is not None:
+            return tuple(int(i) for i in ids.ravel())
+        phys = mesh_lib.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return tuple(int(i) for i in phys.device_ids.ravel())
+    except Exception:  # noqa: BLE001 — best-effort across jax versions
+        pass
+    return ()
+
+
 @contextlib.contextmanager
 def set_mesh(mesh):
     """``with set_mesh(mesh):`` — jax.set_mesh when it exists, else the

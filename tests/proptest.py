@@ -1,17 +1,46 @@
-"""Minimal property-based testing shim.
+"""Minimal property-based testing shim + the multi-device subprocess harness.
 
 ``hypothesis`` is not installable in this offline container, so tests use
 this thin substitute: a decorator that re-runs a property over a sweep of
 seeded random cases and reports the failing seed (the "shrunk" artifact is
 the seed itself — cases are fully reconstructible from it).
+
+:func:`run_script` is the shared distributed-parity harness: XLA's
+host-device-count flag must be set before jax initializes, and the main
+pytest process must keep seeing one device, so every multi-device test
+(test_distributed, test_sharded_search) runs its body in a fresh
+interpreter with 8 host CPU devices instead of copy-pasting env setup.
 """
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 
 import numpy as np
 
 N_CASES = int(os.environ.get("REPRO_PROPTEST_CASES", "25"))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_script(body: str, timeout: int = 420, n_devices: int = 8) -> str:
+    """Run ``body`` in a subprocess with ``n_devices`` host CPU devices.
+
+    Asserts a zero exit (failures re-raise with the child's stdout and
+    stderr attached) and returns the child's stdout — callers grep for
+    their OK sentinel. The repo root joins ``src`` on PYTHONPATH so
+    bodies can import the test helpers (``tests.proptest``) too.
+    """
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+        PYTHONPATH=os.pathsep.join([os.path.join(REPO, "src"), REPO]),
+        JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
 
 
 def forall(n_cases: int = N_CASES):

@@ -1,24 +1,10 @@
-"""Multi-device integration tests (8 host devices via subprocess — the
-XLA device-count flag must be set before jax initializes, and the main test
-process must keep seeing 1 device per the brief)."""
-import os
-import subprocess
-import sys
-
+"""Multi-device integration tests (8 host devices via the shared
+tests/proptest.run_script subprocess harness — the XLA device-count flag
+must be set before jax initializes, and the main test process must keep
+seeing 1 device per the brief)."""
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_script(body: str, timeout=420) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=os.path.join(REPO, "src"),
-               JAX_PLATFORMS="cpu")
-    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
-                       text=True, env=env, timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from tests.proptest import run_script
 
 
 def test_pipeline_matches_sequential():

@@ -146,6 +146,78 @@ def test_plan_cache_hit_and_miss():
     assert cache.misses == 3
 
 
+def test_plan_cache_evicts_fifo_at_capacity():
+    rng = np.random.default_rng(20)
+    sts = [_rand_st(rng, 24, 10, 1, 4) for _ in range(3)]
+    cache = planlib.PlanCache(capacity=2)
+    plans = [planlib.subm3_plan(st.coords, st.batch, st.valid, max_blocks=24,
+                                bm=BM, cache=cache) for st in sts]
+    assert len(cache) == 2 and cache.misses == 3
+    # newest two still hit ...
+    assert planlib.subm3_plan(sts[2].coords, sts[2].batch, sts[2].valid,
+                              max_blocks=24, bm=BM, cache=cache) is plans[2]
+    assert cache.hits == 1
+    # ... the oldest was evicted and rebuilds (a fresh plan object)
+    p0 = planlib.subm3_plan(sts[0].coords, sts[0].batch, sts[0].valid,
+                            max_blocks=24, bm=BM, cache=cache)
+    assert p0 is not plans[0] and cache.misses == 4
+
+
+def test_plan_cache_misses_when_mesh_shape_changes():
+    """The cache key carries the mesh fingerprint: identical coordinate
+    arrays under a different mesh shape rebuild (a plan embeds that
+    mesh's sharded search), and the same mesh hits again."""
+    from jax.sharding import Mesh
+    from repro.runtime.sharding_compat import set_mesh
+
+    rng = np.random.default_rng(21)
+    st = _rand_st(rng, 24, 10, 1, 4)
+    cache = planlib.PlanCache()
+    args = (st.coords, st.batch, st.valid)
+    dev = np.array(jax.devices()[:1])
+    p_off = planlib.subm3_plan(*args, max_blocks=24, bm=BM,
+                               search_impl="ref", cache=cache)
+    with set_mesh(Mesh(dev.reshape(1), ("data",))):
+        p_data = planlib.subm3_plan(*args, max_blocks=24, bm=BM,
+                                    search_impl="ref", cache=cache)
+        assert p_data is not p_off and cache.misses == 2
+        assert planlib.subm3_plan(*args, max_blocks=24, bm=BM,
+                                  search_impl="ref", cache=cache) is p_data
+        assert cache.hits == 1
+    with set_mesh(Mesh(dev.reshape(1, 1), ("data", "model"))):
+        p_dm = planlib.subm3_plan(*args, max_blocks=24, bm=BM,
+                                  search_impl="ref", cache=cache)
+        assert p_dm is not p_data and cache.misses == 3
+    # leaving the mesh returns to the off-mesh entry
+    assert planlib.subm3_plan(*args, max_blocks=24, bm=BM,
+                              search_impl="ref", cache=cache) is p_off
+    assert cache.hits == 2
+
+
+def test_minkunet_search_count_flat_under_mesh():
+    """Stage reuse survives the mesh: under an active mesh the MinkUNet
+    forward still searches once per gconv2 stage + once per Subm3
+    resolution (the mesh fingerprint is constant within the pass, so
+    decoder stages keep hitting the encoder-stage plans)."""
+    from jax.sharding import Mesh
+    from repro.data import pointcloud
+    from repro.models import minkunet
+    from repro.runtime.sharding_compat import set_mesh
+
+    cfg = minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
+                                  classes=4, blocks=2)
+    params = minkunet.init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(22)
+    vb = pointcloud.make_batch(rng, "indoor", batch_size=1, max_voxels=128)
+    st = SparseTensor(jnp.asarray(vb.coords), jnp.asarray(vb.batch),
+                      jnp.asarray(vb.valid), jnp.asarray(vb.feats))
+    planlib.reset_mapsearch_counter()
+    with set_mesh(Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))):
+        logits = minkunet.forward(params, st, cfg, impl="ref")
+    assert np.isfinite(np.asarray(logits)).all()
+    assert planlib.mapsearch_call_count() == len(cfg.enc) + len(cfg.enc) + 1
+
+
 def test_four_block_stage_searches_once_under_jit():
     """The acceptance property: B stacked Subm3 blocks, one map search."""
     rng = np.random.default_rng(1)
@@ -387,6 +459,40 @@ def test_fused_kernel_custom_vjp_matches_ref_grads():
     for a, c in zip(g_ref, g_ker):
         np.testing.assert_allclose(np.asarray(a), np.asarray(c),
                                    rtol=1e-4, atol=1e-5)
+
+
+def test_sharded_plan_grads_match_single_device():
+    """Gradient parity on the mesh path: a plan whose kmap came from the
+    sharded OCTENT search must backprop exactly like the single-device
+    plan (multi-device variant: tests/test_sharded_search.py)."""
+    from jax.sharding import Mesh
+    from repro.runtime.sharding_compat import set_mesh
+
+    rng = np.random.default_rng(23)
+    n, cin, cout = 32, 8, 12
+    coords, bidx, valid = random_cloud(rng, n, extent=14, batch=2)
+    c, b, v = jnp.asarray(coords), jnp.asarray(bidx), jnp.asarray(valid)
+    feats = jnp.asarray(rng.standard_normal((n, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((27, cin, cout)) * 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(cout), jnp.float32)
+
+    plan_ref = planlib.subm3_plan(c, b, v, max_blocks=n, bm=BM,
+                                  search_impl="ref")
+    with set_mesh(Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))):
+        plan_sh = planlib.subm3_plan(c, b, v, max_blocks=n, bm=BM,
+                                     search_impl="sharded")
+    np.testing.assert_array_equal(np.asarray(plan_sh.kmap),
+                                  np.asarray(plan_ref.kmap))
+
+    def loss_fn(plan):
+        return lambda f, ww, bb: (
+            planlib.execute(plan, f, ww, bb, impl="ref") ** 2).sum()
+
+    g_ref = jax.grad(loss_fn(plan_ref), argnums=(0, 1, 2))(feats, w, bias)
+    g_sh = jax.grad(loss_fn(plan_sh), argnums=(0, 1, 2))(feats, w, bias)
+    for a, c_ in zip(g_ref, g_sh):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c_),
+                                   rtol=1e-5, atol=1e-6)
 
 
 def test_fused_kernel_matches_materialized_kernel():
