@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.roofline [--tag TAG] [--mesh single]
                                                  [--rulebook PATH]
+                                                 [--search PATH]
+                                                 [--cache PATH]
 
 Besides the dense dry-run FLOP bounds, the report folds in the SpConv
 rulebook-execution measurements (BENCH_rulebook.json, written by
@@ -11,6 +13,12 @@ ratio that decides whether a layer is memory-bound, which dense FLOP
 roofline rows cannot show. BENCH_search.json (benchmarks/search_speedup.py)
 adds the map-search side: fused OCTENT query vs dense-table XLA vs host
 hash, and the sort-free vs argsort plan-build comparison with its audits.
+BENCH_cache.json (benchmarks/cache_model.py) adds the cross-step caching
+side (DESIGN.md §10): pinned/cached/stream tier bytes, the cached-vs-
+uncached external-access ratio over a modeled training loop, and the live
+two-step train-loop gate (map-search count flat across steps). All three
+sections are skipped silently when their JSON is absent — run the
+producing benchmark first.
 """
 from __future__ import annotations
 
@@ -23,6 +31,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 RULEBOOK_JSON = "BENCH_rulebook.json"
 SEARCH_JSON = "BENCH_search.json"
+CACHE_JSON = "BENCH_cache.json"
 
 
 def load(mesh: str = "single", tag: str = "") -> list[dict]:
@@ -139,6 +148,42 @@ def search_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def cache_table(recs: list[dict]) -> str:
+    """§Roofline (caching) rows: non-uniform tier bytes + the cross-step
+    cached-vs-uncached external-access ratio, from BENCH_cache.json."""
+    hdr = ("| workload | voxels | steps x layers | pinned KiB | cached KiB "
+           "| stream MiB/step | uncached MiB | cached MiB | saving "
+           "| hit us / build us |")
+    sep = "|" + "---|" * 10
+    lines = ["", "## Cross-step plan caching (non-uniform tiers, §10)",
+             "", hdr, sep]
+    kib, mib = 1 / 2 ** 10, 1 / 2 ** 20
+    demo = None
+    for r in recs:
+        if r["workload"].startswith("train_demo"):
+            demo = r
+            continue
+        t, e, u = r["tier_bytes"], r["external_bytes"], r["lookup_us"]
+        lines.append(
+            f"| {r['workload']} | {r['voxels']} "
+            f"| {r['steps']}x{r['layers']} "
+            f"| {t['pinned'] * kib:.1f} | {t['cached'] * kib:.1f} "
+            f"| {t['stream_per_layer_step'] * r['layers'] * mib:.2f} "
+            f"| {e['uncached'] * mib:.2f} | {e['cached'] * mib:.2f} "
+            f"| {r['saving'] * 100:.1f}% "
+            f"| {u['content_hit']:.0f} / {u['cold_build']:.0f} |")
+    lines.append("")
+    if demo is not None:
+        lines.append(
+            f"train-loop gate (map search flat across {demo['steps']} steps "
+            f"of one re-allocated cloud): "
+            f"{'PASS' if demo['search_count_flat'] else 'FAIL'} "
+            f"({demo['mapsearch_calls']} searches, "
+            f"{demo['cache']['content_hits']} content hits, "
+            f"{demo['compiled_steps']} compiled step)")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
@@ -149,6 +194,9 @@ def main() -> None:
     ap.add_argument("--search", default=SEARCH_JSON,
                     help="BENCH_search.json from benchmarks/search_speedup"
                          " (section skipped when the file is absent)")
+    ap.add_argument("--cache", default=CACHE_JSON,
+                    help="BENCH_cache.json from benchmarks/cache_model"
+                         " (section skipped when the file is absent)")
     args = ap.parse_args()
     recs = load(args.mesh, args.tag)
     print(table(recs))
@@ -158,6 +206,9 @@ def main() -> None:
     sr = load_rulebook(args.search)
     if sr:
         print(search_table(sr))
+    cr = load_rulebook(args.cache)
+    if cr:
+        print(cache_table(cr))
     ok = [r for r in recs if r["status"] == "ok"]
     if ok:
         doms = {}

@@ -119,10 +119,16 @@ def _materialized_exec(feats, w, tiles, n_out, impl, bn=128):
                                                           :w.shape[-1]]
 
 
-def _hbm_model(path: str, *, m_pad, live_tiles, bm, c_in, c_out, n_out,
-               n_out_pad, itemsize=4) -> int:
+def hbm_model_bytes(path: str, *, m_pad, live_tiles, bm, c_in, c_out, n_out,
+                    n_out_pad, itemsize=4) -> int:
     """Analytic HBM traffic per path (features/partials only — weights are
-    identical across paths and amortized by the tap schedule)."""
+    identical across paths and amortized by the tap schedule).
+
+    This is the *stream-tier* (per-step) half of the external-access
+    model; benchmarks/cache_model.py combines it with the pinned/cached
+    tier bytes of the plan subsystem for the cross-step cached-vs-
+    uncached comparison (BENCH_cache.json, DESIGN.md §10).
+    """
     if path == "xla":
         # per-tap gather reads + one output accumulate in registers
         return m_pad * c_in * itemsize + n_out * c_out * itemsize
@@ -185,7 +191,7 @@ def _case(feats, w, kmap, *, bm, bo, kimpl, impl):
             "gathered_intermediate_bytes": g_bytes,
             "scatter_add_ops": s_ops,
             "partial_product_bytes": p_bytes,
-            "hbm_model_bytes": _hbm_model(
+            "hbm_model_bytes": hbm_model_bytes(
                 pname, m_pad=m_pad, live_tiles=live_tiles, bm=bm,
                 c_in=c_in, c_out=c_out_pad, n_out=n_out,
                 n_out_pad=n_out_pad),

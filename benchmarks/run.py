@@ -9,10 +9,13 @@ in Pallas interpret mode on tiny shapes: it exercises the whole
 fused-kernel contract (jaxpr audits + parity against the XLA oracle) and
 the fused map-search kernel (bit-exact vs the host hash oracle, sort-free
 plan-build audit) in seconds and exits nonzero on any parity drift — the
-CI gate wired into scripts/ci.sh. It finishes with the 8-host-CPU-device
-sharded map-search gate (sharded-vs-single kmap parity on one small
-cloud + the per-device table-slice audit, subprocessed because XLA's
-device count is fixed at jax init).
+CI gate wired into scripts/ci.sh. It continues with the
+8-host-CPU-device sharded map-search gate (sharded-vs-single kmap parity
+on one small cloud + the per-device table-slice audit, subprocessed
+because XLA's device count is fixed at jax init) and ends with the
+cross-step cache gate (benchmarks/cache_model.run_smoke: tier byte model
+sanity + a two-step MinkUNet train loop over a re-allocated identical
+cloud asserting the map-search count stays flat, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -30,7 +33,7 @@ def main() -> None:
                          "parity drift or audit regression")
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
-    from benchmarks import (caching_energy, overall_comparison,
+    from benchmarks import (cache_model, caching_energy, overall_comparison,
                             rulebook_exec, search_speedup, sparsity_saving,
                             weight_distribution)
 
@@ -60,6 +63,14 @@ def main() -> None:
             print("sharded_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("sharded_smoke,0.0,OK", flush=True)
+        try:
+            for row in cache_model.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("cache_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("cache_smoke,0.0,OK", flush=True)
         return
 
     suites = [
@@ -69,6 +80,7 @@ def main() -> None:
         ("fig9c_caching", caching_energy.run),
         ("fig10_overall", overall_comparison.run),
         ("rulebook_exec", rulebook_exec.run),
+        ("cache_model", cache_model.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

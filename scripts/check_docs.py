@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Docs gate: internal anchors, referenced paths, and §-references resolve.
+
+Run by scripts/ci.sh on every pass. Three checks, all cheap and offline:
+
+1. **Markdown links** in the tracked docs (README.md, DESIGN.md,
+   ROADMAP.md, benchmarks/README.md): ``[text](target)`` where target is
+   - ``#anchor``          -> a heading in the same file must slugify to it;
+   - ``path``             -> the file/dir must exist relative to the doc;
+   - ``path#anchor``      -> both of the above, anchor checked in ``path``.
+   ``http(s)://`` links are skipped (no network in CI).
+2. **DESIGN.md § references from code**: every ``DESIGN.md §N`` mentioned
+   in a docstring/comment under src/, benchmarks/, tests/, scripts/ must
+   have a matching ``## §N`` heading — docstrings and the design doc
+   drift independently otherwise (the ISSUE-5 failure mode this gate
+   exists for).
+3. **Backtick path references** in the docs that look like repo paths
+   (contain a ``/`` and end in a known extension) must exist.
+
+Exit code 0 on success; 1 with a listing of every broken reference.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "benchmarks/README.md"]
+CODE_DIRS = ["src", "benchmarks", "tests", "scripts", "examples"]
+PATH_EXTS = (".py", ".md", ".sh", ".json")
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
+SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+BACKTICK_PATH_RE = re.compile(r"`([\w./-]+/[\w.-]+)`")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (ASCII-conservative: the docs only use
+    anchors this slugger can produce)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def headings_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return {slugify(m.group(2)) for m in HEADING_RE.finditer(text)}
+
+
+def check_doc_links(doc: str, errors: list[str]) -> None:
+    doc_path = os.path.join(REPO, doc)
+    doc_dir = os.path.dirname(doc_path)
+    with open(doc_path, encoding="utf-8") as f:
+        text = f.read()
+    anchors = headings_of(doc_path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if not path_part:                       # same-file anchor
+            if frag not in anchors:
+                errors.append(f"{doc}: broken anchor #{frag}")
+            continue
+        ref = os.path.normpath(os.path.join(doc_dir, path_part))
+        if not os.path.exists(ref):
+            errors.append(f"{doc}: broken path link {target}")
+            continue
+        if frag and ref.endswith(".md"):
+            if frag not in headings_of(ref):
+                errors.append(f"{doc}: broken anchor {target}")
+
+
+def check_backtick_paths(doc: str, errors: list[str]) -> None:
+    doc_path = os.path.join(REPO, doc)
+    with open(doc_path, encoding="utf-8") as f:
+        text = f.read()
+    for ref in BACKTICK_PATH_RE.findall(text):
+        if not ref.endswith(PATH_EXTS) or ref.startswith("/"):
+            continue                             # not a repo-path claim
+        if ref.startswith("BENCH_"):
+            continue                             # benchmark artifacts
+        cands = [os.path.join(REPO, ref),
+                 os.path.join(os.path.dirname(doc_path), ref),
+                 os.path.join(REPO, "src", "repro", ref)]
+        if not any(os.path.exists(c) for c in cands):
+            errors.append(f"{doc}: backtick path `{ref}` does not exist")
+
+
+def check_design_sections(errors: list[str]) -> None:
+    with open(os.path.join(REPO, "DESIGN.md"), encoding="utf-8") as f:
+        design = f.read()
+    sections = set(re.findall(r"^##\s+§(\d+)", design, re.M))
+    refs: dict[str, list[str]] = {}
+    for d in CODE_DIRS:
+        for root, _, files in os.walk(os.path.join(REPO, d)):
+            for fn in files:
+                if not fn.endswith((".py", ".sh", ".md")):
+                    continue
+                path = os.path.join(root, fn)
+                with open(path, encoding="utf-8", errors="ignore") as f:
+                    for sec in SECTION_REF_RE.findall(f.read()):
+                        refs.setdefault(sec, []).append(
+                            os.path.relpath(path, REPO))
+    for sec, files in sorted(refs.items()):
+        if sec not in sections:
+            errors.append(
+                f"DESIGN.md has no '## §{sec}' heading but it is referenced "
+                f"from: {', '.join(sorted(set(files))[:5])}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    for doc in DOCS:
+        if not os.path.exists(os.path.join(REPO, doc)):
+            errors.append(f"missing doc: {doc}")
+            continue
+        check_doc_links(doc, errors)
+        check_backtick_paths(doc, errors)
+    check_design_sections(errors)
+    if errors:
+        print("docs gate FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"docs gate OK ({len(DOCS)} docs, anchors/paths/§-refs resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,11 +14,18 @@
 # (search_speedup.run_smoke, standalone: benchmarks/search_speedup.py
 # --smoke), exercising the map-search kernel under the Pallas interpreter
 # on every run: bit-exact kmap parity vs the host hash oracle, zero XLA
-# sort ops in the plan build, and no HBM query tensor on the fused path.
-# It ends with the 8-device host-CPU sharded gate
+# sort ops in the plan build, and no HBM query tensor on the fused path;
+# then the 8-device host-CPU sharded gate
 # (search_speedup.run_smoke_sharded): sharded-vs-single kmap parity on
 # one small cloud over 2/8-way meshes plus the jaxpr audit that no shard
-# ever holds the full voxel table.
+# ever holds the full voxel table; and finally the cross-step cache gate
+# (cache_model.run_smoke): tier byte-model sanity plus a two-step
+# MinkUNet train loop over a re-allocated identical cloud asserting the
+# map-search count stays flat (DESIGN.md §10).
+#
+# The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
+# benchmarks/README honest: internal anchors, referenced file paths, and
+# every "DESIGN.md §N" docstring reference must resolve.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,10 +36,13 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-x)
 fi
 
+echo "== docs gate =="
+python scripts/check_docs.py
+
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + octent search smoke gates =="
+echo "== rulebook + octent search + cross-step cache smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

@@ -10,38 +10,69 @@ stacked Subm3 blocks pays for OCTENT once instead of B times, and a
 MinkUNet decoder stage at resolution r reuses the encoder-stage plan for
 the same r (coordinates recovered exactly by Tconv2).
 
-What is cacheable and what is not (DESIGN.md §4):
+What is cacheable and what is not (DESIGN.md §4, §10):
 
   * kmap / tiles / tap schedule   — geometry-only, cached.
   * SPAC liveness (tile_nz)       — depends on the post-ReLU zero pattern of
     the *current* features, refreshed per layer by ops.tile_liveness.
 
-Cache keys are object identities of the coordinate arrays plus the static
-search parameters plus the active mesh's (axis, extent) fingerprint.
-Identity keying is exactly right under jit: stacked blocks see the *same*
-tracer objects for coords/batch/valid (feats-only updates go through
-SparseTensor._replace), while any recomputed coordinate set is a new
-object and correctly misses. The mesh fingerprint makes the cache
-mesh-aware: a plan built under one mesh embeds that mesh's sharded
-search (and its collectives), so the same coordinate arrays under a
-different mesh shape rebuild instead of replaying a stale partitioning.
-Entries pin their key arrays so ids cannot be recycled while the entry
-lives; capacity-bounded FIFO.
+Cache keys come in two forms (DESIGN.md §10):
+
+  * **identity keys** (the fast path) — object ids of the coordinate
+    arrays plus the static search parameters plus the active mesh's
+    fingerprint. Exactly right under jit: stacked blocks see the *same*
+    tracer objects for coords/batch/valid (feats-only updates go through
+    ``SparseTensor._replace``), and tracers admit no content hashing
+    anyway.
+  * **content keys** — a cheap device-side fingerprint of the key arrays
+    (:func:`array_fingerprint`: a jitted position-mixed XOR/sum/weighted-
+    sum reduction over the raw int words, plus shape/dtype). Computed
+    only for concrete arrays, on an identity miss. This is what makes
+    the cache work *across training steps*: a dataloader replaying the
+    same cloud, or a donated buffer re-allocated at the same content,
+    lands on the same plan even though every array object is new.
+
+The mesh fingerprint makes both keys mesh-aware: a plan built under one
+mesh embeds that mesh's sharded search (and its collectives), so the same
+coordinate arrays under a different mesh shape rebuild instead of
+replaying a stale partitioning. Entries pin their key arrays so ids
+cannot be recycled while the entry lives; capacity-bounded FIFO.
+
+Hit/miss behavior is fully observable: ``PlanCache.stats()`` reports
+``id_hits`` / ``content_hits`` / ``misses`` / ``collisions``.
+Fingerprints are 96 bits per array plus shape/dtype, so accidental
+collisions are vanishingly rare; construct the cache with ``verify=True``
+to additionally compare the arrays element-wise on every content hit
+(collisions are then counted and rebuilt instead of served stale).
+``REPRO_PLANCACHE_CONTENT=0`` disables content keys process-wide
+(identity-only, the pre-PR-5 behavior) — see runtime/flags.py.
+
+The PlanCache cooperates with the **pinned tier** of the non-uniform
+caching policy (runtime/feature_cache.py): on a plan build, the small
+OCTENT search structure (directory + compacted table) is pinned in a
+byte-bounded :class:`~repro.runtime.feature_cache.PinnedStore` keyed by
+the same content fingerprint, so even after the plan itself is evicted, a
+rebuild of the same geometry skips the stage-1 table build and only
+re-runs the query. Features and weights are stream-tier and never cached.
 
 ``MAPSEARCH_CALLS`` counts actual map-search invocations (trace-time), so
-tests can assert a 4-block stage searches once.
+tests can assert a 4-block stage searches once and a two-step training
+loop over a re-allocated identical cloud searches zero extra times.
 """
 from __future__ import annotations
 
+import os
+from collections import OrderedDict
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import mapsearch, morton, rulebook, sparsity
 from repro.core.mapsearch import StridedMaps
 from repro.kernels.spconv_gemm import ops as sg_ops
-from repro.runtime import sharding
+from repro.runtime import feature_cache, sharding
 
 
 def _octent_ops():
@@ -55,11 +86,94 @@ MAPSEARCH_CALLS = [0]
 
 
 def mapsearch_call_count() -> int:
+    """Map-search invocations since the last reset (trace-time count)."""
     return MAPSEARCH_CALLS[0]
 
 
 def reset_mapsearch_counter() -> None:
     MAPSEARCH_CALLS[0] = 0
+
+
+# ---------------------------------------------------------------------------
+# Content fingerprinting (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 finalizer: diffuse every input bit over all 32 output
+    bits, so a single-voxel perturbation flips ~half the fingerprint."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+@jax.jit
+def _fp_words(flat: jnp.ndarray) -> jnp.ndarray:
+    """(3,) uint32 fingerprint words of a flat int32 array.
+
+    Position-mixed so the reduction is order-*sensitive* (a permuted
+    voxel list is a different rulebook): each word is hashed together
+    with its index before the XOR / sum / odd-weighted-sum reductions.
+    Runs entirely on device under jit; only the 3 words travel to host.
+    """
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    h = _mix32(flat.astype(jnp.uint32) ^ _mix32(idx))
+    xor = jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+    tot = jnp.sum(h, dtype=jnp.uint32)
+    wtot = jnp.sum(h * (2 * idx + 1), dtype=jnp.uint32)
+    return jnp.stack([xor, tot, wtot])
+
+
+def array_fingerprint(a) -> tuple | None:
+    """Content fingerprint of one key array, or None if unhashable.
+
+    Returns ``(shape, dtype_str, w0, w1, w2)`` for concrete integer/bool
+    arrays — 96 mixed bits plus the exact structure, cheap enough to run
+    per lookup (one jitted reduction, three scalars to host). Returns
+    None for tracers (under jit the identity fast path is both correct
+    and the only option) and for float arrays (plan keys are integral by
+    construction; refusing keeps the cache conservative rather than
+    wrong about NaN/-0.0 equality).
+    """
+    if isinstance(a, jax.core.Tracer):
+        return None
+    if not hasattr(a, "dtype"):
+        a = jnp.asarray(a)
+    if not (jnp.issubdtype(a.dtype, jnp.integer)
+            or jnp.issubdtype(a.dtype, jnp.bool_)):
+        return None
+    # an enclosing jit must not capture the reduction: plans for concrete
+    # (closed-over) coordinate arrays are still content-addressable at
+    # trace time, so force compile-time evaluation
+    with jax.ensure_compile_time_eval():
+        if a.dtype.itemsize > 4:
+            # int64 under x64: hash every 32-bit word, never truncate —
+            # values equal mod 2^32 must not collide systematically
+            flat = jnp.ravel(jax.lax.bitcast_convert_type(a, jnp.int32))
+        else:
+            flat = jnp.ravel(a).astype(jnp.int32)
+        words = np.asarray(_fp_words(flat))
+    return (tuple(a.shape), str(a.dtype),
+            int(words[0]), int(words[1]), int(words[2]))
+
+
+def content_fingerprint(arrays) -> tuple | None:
+    """Fingerprint a tuple of key arrays; None if any is unhashable."""
+    words = []
+    for a in arrays:
+        w = array_fingerprint(a)
+        if w is None:
+            return None
+        words.append(w)
+    return tuple(words)
+
+
+def _content_enabled() -> bool:
+    # re-read per cache construction, not frozen at import (flags.py)
+    return os.environ.get("REPRO_PLANCACHE_CONTENT", "1") != "0"
 
 
 class ConvPlan(NamedTuple):
@@ -85,42 +199,165 @@ class ConvPlan(NamedTuple):
     overflow: jnp.ndarray | None = None  # () bool: block table overflowed
                                          # (subm3 under jit; eager raises)
 
+    @property
+    def residency(self) -> dict:
+        """Bytes per caching tier of this plan (DESIGN.md §10): the
+        pinned per-tile metadata vs the cached kmap/slot streams. The
+        search table is accounted separately (it lives in the
+        PinnedStore, not on the plan)."""
+        return feature_cache.plan_tier_bytes(self)
+
+
+class _Entry(NamedTuple):
+    """One canonical cache entry: the plan plus the anchored key arrays
+    of every identity alias pointing at it (anchoring keeps the ids from
+    being recycled while the alias is live)."""
+
+    plan: ConvPlan
+    aliases: OrderedDict        # idkey -> anchored array tuple
+    fingerprint: tuple | None   # content words (no statics), for verify
+
+
+#: identity aliases kept per canonical entry before the oldest is dropped
+#: (a long-running loop over re-allocated clouds would otherwise anchor
+#: every step's arrays forever)
+ALIAS_CAP = 8
+
 
 class PlanCache:
-    """Identity-keyed memo of ConvPlans with hit/miss accounting.
+    """Content-addressed memo of ConvPlans with an identity fast path.
 
-    One instance per forward pass (models create their own), or longer-lived
-    for eager/incremental pipelines. Entries hold strong references to their
-    key arrays, so an id is never reused while its entry is alive.
+    One instance per forward pass (models create their own), or
+    longer-lived for eager/incremental pipelines and training loops —
+    cross-step reuse is exactly what the content keys are for (module
+    doc). Entries hold strong references to their key arrays, so an id
+    is never reused while its alias is alive.
+
+    Args:
+      capacity: canonical entries kept (FIFO eviction).
+      content: enable content-addressed keys for concrete arrays
+        (default: on, unless ``REPRO_PLANCACHE_CONTENT=0``).
+      verify: on every content hit, compare the key arrays element-wise
+        against the entry's anchored arrays; a mismatch counts as a
+        ``collision`` and rebuilds (replacing the entry) instead of
+        serving a stale plan.
+      pinned: the :class:`~repro.runtime.feature_cache.PinnedStore` for
+        the pinned tier (None: the process-wide default store).
+
+    Counters: ``hits`` (total), ``id_hits``, ``content_hits``,
+    ``misses``, ``collisions`` — see :meth:`stats`.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, *, content: bool | None = None,
+                 verify: bool = False,
+                 pinned: feature_cache.PinnedStore | None = None):
         self.capacity = capacity
-        self._entries: dict = {}       # key -> (anchored arrays, plan)
+        self.content = _content_enabled() if content is None else content
+        self.verify = verify
+        self.pinned = pinned if pinned is not None \
+            else feature_cache.default_store()
+        self._entries: OrderedDict = OrderedDict()  # canonical key -> _Entry
+        self._by_id: dict = {}                      # identity key -> canonical
         self.hits = 0
         self.misses = 0
+        self.id_hits = 0
+        self.content_hits = 0
+        self.collisions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def lookup(self, arrays, statics, build):
-        key = (tuple(id(a) for a in arrays) + tuple(statics)
-               + sharding.mesh_fingerprint())
-        hit = self._entries.get(key)
-        if hit is not None:
-            self.hits += 1
-            return hit[1]
-        self.misses += 1
-        plan = build()
+    def stats(self) -> dict:
+        """Counter snapshot (plus the pinned store's, for one-stop
+        observability of the whole §10 policy)."""
+        return {"entries": len(self), "hits": self.hits,
+                "id_hits": self.id_hits, "content_hits": self.content_hits,
+                "misses": self.misses, "collisions": self.collisions,
+                "pinned": self.pinned.stats()}
+
+    # -- internals ----------------------------------------------------------
+
+    def _evict_to_capacity(self) -> None:
         while len(self._entries) >= self.capacity:
-            self._entries.pop(next(iter(self._entries)))
-        self._entries[key] = (tuple(arrays), plan)
+            _, entry = self._entries.popitem(last=False)
+            for idkey in entry.aliases:
+                self._by_id.pop(idkey, None)
+
+    def _alias(self, canonical, idkey, arrays) -> None:
+        entry = self._entries[canonical]
+        if idkey in entry.aliases:
+            return
+        entry.aliases[idkey] = tuple(arrays)
+        self._by_id[idkey] = canonical
+        while len(entry.aliases) > ALIAS_CAP:
+            old, _ = entry.aliases.popitem(last=False)
+            self._by_id.pop(old, None)
+
+    def _verify_hit(self, entry: _Entry, arrays) -> bool | None:
+        """Element-wise compare against an anchored alias's arrays.
+
+        Returns True/False on a live comparison, or None when every
+        anchored alias has been donated/deleted (the donated-buffer
+        training pattern invalidates buffers the entry still references)
+        — the caller then rebuilds rather than crashing or serving an
+        unverifiable plan.
+        """
+        for anchored in reversed(entry.aliases.values()):   # newest first
+            ok = feature_cache.anchors_match(anchored, arrays)
+            if ok is not None:
+                return ok
+        return None
+
+    # -- lookup -------------------------------------------------------------
+
+    def lookup(self, arrays, statics, build):
+        """Memoized plan for ``(arrays, statics)`` under the active mesh.
+
+        ``build(fingerprint)`` is called on a miss; ``fingerprint`` is
+        the content words of ``arrays`` (or None under trace / with
+        content keys disabled) so the builder can key its pinned-tier
+        structures off the same identity (subm3_plan does).
+        """
+        statics = tuple(statics) + sharding.mesh_fingerprint()
+        idkey = (tuple(id(a) for a in arrays), statics)
+        canonical = self._by_id.get(idkey)
+        if canonical is not None and canonical in self._entries:
+            self.hits += 1
+            self.id_hits += 1
+            return self._entries[canonical].plan
+
+        fp = content_fingerprint(arrays) if self.content else None
+        if fp is not None:
+            ckey = (fp, statics)
+            entry = self._entries.get(ckey)
+            if entry is not None:
+                ok = self._verify_hit(entry, arrays) if self.verify else True
+                if ok:
+                    self.hits += 1
+                    self.content_hits += 1
+                    self._alias(ckey, idkey, arrays)
+                    return entry.plan
+                if ok is False:
+                    self.collisions += 1
+                # ok False: collision; ok None: anchors all donated —
+                # either way rebuild instead of serving unverified
+                self._entries.pop(ckey)            # latest wins
+                for ik in entry.aliases:
+                    self._by_id.pop(ik, None)
+        else:
+            ckey = idkey                           # identity-only entry
+
+        self.misses += 1
+        plan = build(fp)
+        self._evict_to_capacity()
+        self._entries[ckey] = _Entry(plan, OrderedDict(), fp)
+        self._alias(ckey, idkey, arrays)
         return plan
 
 
 def _maybe_cached(cache: PlanCache | None, arrays, statics, build):
     if cache is None:
-        return build()
+        return build(None)
     return cache.lookup(arrays, statics, build)
 
 
@@ -157,34 +394,71 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
                batch_bits: int = 4, bm: int = 128, bo: int | None = None,
                search_impl: str | None = None,
                cache: PlanCache | None = None) -> ConvPlan:
-    """Submanifold 3x3x3 plan: outputs == inputs, 27 taps. ``bo`` is the
-    output-block height of the output-stationary tile layout (DESIGN.md
-    §5/§6); None picks the build default.
+    """Submanifold 3x3x3 plan: outputs == inputs, 27 taps.
 
-    ``method='octree'`` runs the fused OCTENT engine (kernels/octent):
-    ``search_impl`` picks its backend — pallas | interpret | ref | xla |
-    sharded, None resolving via ``octent.ops.search_impl()`` (the mesh-
-    partitioned engine when the active mesh shards the block-key axes,
-    else the Pallas kernel on TPU / its XLA bit-oracle elsewhere); 'xla'
-    is the retained dense-table builder. The resolved impl is part of the
-    cache key, alongside the mesh fingerprint (PlanCache); on the sharded
-    path ``n_blocks`` — and therefore ``ConvPlan.overflow`` — comes from
-    the replicated stage-1 build, so every shard sees the same flag.
+    Args:
+      coords, batch, valid: the padded coordinate stream (N, 3)/(N,)/(N,).
+      max_blocks: octree directory capacity; the builder raises (eager)
+        or sets ``ConvPlan.overflow`` (jit) when the scene occupies more
+        16^3 blocks — never a silent voxel drop.
+      method: 'octree' (the paper engine) | 'sorted' (beyond-paper
+        composite-key variant, small grids only).
+      grid_bits, batch_bits: block-key bit budget (core/morton.py).
+      bm: kernel m-tile rows; ``bo``: output-block height of the
+        output-stationary tile layout (DESIGN.md §5/§6; None = build
+        default).
+      search_impl: OCTENT backend — pallas | interpret | ref | xla |
+        sharded; None resolves via ``octent.ops.search_impl()`` (the
+        mesh-partitioned engine when the active mesh shards the
+        block-key axes, else the Pallas kernel on TPU / its XLA
+        bit-oracle elsewhere). 'xla' is the retained dense-table builder.
+      cache: memoize per coordinate set (identity + content keys).
+
+    Returns:
+      A :class:`ConvPlan` with kind='subm3', 27 taps, out_* = None.
+
+    The resolved impl is part of the cache key, alongside the mesh
+    fingerprint; on the sharded path ``n_blocks`` — and therefore
+    ``ConvPlan.overflow`` — comes from the replicated stage-1 build, so
+    every shard sees the same flag. On the table-backed impls
+    (pallas/interpret/ref) the stage-1 QueryTable is pinned in the
+    cache's :class:`~repro.runtime.feature_cache.PinnedStore` keyed by
+    the content fingerprint, so a rebuild after plan eviction skips
+    straight to the query (DESIGN.md §10).
     """
     simpl = (search_impl or _octent_ops().search_impl()) \
         if method == "octree" else None
     statics = ("subm3", max_blocks, method, simpl, grid_bits, batch_bits,
                bm, bo)
+    store = cache.pinned if cache is not None else None
 
-    def build():
+    def build(fp):
         MAPSEARCH_CALLS[0] += 1
+        oct_ops = _octent_ops()
         offs = jnp.asarray(morton.subm3_offsets())
         overflow = None
         if method == "octree":
-            kmap, n_blocks = _octent_ops().build_kmap(
+            table = None
+            pin_key = None
+            # anchoring the key arrays costs device memory against the
+            # store budget, so only verifying caches pay for it
+            verify = cache is not None and cache.verify
+            anchor = (coords, batch, valid) if verify else None
+            if simpl in ("pallas", "interpret", "ref") and fp is not None \
+                    and store is not None:
+                pin_key = ("qtable", fp, max_blocks, grid_bits, batch_bits,
+                           sharding.mesh_fingerprint())
+                table = store.get(pin_key, anchor=anchor, verify=verify)
+            if simpl in ("pallas", "interpret", "ref") and table is None:
+                table = oct_ops.build_query_table(
+                    coords, batch, valid, max_blocks=max_blocks,
+                    grid_bits=grid_bits, batch_bits=batch_bits)
+                if pin_key is not None:
+                    store.put(pin_key, table, anchor=anchor)
+            kmap, n_blocks = oct_ops.build_kmap(
                 coords, batch, valid, max_blocks=max_blocks,
                 grid_bits=grid_bits, batch_bits=batch_bits, impl=simpl,
-                offsets=offs)
+                offsets=offs, table=table)
             overflow = _require_block_capacity(n_blocks, max_blocks)
         elif method == "sorted":
             if not mapsearch.sorted_key_fits(grid_bits, batch_bits):
@@ -212,10 +486,14 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
 def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
                 batch_bits: int = 4, bm: int = 128, bo: int | None = None,
                 cache: PlanCache | None = None) -> ConvPlan:
-    """Gconv2 (k=2, s=2) plan: octant taps to octree parents (§IV-D1)."""
+    """Gconv2 (k=2, s=2) plan: octant taps to octree parents (§IV-D1).
+
+    Returns a ConvPlan carrying the downsampled ``out_*`` coordinate set
+    and the scatter-form ``maps`` the paired Tconv2 reuses (§IV-D2).
+    """
     statics = ("gconv2", grid_bits, batch_bits, bm, bo)
 
-    def build():
+    def build(fp):
         MAPSEARCH_CALLS[0] += 1
         maps = mapsearch.build_maps_gconv2(coords, batch, valid,
                                            grid_bits=grid_bits,
@@ -244,7 +522,7 @@ def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
     budget = out_budget if out_budget is not None else coords.shape[0]
     statics = ("gconv3", grid_bits, batch_bits, budget, bm, bo, with_tiles)
 
-    def build():
+    def build(fp):
         MAPSEARCH_CALLS[0] += 1
         maps = mapsearch.build_maps_gconv3(coords, batch, valid,
                                            grid_bits=grid_bits,
@@ -266,7 +544,7 @@ def tconv2_plan(gconv2_maps: StridedMaps, target_coords, target_batch,
     so this never counts as a map search)."""
     statics = ("tconv2", bm, bo)
 
-    def build():
+    def build(fp):
         maps = mapsearch.transpose_maps(gconv2_maps, target_coords,
                                         target_batch, target_valid)
         n = target_valid.shape[0]
@@ -288,6 +566,11 @@ def execute(plan: ConvPlan, feats: jnp.ndarray, weights: jnp.ndarray,
             bias: jnp.ndarray | None = None, *, spac: bool = True,
             impl: str | None = None, bn: int = 128) -> jnp.ndarray:
     """Run rulebook execution for ``plan`` over the current features.
+
+    ``feats`` / ``weights`` / ``bias`` are stream-tier by design
+    (DESIGN.md §10): they change every layer and step, are never cached,
+    and flow through the fused kernel's double-buffered DMAs; everything
+    geometry-determined rides on the (cached/pinned) plan.
 
     impl: 'pallas' | 'interpret' | 'ref' route through the gather-fused
     tile machinery (kernels/spconv_gemm); 'xla' is the pure-XLA tap-scan

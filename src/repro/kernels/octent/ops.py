@@ -37,7 +37,8 @@ from repro.kernels.octent.ref import octent_query_ref
 
 
 def search_impl() -> str:
-    """pallas | interpret | ref | xla | sharded — resolved per call site.
+    """pallas | interpret | ref | xla | sharded — resolved per call site
+    from ``REPRO_SEARCH_IMPL`` (documented in runtime/flags.py).
 
     Resolve *outside* jit boundaries and cache keys (core/plan.py does):
     the env var must be re-read per call, not frozen into a trace. When
@@ -84,6 +85,32 @@ def build_query_table(coords: jnp.ndarray, batch: jnp.ndarray,
                       valid: jnp.ndarray, *, max_blocks: int,
                       grid_bits: int = 7, batch_bits: int = 4,
                       binning_mode: str = "counting") -> QueryTable:
+    """Stage 1: sort-free octree directory + compacted banked table.
+
+    Args:
+      coords: (N, 3) int32 voxel coordinates (padded rows allowed).
+      batch:  (N,) int32 batch index per voxel.
+      valid:  (N,) bool row-validity mask; invalid rows never enter the
+        directory or the table.
+      max_blocks: directory capacity (static). The flat table address
+        space is ``max_blocks * 4096``, which must fit int32 (asserted).
+      grid_bits, batch_bits: block-key bit budget (morton.block_key).
+      binning_mode: 'counting' (Morton-radix passes, zero XLA sorts —
+        the default and the audited path) | 'argsort' (retained global-
+        sort baseline; bit-identical output).
+
+    Returns:
+      A :class:`QueryTable`. Invariants: ``ublocks`` is sorted ascending
+      with INVALID padding; ``tkey`` is sorted ascending with the
+      out-of-range sentinel ``max_blocks * 4096`` padding to a LANE
+      multiple; ``tval[i] == -1`` iff slot i is padding; ``n_blocks`` is
+      the *true* occupied-block count and may exceed ``max_blocks`` —
+      the caller's overflow signal (plan.subm3_plan raises/flags).
+
+    The result is geometry-only and safe to share: core/plan.py pins it
+    in the content-keyed PinnedStore (DESIGN.md §10) so layers and
+    training steps that replay the same coordinate set skip this build.
+    """
     n = coords.shape[0]
     sentinel = max_blocks * morton.TABLE_SIZE
     assert sentinel < 2 ** 31, (
@@ -124,21 +151,46 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
                *, max_blocks: int, grid_bits: int = 7, batch_bits: int = 4,
                impl: str | None = None, bq: int = 128,
                offsets: jnp.ndarray | None = None,
-               binning_mode: str = "counting"
+               binning_mode: str = "counting",
+               table: QueryTable | None = None
                ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Submanifold OCTENT map search. Returns (kmap (N, K) int32, n_blocks).
+    """Submanifold OCTENT map search: the full stage-1 + stage-2 engine.
 
-    ``n_blocks`` is the true occupied-block count for the caller's
-    overflow check; kmap misses are -1, exactly as the oracles.
-    ``binning_mode='argsort'`` swaps the stage-1 build's radix passes for
-    the retained global sorts (benchmark baseline; same kmap either way).
-    ``impl='sharded'`` partitions the table by block-key range over the
-    active mesh (kernels/octent/sharded.py) — bit-identical kmap, reduced
-    n_blocks.
+    Args:
+      coords, batch, valid: the padded coordinate stream (see
+        :func:`build_query_table`).
+      max_blocks: octree directory capacity (static).
+      grid_bits, batch_bits: block-key bit budget.
+      impl: pallas | interpret | ref | xla | sharded; None resolves via
+        :func:`search_impl` (env flag ``REPRO_SEARCH_IMPL``, see
+        runtime/flags.py). 'sharded' partitions the table by block-key
+        range over the active mesh (kernels/octent/sharded.py) — bit-
+        identical kmap. 'xla' is the retained dense-table builder.
+      bq: query-tile height of the Pallas kernel grid.
+      offsets: (K, 3) int32 kernel offsets (default: the 27 Subm3 taps).
+      binning_mode: 'argsort' swaps the stage-1 radix passes for the
+        retained global sorts (benchmark baseline; same kmap either way).
+      table: a prebuilt stage-1 :class:`QueryTable` for this exact
+        coordinate set and (max_blocks, grid_bits, batch_bits) — e.g.
+        one pinned by core/plan.py (DESIGN.md §10) — so only the query
+        runs. Accepted by the table-backed impls (pallas / interpret /
+        ref) only; 'xla' and 'sharded' build their own structures and
+        raise if one is passed.
+
+    Returns:
+      ``(kmap, n_blocks)``: kmap (N, K) int32 with -1 misses, exactly as
+      the oracles; ``n_blocks`` the true occupied-block count for the
+      caller's overflow check (> max_blocks means voxels would have been
+      dropped — plan.subm3_plan raises eagerly / flags under jit).
     """
     impl = impl or search_impl()
     if offsets is None:
         offsets = jnp.asarray(morton.subm3_offsets())
+    if table is not None and impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(
+            f"impl={impl!r} builds its own search structure; a prebuilt "
+            f"QueryTable is only consumed by the table-backed impls "
+            f"(pallas | interpret | ref)")
     if impl == "sharded":
         from repro.kernels.octent import sharded
         return sharded.build_kmap_sharded(
@@ -157,9 +209,10 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
                                            grid_bits=grid_bits,
                                            batch_bits=batch_bits)
         return kmap, table.n_blocks.astype(jnp.int32)
-    qt = build_query_table(coords, batch, valid, max_blocks=max_blocks,
-                           grid_bits=grid_bits, batch_bits=batch_bits,
-                           binning_mode=binning_mode)
+    qt = table if table is not None else build_query_table(
+        coords, batch, valid, max_blocks=max_blocks,
+        grid_bits=grid_bits, batch_bits=batch_bits,
+        binning_mode=binning_mode)
     if impl == "ref":
         kmap = octent_query_ref(coords, batch, valid, offsets, qt.ublocks,
                                 qt.tkey, qt.tval, qt.n_blocks,

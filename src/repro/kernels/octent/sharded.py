@@ -123,6 +123,30 @@ def build_query_table_sharded(coords: jnp.ndarray, batch: jnp.ndarray,
     The directory pads to S equal block slices and the compacted table to
     S equal (LANE-aligned) slot slices; both are pinned to the mesh with
     the block-key PartitionSpec so each device stores only its range.
+
+    Args:
+      coords, batch, valid: the padded coordinate stream, exactly as
+        ``ops.build_query_table``.
+      max_blocks, grid_bits, batch_bits, binning_mode: forwarded to the
+        (replicated) single-device stage-1 build.
+      mesh: the device mesh (default: the active one; required — this
+        impl has nothing to partition over without one).
+      axes: mesh axes to partition the key range over (default:
+        ``runtime.sharding.blockkey_axes`` — every data/model axis).
+
+    Returns:
+      A :class:`ShardedQueryTable` with S = prod(extent of ``axes``)
+      contiguous key-range slices. Invariants: slice boundaries
+      (``bounds``/``tbounds``) are the first key of each slice; padding
+      (INVALID / address sentinel / -1) never matches a query;
+      ``n_blocks`` is shard-uniform (replicated build), so the overflow
+      check needs no collective.
+
+    Unlike the single-device QueryTable, this structure is laid out for
+    one specific mesh and is *not* pinned in the content-keyed
+    PinnedStore (DESIGN.md §10) — its residency is the mesh sharding
+    itself, and the PlanCache's mesh fingerprint invalidates plans that
+    embed it when the mesh changes.
     """
     from repro.kernels.octent import ops as oct_ops
     mesh, axes = _resolve_mesh(mesh, axes)

@@ -55,7 +55,8 @@ VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
 def kernel_impl() -> str:
-    """pallas | interpret | ref — resolved once per call site.
+    """pallas | interpret | ref — resolved once per call site from
+    ``REPRO_KERNEL_IMPL`` (documented in runtime/flags.py).
 
     Resolve this *outside* jit boundaries (the public wrappers below do):
     the env var must be re-read per call, not frozen into a trace cache key.

@@ -7,6 +7,16 @@ token pipeline with checkpoint/restart via runtime.fault.TrainRunner:
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+``--arch minkunet`` instead runs the SpConv training loop
+(:func:`run_spconv_demo`), the end-to-end face of the cross-step plan
+cache (DESIGN.md §10): plans are built *eagerly* per step through one
+long-lived content-addressed PlanCache, execution is jitted over the plan
+constants, and a dataloader replaying the same cloud — every array
+freshly allocated — performs map search once per stage geometry
+(2*len(enc)+1 searches for the whole run, flat in the step count).
+``benchmarks/cache_model.py`` and tests/test_cache_content.py gate on
+exactly this loop.
 """
 from __future__ import annotations
 
@@ -60,6 +70,112 @@ def make_stream(cfg, batch: int, seq: int, seed: int = 0):
     return TokenStream(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed)
 
 
+# ---------------------------------------------------------------------------
+# SpConv training loop: cross-step plan reuse (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def make_spconv_step(cfg, opt_cfg, plans, *, impl: str | None = None):
+    """Jitted (state, batch) -> (state, metrics) over *constant* plans.
+
+    The plans were built eagerly (models.minkunet.build_plans), so the
+    trace contains no map search — geometry enters as baked-in constants
+    and only the stream tier (features, labels, params) flows through as
+    arguments. ``donate_argnums=0`` donates the optimizer state, the
+    buffer-reuse pattern the content-addressed cache exists for.
+    """
+    from repro.models import minkunet
+
+    def step(state, batch):
+        params, opt_state = state
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: minkunet.segmentation_loss(p, batch, cfg, plans=plans,
+                                                 impl=impl),
+            has_aux=True)(params)
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        return (params, opt_state), {**metrics, "loss": loss, **om}
+
+    return jax.jit(step, donate_argnums=0)
+
+
+def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
+                    impl: str | None = "ref", seed: int = 0, cache=None,
+                    scene: str = "indoor", replay: bool = True) -> dict:
+    """Train MinkUNet for ``steps`` steps with cross-step plan caching.
+
+    Every step re-voxelizes the scene into **freshly allocated** arrays
+    (with ``replay=True`` the same scene every step — the dataloader-
+    replay / donated-buffer pattern). Identity keys alone would miss on
+    every step; the content-addressed PlanCache hits, so map search runs
+    exactly ``len(enc) + (len(enc) + 1)`` times total, independent of
+    ``steps``, and the compiled step function is reused because the
+    cached plan objects are identical (`MinkPlans` identity keys the
+    jitted-fn memo).
+
+    ``impl`` defaults to the pure-jnp ``'ref'`` backend so the CI gates
+    are deterministic on CPU hosts; pass ``impl=None`` to resolve the
+    real backend per host (``REPRO_KERNEL_IMPL`` / the fused Pallas
+    kernel on TPU — the CLI's ``--impl auto`` does exactly that).
+
+    Returns a result dict consumed by the CI gates
+    (benchmarks/cache_model.py, tests/test_cache_content.py):
+    ``losses``, ``mapsearch_calls``, ``searches_per_cloud`` (the expected
+    flat count), ``compiled_steps``, and the cache's :meth:`stats`.
+    """
+    from repro.core import plan as planlib
+    from repro.data import pointcloud
+    from repro.models import minkunet
+
+    cfg = cfg or minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
+                                         classes=4, blocks=1)
+    params = minkunet.init_model(cfg, jax.random.key(seed))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=max(steps, 2),
+                                warmup_steps=1)
+    state = (params, adamw.init(params))
+    cache = cache if cache is not None else planlib.PlanCache()
+    planlib.reset_mapsearch_counter()
+
+    def cloud_at(step: int) -> dict:
+        rng = np.random.default_rng(seed if replay else seed + step)
+        vb = pointcloud.make_batch(rng, scene, batch_size=1,
+                                   max_voxels=voxels)
+        b = {k: jax.numpy.asarray(np.array(v))      # always fresh buffers
+             for k, v in vb._asdict().items()}
+        b["labels"] = jax.numpy.clip(b["labels"], 0, cfg.classes - 1)
+        return b
+
+    from collections import OrderedDict
+    # compiled-step memo keyed by plan-object identity: a content hit
+    # returns the same plan objects, so the replay loop reuses one
+    # executable. Bounded FIFO — a non-replaying stream would otherwise
+    # pin one MinkPlans + XLA executable per step forever.
+    step_fns: OrderedDict = OrderedDict()
+    compiled = 0
+    losses = []
+    for step in range(steps):
+        batch = cloud_at(step)
+        plans = minkunet.build_plans(batch["coords"], batch["batch"],
+                                     batch["valid"], cfg, cache=cache)
+        key = tuple(id(p) for part in plans for p in part)
+        fn = step_fns.get(key)
+        if fn is None:
+            fn = make_spconv_step(cfg, opt_cfg, plans, impl=impl)
+            while len(step_fns) >= 8:
+                step_fns.popitem(last=False)
+            step_fns[key] = fn
+            compiled += 1
+        state, metrics = fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return {
+        "steps": steps,
+        "losses": losses,
+        "mapsearch_calls": planlib.mapsearch_call_count(),
+        "searches_per_cloud": 2 * len(cfg.enc) + 1,
+        "compiled_steps": compiled,
+        "cache": cache.stats(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -71,7 +187,26 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--full-config", action="store_true",
                     help="use the full architecture (default: reduced)")
+    ap.add_argument("--voxels", type=int, default=512,
+                    help="cloud budget for --arch minkunet")
+    ap.add_argument("--impl", default="auto",
+                    help="rulebook-execution backend for --arch minkunet: "
+                         "auto (REPRO_KERNEL_IMPL / fused kernel on TPU) | "
+                         "pallas | interpret | ref | xla")
     args = ap.parse_args()
+
+    if args.arch == "minkunet":
+        res = run_spconv_demo(steps=args.steps, voxels=args.voxels,
+                              impl=None if args.impl == "auto" else args.impl)
+        flat = res["mapsearch_calls"] == res["searches_per_cloud"]
+        print(f"arch=minkunet steps={res['steps']} "
+              f"first_loss={res['losses'][0]:.4f} "
+              f"last_loss={res['losses'][-1]:.4f} "
+              f"map_searches={res['mapsearch_calls']} "
+              f"(flat={'yes' if flat else 'NO'}) "
+              f"compiled_steps={res['compiled_steps']} "
+              f"content_hits={res['cache']['content_hits']}")
+        return
 
     cfg = get_config(args.arch)
     if not args.full_config:

@@ -7,6 +7,7 @@ Tconv2 upsampling with exact coordinate recovery (§IV-D2) + skip concat.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -69,45 +70,114 @@ def init_model(cfg: MinkUNetConfig, key) -> dict:
     return p
 
 
-def _apply_subm(st, params, cfg, training, n_max, cache, impl):
+def _apply_subm(st, params, cfg, training, n_max, cache, impl, plan=None):
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
                            batch_bits=cfg.batch_bits, spac=cfg.spac,
-                           cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
+                           plan=plan, cache=cache, impl=impl, bm=cfg.bm,
+                           bo=cfg.bo)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
     return spconv.relu(st)
+
+
+class MinkPlans(NamedTuple):
+    """Every geometry-determined plan of one MinkUNet pass.
+
+    Built eagerly by :func:`build_plans` (content-addressed, so a training
+    loop replaying the same cloud gets the *same* plan objects back every
+    step) and consumed by :func:`forward` via ``plans=`` — the plans then
+    enter the jitted step as constants, and plan-object identity is a
+    ready-made compiled-step cache key (launch/train.py does exactly
+    this).
+    """
+
+    subm: tuple   # per resolution r = 0..len(enc): the Subm3 stage plan
+    down: tuple   # per encoder stage: the Gconv2 plan (carries .maps)
+    up: tuple     # per decoder stage: the Tconv2 plan
+
+
+def build_plans(coords, batch, valid, cfg: MinkUNetConfig, *,
+                cache: planlib.PlanCache | None = None,
+                n_max: int | None = None) -> MinkPlans:
+    """Build (or fetch) the full plan set for one coordinate set.
+
+    Pure geometry — no features, no parameters — so it can run eagerly
+    outside the training step while execution stays jitted. With a
+    long-lived content-addressed ``cache``, a re-allocated identical
+    cloud (dataloader replay, donated buffers) returns the cached plan
+    objects and performs **zero** map searches; a fresh cloud pays
+    ``len(enc)`` Gconv2 searches + ``len(enc) + 1`` Subm3 searches
+    (Tconv2 reuses the Gconv2 maps and never searches, §IV-D2).
+    """
+    assert len(cfg.dec) <= len(cfg.enc), "decoder deeper than encoder"
+    if cache is None:
+        cache = planlib.PlanCache()
+    n_max = coords.shape[0] if n_max is None else n_max
+    gb, bb = cfg.grid_bits, cfg.batch_bits
+
+    def subm(c, b, v):
+        return planlib.subm3_plan(c, b, v, max_blocks=n_max,
+                                  method=cfg.map_method, grid_bits=gb,
+                                  batch_bits=bb, bm=cfg.bm, bo=cfg.bo,
+                                  cache=cache)
+
+    cur = (coords, batch, valid)
+    subms, downs, stack = [subm(*cur)], [], [cur]
+    for _ in range(len(cfg.enc)):
+        d = planlib.gconv2_plan(*cur, grid_bits=gb, batch_bits=bb,
+                                bm=cfg.bm, bo=cfg.bo, cache=cache)
+        cur = (d.out_coords, d.out_batch, d.out_valid)
+        downs.append(d)
+        subms.append(subm(*cur))
+        stack.append(cur)
+    ups = []
+    for i in range(len(cfg.dec)):
+        target = stack[-(i + 2)]
+        ups.append(planlib.tconv2_plan(downs[-(i + 1)].maps, *target,
+                                       bm=cfg.bm, bo=cfg.bo, cache=cache))
+    return MinkPlans(tuple(subms), tuple(downs), tuple(ups))
 
 
 def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
             training: bool = False,
             cache: planlib.PlanCache | None = None,
+            plans: MinkPlans | None = None,
             impl: str | None = None) -> jnp.ndarray:
     """Returns per-voxel class logits (N, classes).
 
-    A per-forward PlanCache shares map search across every layer on the same
-    coordinate set: B stacked Subm3 blocks search once, and decoder stages
-    reuse the encoder-stage plans at the same resolution (coordinates are
-    recovered exactly by Tconv2, §IV-D2). Pass a longer-lived ``cache`` to
-    extend the reuse across calls on identical coordinate arrays.
+    A per-forward PlanCache shares map search across every layer on the
+    same coordinate set: B stacked Subm3 blocks search once, and decoder
+    stages reuse the encoder-stage plans at the same resolution
+    (coordinates are recovered exactly by Tconv2, §IV-D2). Pass a
+    longer-lived ``cache`` to extend the reuse across calls — its content
+    keys make *re-allocated* identical clouds hit too (DESIGN.md §10) —
+    or prebuild the geometry with :func:`build_plans` and pass ``plans=``
+    so the forward performs no plan lookups at all (the training-loop
+    arrangement: eager plan build, jitted execution over plan constants).
     """
-    if cache is None:
+    if plans is None and cache is None:
         cache = planlib.PlanCache()
     n_max = st.n_max
+    n_enc = len(cfg.enc)
     st = spconv.mask_feats(st)
-    st = _apply_subm(st, params["stem"], cfg, training, n_max, cache, impl)
+    st = _apply_subm(st, params["stem"], cfg, training, n_max, cache, impl,
+                     plan=plans.subm[0] if plans else None)
 
     skips, maps_stack = [st], []
     gb = cfg.grid_bits
-    for i in range(len(cfg.enc)):
+    for i in range(n_enc):
         stage = params[f"enc{i}"]
         down, maps = spconv.gconv2(st, stage["down"]["conv"], grid_bits=gb,
-                                   batch_bits=cfg.batch_bits, cache=cache,
-                                   impl=impl, bm=cfg.bm, bo=cfg.bo)
+                                   batch_bits=cfg.batch_bits,
+                                   plan=plans.down[i] if plans else None,
+                                   cache=cache, impl=impl, bm=cfg.bm,
+                                   bo=cfg.bo)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"], training=training)
         st = spconv.relu(down)
         for b in range(cfg.blocks):
             st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
-                             cache, impl)
+                             cache, impl,
+                             plan=plans.subm[i + 1] if plans else None)
         maps_stack.append(maps)
         skips.append(st)
 
@@ -116,6 +186,7 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
         maps = maps_stack[-(i + 1)]
         target = skips[-(i + 2)]
         up = spconv.tconv2(st, stage["up"]["conv"], maps, target,
+                           plan=plans.up[i] if plans else None,
                            cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
         up, _ = spconv.batch_norm(up, stage["up"]["bn"], training=training)
         up = spconv.relu(up)
@@ -123,7 +194,8 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
             jnp.concatenate([up.feats, target.feats], axis=-1))
         for b in range(cfg.blocks):
             st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
-                             cache, impl)
+                             cache, impl,
+                             plan=plans.subm[n_enc - 1 - i] if plans else None)
 
     logits = st.feats @ params["head"]["w"][0] + params["head"]["b"]
     return jnp.where(st.valid[:, None], logits, 0)
@@ -139,10 +211,14 @@ def forward_multicloud(params, clouds, cfg: MinkUNetConfig, *,
     every map search routes through the sharded OCTENT engine
     (kernels/octent/sharded.py) while rulebook execution follows the
     mesh's tensor sharding. Each cloud keeps its own plans — plan keys
-    are coordinate-array identities plus the mesh fingerprint, so the
-    shared cache naturally separates clouds and still reuses plans
-    *within* each cloud's enc/dec stages (one search per resolution).
-    The cache is sized so no cloud evicts another's stage plans mid-pass.
+    are coordinate-array identities *and* content fingerprints plus the
+    mesh fingerprint (DESIGN.md §10), so the shared cache naturally
+    separates distinct clouds, still reuses plans *within* each cloud's
+    enc/dec stages (one search per resolution), and deduplicates
+    repeated clouds across requests: a client re-sending the same scene
+    (or the same cloud appearing twice in one batch) hits by content
+    even though every buffer is new. The cache is sized so no cloud
+    evicts another's stage plans mid-pass.
     """
     if cache is None:
         per_cloud = 2 * (len(cfg.enc) + len(cfg.dec)) + 2
@@ -151,11 +227,15 @@ def forward_multicloud(params, clouds, cfg: MinkUNetConfig, *,
                     impl=impl) for st in clouds]
 
 
-def segmentation_loss(params, batch, cfg: MinkUNetConfig):
-    """batch: SparseTensor fields + labels (N,) int32."""
+def segmentation_loss(params, batch, cfg: MinkUNetConfig, *,
+                      plans: MinkPlans | None = None,
+                      impl: str | None = None):
+    """batch: SparseTensor fields + labels (N,) int32. ``plans`` skips
+    in-trace plan building (see :func:`build_plans`); ``impl`` selects
+    the rulebook-execution backend as in :func:`forward`."""
     st = SparseTensor(batch["coords"], batch["batch"], batch["valid"],
                       batch["feats"])
-    logits = forward(params, st, cfg, training=True)
+    logits = forward(params, st, cfg, training=True, plans=plans, impl=impl)
     logits = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, -1)
     ll = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]

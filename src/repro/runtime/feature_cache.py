@@ -1,0 +1,272 @@
+"""Non-uniform on-device caching tiers for execution plans (DESIGN.md §10).
+
+SpOctA's third pillar is a *non-uniform* caching strategy: the small,
+high-reuse mapping structures get full on-chip residency while the bulk
+feature stream does not, cutting external memory access energy by 57.6 %
+(paper §V-C, Fig. 9(c)). PointAcc makes the same argument for keeping the
+mapping metadata resident while streaming features. This module is the
+software twin of that policy for the plan subsystem (core/plan.py):
+
+  * **pinned tier** — the octree search structure (sorted block directory
+    ``ublocks`` + compacted ``tkey``/``tval`` table, a few KiB–MiB) and
+    the per-tile scalar-prefetch metadata of the tap-tile layout
+    (``tile_tap``/``tile_nz``/``tile_ob``/…, one int per tile). Small,
+    geometry-only, reused by every layer and step that shares the
+    coordinate set. The :class:`PinnedStore` below keeps the search
+    structure device-resident even *after* its plan is evicted from the
+    (count-bounded) PlanCache, so a rebuild skips the stage-1 table
+    build entirely.
+  * **cached tier** — the plan bodies: the kernel map and the per-slot
+    gather/scatter streams (~K ints per voxel). Cached per plan in the
+    PlanCache; rebuilt on a miss.
+  * **stream tier** — features, weights, partial sums. Never cached:
+    they change every layer/step and are streamed through the fused
+    kernel's double-buffered DMAs (DESIGN.md §6).
+
+The tier split is what :mod:`benchmarks.cache_model` turns into the
+cached-vs-uncached external-access comparison (``BENCH_cache.json``,
+rendered by ``benchmarks/roofline.py --cache``).
+
+In JAX, "pinned" means: a strong reference to a committed device array.
+Holding the reference is what keeps the buffer alive on device; dropping
+the last reference frees it. The :class:`PinnedStore` therefore *is* the
+pin — byte-bounded, content-keyed, FIFO-evicting, and shared process-wide
+by default (:func:`default_store`) so independent per-forward PlanCaches
+still share one resident copy of each search structure.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+import jax
+
+#: tier names, in decreasing residency priority
+TIER_PINNED = "pinned"
+TIER_CACHED = "cached"
+TIER_STREAM = "stream"
+
+#: field-name -> tier policy for plan components. Everything not named
+#: here that lives on a plan is cached-tier (it exists only inside a
+#: PlanCache entry); runtime operands (feats/weights/bias) are stream.
+_PINNED_FIELDS = frozenset({
+    # octree search structure (kernels/octent ops.QueryTable)
+    "ublocks", "tkey", "tval", "n_blocks",
+    # per-tile scalar-prefetch metadata (kernels/spconv_gemm ops.TapTiles)
+    "tile_tap", "tile_nz", "tile_ob", "tile_first", "tile_run",
+    "grp_skip", "grp_contig",
+})
+_STREAM_FIELDS = frozenset({"feats", "weights", "bias"})
+
+
+def classify(name: str) -> str:
+    """Tier of a named plan/operand component (DESIGN.md §10 policy).
+
+    Args:
+      name: a field name from ConvPlan / TapTiles / QueryTable, or a
+        runtime operand name (``feats`` / ``weights`` / ``bias``).
+
+    Returns:
+      One of :data:`TIER_PINNED` / :data:`TIER_CACHED` /
+      :data:`TIER_STREAM`.
+    """
+    if name in _PINNED_FIELDS:
+        return TIER_PINNED
+    if name in _STREAM_FIELDS:
+        return TIER_STREAM
+    return TIER_CACHED
+
+
+def anchors_match(anchored, arrays) -> bool | None:
+    """Element-wise compare one anchored array tuple against ``arrays``.
+
+    Returns None when any anchored buffer was donated/deleted since it
+    was pinned (unverifiable — the caller should rebuild rather than
+    crash or serve unverified), else whether every pair matches exactly.
+    Shared by PlanCache._verify_hit and PinnedStore.get so donation
+    semantics cannot drift between the two verification sites.
+    """
+    if anchored is None:
+        return None
+    if any(getattr(a, "is_deleted", lambda: False)() for a in anchored):
+        return None
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(anchored, arrays))
+
+
+def nbytes(tree) -> int:
+    """Total device bytes of every array leaf in ``tree`` (0 for None)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+def _named_fields(obj):
+    """(name, value) pairs of a NamedTuple-like object's array fields."""
+    for name in getattr(obj, "_fields", ()):
+        yield name, getattr(obj, name)
+
+
+def plan_tier_bytes(plan, table=None) -> dict:
+    """Byte totals per caching tier for one plan (+ its search table).
+
+    Duck-typed over NamedTuple fields so it needs no import of
+    core/plan.py: nested NamedTuples (TapTiles, StridedMaps, QueryTable)
+    are walked one level deep and classified field by field.
+
+    Args:
+      plan:  a ``core.plan.ConvPlan`` (or any NamedTuple of arrays).
+      table: optional ``kernels.octent.ops.QueryTable`` whose plan this
+        is, so the pinned tier counts the search structure too.
+
+    Returns:
+      ``{"pinned": int, "cached": int, "stream": int}`` — device bytes.
+      The stream tier is always 0 here (features never live on a plan);
+      stream bytes are a per-step quantity, modeled in
+      ``benchmarks/cache_model.py``.
+    """
+    out = {TIER_PINNED: 0, TIER_CACHED: 0, TIER_STREAM: 0}
+
+    def visit(name, value):
+        if value is None:
+            return
+        if hasattr(value, "_fields"):           # nested NamedTuple
+            for n, v in _named_fields(value):
+                visit(n, v)
+            return
+        if hasattr(value, "dtype"):
+            out[classify(name)] += value.size * value.dtype.itemsize
+
+    for name, value in _named_fields(plan):
+        visit(name, value)
+    if table is not None:
+        visit("table", table)
+    return out
+
+
+class PinnedStore:
+    """Byte-bounded, content-keyed store of pinned device buffers.
+
+    One entry per content key (a fingerprint tuple from
+    ``core.plan.array_fingerprint`` plus the build statics); the value is
+    any pytree of device arrays — in practice the OCTENT
+    :class:`~repro.kernels.octent.ops.QueryTable`. Entries are inserted
+    committed to their device (``jax.device_put`` is *not* re-run: the
+    arrays were produced on device by the build) and held by strong
+    reference, which is what pins them.
+
+    Eviction is FIFO by insertion when ``resident_bytes`` would exceed
+    ``capacity_bytes``; an entry larger than the whole capacity is simply
+    not stored. Counters (``hits`` / ``misses`` / ``evictions`` /
+    ``collisions``) make the non-uniform policy observable, mirroring the
+    PlanCache counters.
+
+    Because entries outlive the plans that built them, the store has the
+    same fingerprint-collision exposure as the PlanCache's content keys —
+    and the same remedy: ``put`` accepts the key's source arrays as an
+    ``anchor``, and ``get(..., verify=True)`` compares them element-wise
+    before serving, dropping + counting a colliding entry instead of
+    handing a *different* geometry's search structure to the query
+    (core/plan.py passes the cache's ``verify`` flag through, so
+    ``PlanCache(verify=True)`` is collision-safe at both levels).
+
+    The store deliberately has a *different* lifetime than the PlanCache:
+    plans (cached tier, count-bounded FIFO) may churn while the small
+    search structures (pinned tier, byte-bounded) stay resident — that is
+    the non-uniform part. See DESIGN.md §10.
+    """
+
+    def __init__(self, capacity_bytes: int = 32 * 2 ** 20):
+        self.capacity_bytes = capacity_bytes
+        # key -> (pytree, bytes, anchor arrays | None)
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.collisions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def resident_bytes(self) -> int:
+        """Device bytes currently pinned by the store — the stored values
+        *plus* their verification anchors, since the store's references
+        are what keep both alive once the caller drops its own."""
+        return sum(e[1] for e in self._entries.values())
+
+    def get(self, key, anchor=None, verify: bool = False):
+        """Pinned pytree for ``key``, or None (counted as hit/miss).
+
+        With ``verify=True`` and both anchors available, the entry's
+        anchored source arrays are compared element-wise against
+        ``anchor``; a mismatch is a fingerprint collision — the stale
+        entry is dropped, counted, and None returned so the caller
+        rebuilds for *its* geometry. Unverifiable entries — anchor
+        donated/deleted since pinning, or pinned anchorless by a
+        non-verifying cache — are treated the same way for a verifying
+        reader: dropped and rebuilt (the rebuild re-pins *with* an
+        anchor), so ``verify=True`` never consumes an unverified table
+        even on a store shared with non-verifying caches.
+        """
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if verify and anchor is not None:
+            ok = anchors_match(entry[2], anchor)
+            if ok is not True:
+                if ok is False:
+                    self.collisions += 1
+                del self._entries[key]   # collision or unverifiable
+                self.misses += 1         # (no/donated anchor): rebuild
+                return None
+        self.hits += 1
+        return entry[0]
+
+    def put(self, key, value, anchor=None) -> None:
+        """Pin ``value`` under ``key``, evicting FIFO to fit the budget.
+
+        Tracer leaves are refused (a traced table is jit-transient —
+        pinning it would leak the trace); oversized values are skipped.
+        ``anchor`` (the key's source arrays) enables collision
+        verification on :meth:`get`; its bytes count against the budget,
+        since in a re-allocated-buffer loop the store's reference may be
+        the only thing keeping the anchor alive on device.
+        """
+        if any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves((value, anchor))):
+            return
+        size = nbytes(value) + nbytes(anchor)
+        if size > self.capacity_bytes:
+            return
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        while self._entries and self.resident_bytes() + size > self.capacity_bytes:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        self._entries[key] = (value, size,
+                              tuple(anchor) if anchor is not None else None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        return {"entries": len(self),
+                "resident_bytes": self.resident_bytes(),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "collisions": self.collisions}
+
+
+_DEFAULT_STORE = PinnedStore()
+
+
+def default_store() -> PinnedStore:
+    """The process-wide pinned store shared by every PlanCache that does
+    not bring its own — so per-forward caches (models create a fresh one
+    per pass) still share one resident copy of each search structure
+    across layers, forwards, and training steps."""
+    return _DEFAULT_STORE

@@ -1,12 +1,53 @@
-"""Global measurement/runtime flags.
+"""Global measurement/runtime flags — the one-stop reference.
 
-UNROLL_FOR_COST: XLA's HLO cost analysis counts while-loop bodies ONCE
-regardless of trip count (verified empirically — see EXPERIMENTS.md
-§Methodology), which would silently undercount FLOPs/bytes/collectives of
-scanned layer stacks and chunked attention by the trip count. The dry-run
-therefore compiles small-depth *fully unrolled* cost variants (depth 1 and
-2) with this flag on and extrapolates exactly; production compiles keep
-scans rolled (compile time, memory).
+Environment flags (each entry states *when* its value is read — the two
+impl selectors re-read per call so they are never frozen into a trace;
+the others bind at construction or import as noted):
+
+``REPRO_SEARCH_IMPL``
+    OCTENT map-search backend — ``auto`` (default) | ``pallas`` |
+    ``interpret`` | ``ref`` | ``xla`` | ``sharded``. Resolved by
+    :func:`repro.kernels.octent.ops.search_impl`: ``auto`` picks the
+    mesh-partitioned engine when the active mesh shards the block-key
+    axes, else the compiled Pallas kernel on TPU / its XLA bit-oracle
+    ``ref`` elsewhere. ``interpret`` runs the same kernel under the
+    Pallas interpreter (CI hosts); ``xla`` is the retained dense-table
+    builder (the PR-1-style oracle).
+
+``REPRO_KERNEL_IMPL``
+    Rulebook-execution backend — ``auto`` (default) | ``pallas`` |
+    ``interpret`` | ``ref``. Resolved by
+    :func:`repro.kernels.spconv_gemm.ops.kernel_impl`: ``auto`` is the
+    compiled fused kernel on TPU, the pure-jnp tile oracle ``ref``
+    elsewhere. (The pure-XLA tap scan is not an env choice; request it
+    per call with ``impl='xla'``.)
+
+``REPRO_PLANCACHE_CONTENT``
+    Set to ``0`` to disable content-addressed PlanCache keys process-wide
+    (identity-only, the pre-PR-5 behavior; DESIGN.md §10). Read by
+    :class:`repro.core.plan.PlanCache` at construction; per-instance
+    override via ``PlanCache(content=...)``. Content-hit verification
+    (collision detection) is per-instance only: ``PlanCache(verify=True)``.
+
+``REPRO_BENCH_FAST``
+    Set to ``1`` for the reduced benchmark sweep (CI); read by
+    ``benchmarks/run.py``.
+
+``REPRO_PROPTEST_CASES``
+    Property-test cases per ``@forall`` test (default 25); read **once at
+    import** of ``tests/proptest.py`` — set it before pytest starts.
+
+In-process flags:
+
+``UNROLL_FOR_COST``
+    XLA's HLO cost analysis counts while-loop bodies ONCE regardless of
+    trip count (verified empirically — see EXPERIMENTS.md §Methodology),
+    which would silently undercount FLOPs/bytes/collectives of scanned
+    layer stacks and chunked attention by the trip count. The dry-run
+    therefore compiles small-depth *fully unrolled* cost variants (depth
+    1 and 2) with this flag on and extrapolates exactly; production
+    compiles keep scans rolled (compile time, memory). Use the
+    :func:`unroll_for_cost` context manager, never the list directly.
 """
 from __future__ import annotations
 
