@@ -15,7 +15,12 @@ on one small cloud + the per-device table-slice audit, subprocessed
 because XLA's device count is fixed at jax init) and ends with the
 cross-step cache gate (benchmarks/cache_model.run_smoke: tier byte model
 sanity + a two-step MinkUNet train loop over a re-allocated identical
-cloud asserting the map-search count stays flat, DESIGN.md §10).
+cloud asserting the map-search count stays flat, DESIGN.md §10), then
+the robustness gate (benchmarks/chaos.run_smoke: the same train loop
+under a deterministic fault schedule must end bit-identical to the
+clean run, overflow-adaptive replanning must recover a starved block
+table, guard overhead must stay within the 2 % clean-path budget, and
+the cloud sanitizer must catch every failure class — DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -33,8 +38,9 @@ def main() -> None:
                          "parity drift or audit regression")
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
-    from benchmarks import (cache_model, caching_energy, overall_comparison,
-                            rulebook_exec, search_speedup, sparsity_saving,
+    from benchmarks import (cache_model, caching_energy, chaos,
+                            overall_comparison, rulebook_exec,
+                            search_speedup, sparsity_saving,
                             weight_distribution)
 
     if args.smoke:
@@ -71,6 +77,14 @@ def main() -> None:
             print("cache_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("cache_smoke,0.0,OK", flush=True)
+        try:
+            for row in chaos.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("chaos_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("chaos_smoke,0.0,OK", flush=True)
         return
 
     suites = [
@@ -81,6 +95,7 @@ def main() -> None:
         ("fig10_overall", overall_comparison.run),
         ("rulebook_exec", rulebook_exec.run),
         ("cache_model", cache_model.run),
+        ("robustness", chaos.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -21,7 +21,13 @@
 # ever holds the full voxel table; and finally the cross-step cache gate
 # (cache_model.run_smoke): tier byte-model sanity plus a two-step
 # MinkUNet train loop over a re-allocated identical cloud asserting the
-# map-search count stays flat (DESIGN.md §10).
+# map-search count stays flat (DESIGN.md §10); and the robustness gate
+# (chaos.run_smoke): the same train loop under a deterministic fault
+# schedule hitting every injection site must finish bit-identical to
+# the clean run, a starved block table must recover via overflow-
+# adaptive replanning, guard overhead must stay within the 2 %
+# clean-path budget, and the cloud sanitizer must catch every failure
+# class (DESIGN.md §11).
 #
 # The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
 # benchmarks/README honest: internal anchors, referenced file paths, and
@@ -42,7 +48,7 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + octent search + cross-step cache smoke gates =="
+echo "== rulebook + octent search + cache + robustness smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

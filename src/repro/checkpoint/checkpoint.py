@@ -30,7 +30,13 @@ def _flatten(tree):
 
 def save(directory: str, step: int, tree, *, keep: int = 3,
          blocking: bool = True) -> threading.Thread | None:
-    """Write checkpoint ``step``; returns the writer thread if async."""
+    """Write checkpoint ``step``; returns the writer thread if async.
+
+    Raises before any file IO when a fault plan targets the
+    ``checkpoint`` site (runtime/fault.py) — the atomic-rename contract
+    keeps the previous checkpoint intact either way."""
+    from repro.runtime import fault  # deferred: fault imports this module
+    fault.check("checkpoint")
     leaves, treedef = _flatten(tree)
     host = [np.asarray(x) for x in leaves]          # device->host copy, sync
     manifest = {"step": step, "treedef": str(treedef),

@@ -318,11 +318,16 @@ class StridedMaps(NamedTuple):
     out_coords: jnp.ndarray   # (N_out_max, 3) int32
     out_batch: jnp.ndarray    # (N_out_max,) int32
     out_valid: jnp.ndarray    # (N_out_max,) bool
-    n_out: jnp.ndarray        # () int32
+    n_out: jnp.ndarray        # () int32 (clamped to the static budget)
     in_idx: jnp.ndarray       # (M,) int32
     out_idx: jnp.ndarray      # (M,) int32
     tap: jnp.ndarray          # (M,) int32 weight tap in [0, K^3)
     mvalid: jnp.ndarray       # (M,) bool
+    # candidate-space accounting (builders with a static output budget —
+    # Gconv3 — set these; budgetless builders leave the defaults):
+    n_true: jnp.ndarray | None = None    # () int32 true unique-output count
+    overflow: jnp.ndarray | None = None  # () bool: n_true > budget, i.e.
+                                         # outputs were truncated
 
 
 def _gather_rep(rep: jnp.ndarray, src: jnp.ndarray, fill=0):
@@ -383,11 +388,15 @@ def build_maps_gconv3(coords: jnp.ndarray, batch: jnp.ndarray,
     ok_flat = cand_ok.reshape(-1)
     m = ok_flat.shape[0]                                         # 8N candidates
     # Static output budget: downsampled outputs number <= inputs in real
-    # clouds, so callers cap the 8N candidate space (overflow truncates —
-    # the standard padded-shape contract; n_out reports the true count).
+    # clouds, so callers cap the 8N candidate space. Truncation is NOT
+    # silent: ``n_true`` reports the true unique-output count and
+    # ``overflow`` flags n_true > budget, which plan.gconv3_plan
+    # surfaces exactly like the octree block-table overflow (eager
+    # CapacityOverflow raise / ConvPlan.overflow under jit).
     budget = out_budget if out_budget is not None else m
     rep, n_out, rank = unique_pairs(hi, lo, ok_flat, budget,
                                     hi_bits=3 * grid_bits + batch_bits)
+    n_true = n_out.astype(jnp.int32)
     ok_flat = ok_flat & (rank < budget)
     out_coords, okv = _gather_rep(rep, out.reshape(-1, 3))
     out_batch, _ = _gather_rep(rep, ob.reshape(-1))
@@ -397,7 +406,8 @@ def build_maps_gconv3(coords: jnp.ndarray, batch: jnp.ndarray,
         in_idx=jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                                 (n, 8)).reshape(-1),
         out_idx=jnp.where(ok_flat, rank, 0).astype(jnp.int32),
-        tap=tap.reshape(-1).astype(jnp.int32), mvalid=ok_flat)
+        tap=tap.reshape(-1).astype(jnp.int32), mvalid=ok_flat,
+        n_true=n_true, overflow=n_true > budget)
 
 
 def transpose_maps(maps: StridedMaps, target_coords: jnp.ndarray,

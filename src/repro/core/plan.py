@@ -69,10 +69,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import mapsearch, morton, rulebook, sparsity
+from repro.core import mapsearch, morton, rulebook, sparsity, validate
 from repro.core.mapsearch import StridedMaps
 from repro.kernels.spconv_gemm import ops as sg_ops
-from repro.runtime import feature_cache, sharding
+from repro.runtime import fault, feature_cache, sharding
 
 
 def _octent_ops():
@@ -156,6 +156,10 @@ def array_fingerprint(a) -> tuple | None:
         else:
             flat = jnp.ravel(a).astype(jnp.int32)
         words = np.asarray(_fp_words(flat))
+    # chaos hook: the 'fingerprint' fault site corrupts the words to
+    # model a content-key collision (runtime/fault.py); a verifying
+    # cache detects the mismatch and rebuilds instead of serving stale
+    words = fault.mangle("fingerprint", words)
     return (tuple(a.shape), str(a.dtype),
             int(words[0]), int(words[1]), int(words[2]))
 
@@ -196,8 +200,11 @@ class ConvPlan(NamedTuple):
     out_batch: jnp.ndarray | None
     out_valid: jnp.ndarray | None
     maps: StridedMaps | None
-    overflow: jnp.ndarray | None = None  # () bool: block table overflowed
-                                         # (subm3 under jit; eager raises)
+    overflow: jnp.ndarray | None = None  # () bool: capacity overflowed —
+                                         # subm3 block table or gconv3
+                                         # candidate budget (set under jit;
+                                         # eager builds raise
+                                         # validate.CapacityOverflow)
 
     @property
     def residency(self) -> dict:
@@ -381,11 +388,40 @@ def _require_block_capacity(n_blocks, max_blocks: int):
     except jax.errors.ConcretizationTypeError:
         return overflow
     if concrete:
-        raise ValueError(
+        raise validate.CapacityOverflow(
+            "block_table",
             f"octree block table overflow: the scene occupies "
             f"{int(n_blocks)} 16^3 blocks but max_blocks={max_blocks}; "
             f"voxels in the dropped blocks would silently lose their maps "
-            f"— raise max_blocks (or coarsen the scene)")
+            f"— raise max_blocks (or coarsen the scene, or wrap the build "
+            f"in runtime/guard.with_replan)",
+            needed=int(n_blocks), capacity=max_blocks)
+    return overflow
+
+
+def _require_out_capacity(overflow_flag, n_true, budget: int):
+    """Surface Gconv3 candidate-space overflow (the mapsearch.py
+    truncation sibling of :func:`_require_block_capacity`): eagerly this
+    raises :class:`~repro.core.validate.CapacityOverflow`; under jit the
+    () bool flag is returned and carried on ``ConvPlan.overflow``."""
+    overflow = jnp.asarray(overflow_flag, bool)
+    try:
+        concrete = bool(overflow)
+    except jax.errors.ConcretizationTypeError:
+        return overflow
+    if concrete:
+        try:
+            needed = int(n_true)
+        except (TypeError, jax.errors.ConcretizationTypeError):
+            needed = None
+        raise validate.CapacityOverflow(
+            "candidates",
+            f"gconv3 candidate budget overflow: the cloud produces "
+            f"{needed if needed is not None else '> budget'} downsampled "
+            f"output sites but out_budget={budget}; the overflowing sites "
+            f"would silently lose their maps — raise out_budget (or wrap "
+            f"the build in runtime/guard.with_replan)",
+            needed=needed, capacity=budget)
     return overflow
 
 
@@ -433,6 +469,7 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
     store = cache.pinned if cache is not None else None
 
     def build(fp):
+        fault.check("plan")
         MAPSEARCH_CALLS[0] += 1
         oct_ops = _octent_ops()
         offs = jnp.asarray(morton.subm3_offsets())
@@ -494,6 +531,7 @@ def gconv2_plan(coords, batch, valid, *, grid_bits: int = 7,
     statics = ("gconv2", grid_bits, batch_bits, bm, bo)
 
     def build(fp):
+        fault.check("plan")
         MAPSEARCH_CALLS[0] += 1
         maps = mapsearch.build_maps_gconv2(coords, batch, valid,
                                            grid_bits=grid_bits,
@@ -523,16 +561,19 @@ def gconv3_plan(coords, batch, valid, *, grid_bits: int = 7,
     statics = ("gconv3", grid_bits, batch_bits, budget, bm, bo, with_tiles)
 
     def build(fp):
+        fault.check("plan")
         MAPSEARCH_CALLS[0] += 1
         maps = mapsearch.build_maps_gconv3(coords, batch, valid,
                                            grid_bits=grid_bits,
                                            batch_bits=batch_bits,
                                            out_budget=budget)
+        overflow = _require_out_capacity(maps.overflow, maps.n_true, budget)
         kmap = mapsearch.strided_to_kmap(maps, n_out=budget, n_taps=27)
         tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo) \
             if with_tiles else None
         return ConvPlan("gconv3", kmap, tiles, budget, 27,
-                        maps.out_coords, maps.out_batch, maps.out_valid, maps)
+                        maps.out_coords, maps.out_batch, maps.out_valid, maps,
+                        overflow)
 
     return _maybe_cached(cache, (coords, batch, valid), statics, build)
 

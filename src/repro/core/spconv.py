@@ -43,6 +43,33 @@ def mask_feats(st: SparseTensor) -> SparseTensor:
     return st.replace_feats(jnp.where(st.valid[:, None], st.feats, 0))
 
 
+def make_sparse_tensor(coords, batch, valid, feats, *, grid_bits: int = 7,
+                       batch_bits: int = 4,
+                       policy=None) -> tuple[SparseTensor, "object"]:
+    """Sanitizing SparseTensor constructor (DESIGN.md §11 ingress guard).
+
+    Runs :func:`repro.core.validate.sanitize_cloud` over the raw stream
+    — non-finite coordinates, out-of-grid voxels, duplicates, dtype
+    drift — under the active ``REPRO_GUARD_VALIDATE`` policy (or an
+    explicit ``policy``), then wraps the repaired stream. Repairs only
+    clear ``valid`` bits / cast dtypes; shapes never change, so the
+    tensor is drop-in for the jitted model step. Returns
+    ``(tensor, CloudReport)``; a clean cloud passes the original array
+    objects through (the PlanCache identity fast path still hits).
+    """
+    from repro.core import validate
+    from repro.runtime import guard
+    pol = policy if policy is not None else guard.validate_policy()
+    if pol is None:
+        return SparseTensor(coords=coords, batch=batch, valid=valid,
+                            feats=feats), None
+    coords, batch, valid, feats, report = validate.sanitize_cloud(
+        coords, batch, valid, feats, grid_bits=grid_bits,
+        batch_bits=batch_bits, policy=pol)
+    return SparseTensor(coords=coords, batch=batch, valid=valid,
+                        feats=feats), report
+
+
 # ---------------------------------------------------------------------------
 # Parameter init
 # ---------------------------------------------------------------------------
@@ -124,14 +151,30 @@ def gconv3(st: SparseTensor, params: dict, *, grid_bits: int = 7,
     stationary (§IV-D3); both dataflows are provided and agree bit-for-bit
     (tests) — the output-stationary one is the TPU perf path (pure gathers,
     gather-fused kernel).
+
+    A stride-2 window can touch more downsampled output sites than there
+    are inputs, so the default ``out_budget = st.n_max`` may overflow —
+    the build replans at escalated budget (runtime/guard.with_replan,
+    DESIGN.md §11; pre-PR-6 the overflowing sites were silently
+    truncated). The escalated budget is memoized per shape class, so a
+    loop pays the probe once. With ``REPRO_GUARD_REPLAN=0`` the
+    overflow raises instead.
     """
     if plan is None:
-        plan = planlib.gconv3_plan(st.coords, st.batch, st.valid,
-                                   grid_bits=grid_bits,
-                                   batch_bits=batch_bits,
-                                   out_budget=st.n_max, bm=bm, bo=bo,
-                                   with_tiles=dataflow != "input_stationary",
-                                   cache=cache)
+        from repro.runtime import guard
+
+        def build(budget):
+            return planlib.gconv3_plan(
+                st.coords, st.batch, st.valid, grid_bits=grid_bits,
+                batch_bits=batch_bits, out_budget=budget, bm=bm, bo=bo,
+                with_tiles=dataflow != "input_stationary", cache=cache)
+
+        if guard.replan_retries() > 0:
+            plan = guard.with_replan(
+                build, st.n_max,
+                key=("gconv3", st.n_max, grid_bits, batch_bits, dataflow))
+        else:
+            plan = build(st.n_max)
     m = plan.n_out
     if dataflow == "input_stationary":
         out = rulebook.apply_maps_scatter(st.feats, params["w"], plan.maps,

@@ -1,0 +1,312 @@
+"""Input validation: cloud sanitizer + structured failure taxonomy.
+
+SpOctA targets perception pipelines (robotics / AV / AR-VR) where a
+malformed frame must degrade gracefully, never crash the accelerator.
+This module is the ingestion boundary of the guarded runtime
+(DESIGN.md §11): every failure class a raw cloud can exhibit gets a
+name, a per-class policy, and an observable counter.
+
+Failure taxonomy (the ``CloudPolicy`` fields):
+
+  ``shape``       — coords not (N, 3), batch/valid/feats row counts
+                    disagreeing with N. Never repairable: the static-
+                    shape contract is structural, so this class always
+                    rejects.
+  ``dtype``       — non-integer coordinate / batch dtypes. ``repair``
+                    casts exactly-representable values and invalidates
+                    fractional rows; ``reject`` raises.
+  ``nonfinite``   — NaN/Inf in float coords or feats. ``repair`` clears
+                    the row's valid bit (and zeroes the offending feat
+                    entries); ``reject`` raises.
+  ``out_of_grid`` — coords outside ``[0, 16 << grid_bits)`` per axis or
+                    batch outside ``[0, 1 << batch_bits)``. ``repair``
+                    drops the row, ``clip`` clamps it into the grid,
+                    ``reject`` raises.
+  ``duplicate``   — two valid rows with the same (batch, x, y, z).
+                    ``repair`` dedups keep-first, ``reject`` raises.
+  ``empty``       — zero valid rows after the passes above. ``allow``
+                    passes it through (every layer is mask-correct on an
+                    empty cloud — tested), ``reject`` raises.
+
+Repairs never change array shapes: a bad row is *invalidated* (its
+``valid`` bit cleared), so the padded static-shape contract the whole
+stack is built on survives sanitization, and a clean cloud passes
+through returning the **original array objects** — the PlanCache
+identity fast path and the near-zero clean-path overhead gate
+(benchmarks/chaos.py) both depend on that.
+
+Capacity overflow (:class:`CapacityOverflow`) lives here too so both
+the plan layer (core/plan.py raises it) and the replan loop
+(runtime/guard.with_replan catches it) can import it without cycles.
+It subclasses ValueError for backward compatibility with callers
+matching the pre-guard overflow errors.
+
+The sanitizer is host-side (numpy) and eager by design: it runs at the
+data boundary, before arrays enter a trace. Tracers are passed through
+untouched (counted under ``validate.skipped_trace`` — validate eagerly
+at ingestion instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import morton
+
+#: taxonomy class names, in the order the passes run
+CLOUD_FAILURE_CLASSES = ("shape", "dtype", "nonfinite", "out_of_grid",
+                         "duplicate", "empty")
+
+
+class CloudValidationError(ValueError):
+    """A cloud violated its contract under a ``reject`` policy.
+
+    ``kind`` is the taxonomy class (one of
+    :data:`CLOUD_FAILURE_CLASSES`) so handlers can branch without
+    parsing the message.
+    """
+
+    def __init__(self, kind: str, msg: str):
+        super().__init__(f"[{kind}] {msg}")
+        self.kind = kind
+
+
+class CapacityOverflow(ValueError):
+    """A static capacity (octree block table / candidate budget) was
+    exceeded. ``kind`` is ``'block_table'`` or ``'candidates'``;
+    ``needed``/``capacity`` drive the geometric escalation in
+    runtime/guard.with_replan. Subclasses ValueError so pre-guard
+    callers matching ``ValueError`` on overflow keep working."""
+
+    def __init__(self, kind: str, msg: str, *, needed: int | None = None,
+                 capacity: int | None = None):
+        super().__init__(msg)
+        self.kind = kind
+        self.needed = needed
+        self.capacity = capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudPolicy:
+    """Per-failure-class policy. Values per field:
+
+    ``shape``: reject only. ``dtype``/``nonfinite``/``duplicate``:
+    ``repair`` | ``reject``. ``out_of_grid``: ``repair`` | ``clip`` |
+    ``reject``. ``empty``: ``allow`` | ``reject``.
+    """
+
+    shape: str = "reject"
+    dtype: str = "repair"
+    nonfinite: str = "repair"
+    out_of_grid: str = "repair"
+    duplicate: str = "repair"
+    empty: str = "allow"
+
+
+#: default: repair everything repairable, allow empty clouds
+REPAIR = CloudPolicy()
+#: strict: any violation raises (serving admission control)
+STRICT = CloudPolicy(dtype="reject", nonfinite="reject",
+                     out_of_grid="reject", duplicate="reject",
+                     empty="reject")
+
+
+class CloudReport(NamedTuple):
+    """Outcome of one sanitize pass.
+
+    ``counts`` maps taxonomy class -> affected row count (``empty`` is
+    0/1); ``changed`` is False iff the inputs were returned unmodified
+    (the clean fast path — original objects, zero copies).
+    """
+
+    counts: dict
+    n_rows: int
+    n_valid_in: int
+    n_valid_out: int
+    changed: bool
+
+    @property
+    def ok(self) -> bool:
+        return not self.changed and all(v == 0 for v in self.counts.values())
+
+
+def _note(kind: str, n: int) -> None:
+    if n:
+        from repro.runtime import guard  # deferred: guard imports validate
+        guard.health().note(f"validate.{kind}", n)
+
+
+def _is_tracer(a) -> bool:
+    import jax
+    return isinstance(a, jax.core.Tracer)
+
+
+def _pack_keys(coords: np.ndarray, batch: np.ndarray) -> np.ndarray:
+    """Collision-free int64 voxel key: batch | x | y | z at 16 bits each
+    (grid coords are < 16 << grid_bits <= 2^16 for every supported
+    grid_bits; out-of-grid rows were dropped/clipped before this runs)."""
+    c = coords.astype(np.int64)
+    return ((batch.astype(np.int64) << 48)
+            | (c[:, 0] << 32) | (c[:, 1] << 16) | c[:, 2])
+
+
+def sanitize_cloud(coords, batch, valid, feats=None, *, grid_bits: int = 7,
+                   batch_bits: int = 4, policy: CloudPolicy | None = None):
+    """Validate/repair one padded cloud against the taxonomy above.
+
+    Args:
+      coords, batch, valid: the padded coordinate stream (N, 3)/(N,)/(N,)
+        — numpy or (concrete) jax arrays.
+      feats: optional (N, C) float features, checked for non-finites.
+      grid_bits, batch_bits: the block-key budget the cloud will be
+        searched under (core/morton.py) — defines the valid ranges.
+      policy: per-class :class:`CloudPolicy` (default :data:`REPAIR`).
+
+    Returns:
+      ``(coords, batch, valid, feats, report)``. On a clean cloud the
+      first four are the *original objects*; on repair they are fresh
+      arrays of identical shape/dtype kind (jax inputs come back as jax
+      arrays). Raises :class:`CloudValidationError` on a ``reject``
+      policy hit.
+    """
+    policy = policy or REPAIR
+    if any(_is_tracer(a) for a in (coords, batch, valid, feats)
+           if a is not None):
+        _note("skipped_trace", 1)
+        counts = {k: 0 for k in CLOUD_FAILURE_CLASSES}
+        return coords, batch, valid, feats, CloudReport(
+            counts, coords.shape[0], -1, -1, False)
+
+    as_jax = not isinstance(coords, np.ndarray)
+    c = np.asarray(coords)
+    b = np.asarray(batch)
+    v = np.asarray(valid)
+    f = None if feats is None else np.asarray(feats)
+
+    counts = {k: 0 for k in CLOUD_FAILURE_CLASSES}
+
+    # -- shape (always reject) ---------------------------------------------
+    if c.ndim != 2 or c.shape[1] != 3:
+        raise CloudValidationError(
+            "shape", f"coords must be (N, 3), got {c.shape}")
+    n = c.shape[0]
+    if b.shape != (n,) or v.shape != (n,):
+        raise CloudValidationError(
+            "shape", f"batch/valid must be ({n},), got {b.shape}/{v.shape}")
+    if f is not None and (f.ndim != 2 or f.shape[0] != n):
+        raise CloudValidationError(
+            "shape", f"feats must be ({n}, C), got {f.shape}")
+
+    v_in = v.astype(bool)
+    v_out = v_in.copy()
+    c_out, b_out, f_out = c, b, f
+
+    # -- dtype + non-finite coords -----------------------------------------
+    if not np.issubdtype(c.dtype, np.integer):
+        if policy.dtype == "reject":
+            counts["dtype"] = int(v_out.sum())
+            _note("dtype", counts["dtype"])
+            raise CloudValidationError(
+                "dtype", f"coords dtype {c.dtype} is not integral")
+        fin = np.isfinite(c).all(axis=1)
+        bad_nf = v_out & ~fin
+        if bad_nf.any():
+            counts["nonfinite"] += int(bad_nf.sum())
+            if policy.nonfinite == "reject":
+                _note("nonfinite", counts["nonfinite"])
+                raise CloudValidationError(
+                    "nonfinite", f"{counts['nonfinite']} rows with "
+                    f"NaN/Inf coordinates")
+            v_out = v_out & ~bad_nf
+        safe = np.nan_to_num(np.asarray(c, np.float64),
+                             posinf=0.0, neginf=0.0)
+        frac = v_out & (safe != np.floor(safe)).any(axis=1)
+        if frac.any():
+            counts["dtype"] += int(frac.sum())
+            v_out = v_out & ~frac
+        c_out = np.where(v_out[:, None], np.floor(safe), 0).astype(np.int32)
+    if not np.issubdtype(b.dtype, np.integer):
+        if policy.dtype == "reject":
+            raise CloudValidationError(
+                "dtype", f"batch dtype {b.dtype} is not integral")
+        b_out = np.nan_to_num(np.asarray(b, np.float64)).astype(np.int32)
+        counts["dtype"] += 0 if np.array_equal(b_out, b) else int(v_out.sum())
+
+    # -- non-finite feats ---------------------------------------------------
+    if f is not None and np.issubdtype(f.dtype, np.floating):
+        fin_rows = np.isfinite(f).all(axis=1)
+        bad = v_out & ~fin_rows
+        if bad.any():
+            counts["nonfinite"] += int(bad.sum())
+            if policy.nonfinite == "reject":
+                _note("nonfinite", counts["nonfinite"])
+                raise CloudValidationError(
+                    "nonfinite", f"{int(bad.sum())} rows with NaN/Inf "
+                    f"features")
+            # keep the rows (geometry is fine) but scrub the poison so a
+            # masked matmul can never see it
+            f_out = np.where(np.isfinite(f), f, 0).astype(f.dtype)
+
+    # -- out-of-grid --------------------------------------------------------
+    limit = morton.BLOCK_SIZE << grid_bits
+    b_max = 1 << batch_bits
+    inb = (np.all((c_out >= 0) & (c_out < limit), axis=1)
+           & (b_out >= 0) & (b_out < b_max))
+    oob = v_out & ~inb
+    if oob.any():
+        counts["out_of_grid"] = int(oob.sum())
+        if policy.out_of_grid == "reject":
+            _note("out_of_grid", counts["out_of_grid"])
+            raise CloudValidationError(
+                "out_of_grid", f"{counts['out_of_grid']} rows outside the "
+                f"grid [0, {limit})^3 x batch [0, {b_max})")
+        if policy.out_of_grid == "clip":
+            c_out = np.where(oob[:, None],
+                             np.clip(c_out, 0, limit - 1), c_out)
+            b_out = np.where(oob, np.clip(b_out, 0, b_max - 1), b_out)
+        else:                                    # repair: drop the rows
+            v_out = v_out & ~oob
+
+    # -- duplicates (keep-first among valid rows) ---------------------------
+    idx = np.flatnonzero(v_out)
+    if idx.size:
+        keys = _pack_keys(np.clip(c_out[idx], 0, limit - 1), b_out[idx])
+        _, first = np.unique(keys, return_index=True)
+        dup = np.ones(idx.size, bool)
+        dup[first] = False
+        if dup.any():
+            counts["duplicate"] = int(dup.sum())
+            if policy.duplicate == "reject":
+                _note("duplicate", counts["duplicate"])
+                raise CloudValidationError(
+                    "duplicate", f"{counts['duplicate']} duplicate "
+                    f"(batch, coord) rows")
+            v_out[idx[dup]] = False
+
+    # -- empty --------------------------------------------------------------
+    if not v_out.any():
+        counts["empty"] = 1
+        if policy.empty == "reject":
+            _note("empty", 1)
+            raise CloudValidationError("empty", "no valid voxels remain")
+
+    changed = (not np.array_equal(v_out, v_in) or c_out is not c
+               or b_out is not b or f_out is not f)
+    for kind, cnt in counts.items():
+        _note(kind, cnt)
+    report = CloudReport(counts, n, int(v_in.sum()), int(v_out.sum()),
+                         changed)
+    if not changed:
+        return coords, batch, valid, feats, report
+
+    if as_jax:
+        import jax.numpy as jnp
+        coords = jnp.asarray(c_out)
+        batch = jnp.asarray(b_out)
+        valid = jnp.asarray(v_out)
+        feats = None if f_out is None else jnp.asarray(f_out)
+    else:
+        coords, batch, valid, feats = c_out, b_out, v_out, f_out
+    return coords, batch, valid, feats, report

@@ -100,6 +100,14 @@ def voxelize(points: np.ndarray, voxel_size, origin, max_voxels: int,
     """COO voxelization: returns (coords (V,3) int32, feats (V,4), labels)."""
     voxel_size = np.asarray(voxel_size, np.float32)
     origin = np.asarray(origin, np.float32)
+    finite = np.isfinite(points[:, :3]).all(axis=1)
+    if not finite.all():
+        # NaN/Inf points would floor-cast to garbage voxel coordinates;
+        # drop them here (counted) rather than poison the grid
+        from repro.runtime import guard
+        guard.health().note("voxelize.nonfinite_points",
+                            int((~finite).sum()))
+        points = points[finite]
     ijk = np.floor((points[:, :3] - origin) / voxel_size).astype(np.int64)
     ok = np.all((ijk >= 0) & (ijk <= grid_max), axis=1)
     ijk, pts = ijk[ok], points[ok]

@@ -182,8 +182,18 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
       the oracles; ``n_blocks`` the true occupied-block count for the
       caller's overflow check (> max_blocks means voxels would have been
       dropped — plan.subm3_plan raises eagerly / flags under jit).
+
+    Dispatch is guarded (runtime/guard.py, DESIGN.md §11): the resolved
+    impl is retried once on failure (an injected one-shot fault or a
+    flaky lowering recovers with the *same* impl — bit-identical
+    output), then quarantined per shape class and served by its
+    bit-exact fallback ('ref'). ``REPRO_GUARD_FALLBACK=0`` restores
+    raw first-error propagation.
     """
+    from repro.runtime import fault as _fault, guard as _guard
     impl = impl or search_impl()
+    if impl not in ("pallas", "interpret", "ref", "xla", "sharded"):
+        raise ValueError(f"unknown search impl {impl!r}")
     if offsets is None:
         offsets = jnp.asarray(morton.subm3_offsets())
     if table is not None and impl not in ("pallas", "interpret", "ref"):
@@ -192,39 +202,54 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
             f"QueryTable is only consumed by the table-backed impls "
             f"(pallas | interpret | ref)")
     if impl == "sharded":
+        # configuration errors (no usable mesh) must surface to the
+        # caller, not be served by the fallback chain
         from repro.kernels.octent import sharded
-        return sharded.build_kmap_sharded(
-            coords, batch, valid, max_blocks=max_blocks,
-            grid_bits=grid_bits, batch_bits=batch_bits, offsets=offsets,
-            binning_mode=binning_mode)
-    if impl == "xla":
-        table = mapsearch.build_block_table(
+        sharded.require_blockkey_mesh()
+
+    def _run(one: str):
+        _fault.check("search")
+        if one == "sharded":
+            from repro.kernels.octent import sharded
+            return sharded.build_kmap_sharded(
+                coords, batch, valid, max_blocks=max_blocks,
+                grid_bits=grid_bits, batch_bits=batch_bits, offsets=offsets,
+                binning_mode=binning_mode)
+        if one == "xla":
+            bt = mapsearch.build_block_table(
+                coords, batch, valid, max_blocks=max_blocks,
+                grid_bits=grid_bits, batch_bits=batch_bits,
+                binning_mode=binning_mode)
+            q = coords[:, None, :] + offsets[None, :, :]
+            qb = jnp.broadcast_to(batch[:, None], q.shape[:2])
+            qv = jnp.broadcast_to(valid[:, None], q.shape[:2])
+            kmap = mapsearch.query_block_table(bt, q, qb, qv,
+                                               grid_bits=grid_bits,
+                                               batch_bits=batch_bits)
+            return kmap, bt.n_blocks.astype(jnp.int32)
+        # a table prebuilt for the primary is reusable by any table-backed
+        # fallback — it depends only on geometry, not the query impl
+        qt = table if table is not None else build_query_table(
             coords, batch, valid, max_blocks=max_blocks,
             grid_bits=grid_bits, batch_bits=batch_bits,
             binning_mode=binning_mode)
-        q = coords[:, None, :] + offsets[None, :, :]
-        qb = jnp.broadcast_to(batch[:, None], q.shape[:2])
-        qv = jnp.broadcast_to(valid[:, None], q.shape[:2])
-        kmap = mapsearch.query_block_table(table, q, qb, qv,
-                                           grid_bits=grid_bits,
-                                           batch_bits=batch_bits)
-        return kmap, table.n_blocks.astype(jnp.int32)
-    qt = table if table is not None else build_query_table(
-        coords, batch, valid, max_blocks=max_blocks,
-        grid_bits=grid_bits, batch_bits=batch_bits,
-        binning_mode=binning_mode)
-    if impl == "ref":
-        kmap = octent_query_ref(coords, batch, valid, offsets, qt.ublocks,
-                                qt.tkey, qt.tval, qt.n_blocks,
-                                grid_bits=grid_bits, batch_bits=batch_bits)
-    elif impl in ("pallas", "interpret"):
-        n = coords.shape[0]
-        qpack = _pack_queries(coords, batch, valid, bq=bq)
-        out = octent_query(qpack, offsets.astype(jnp.int32), qt.ublocks,
-                           qt.tkey, qt.tval, qt.n_blocks,
-                           grid_bits=grid_bits, batch_bits=batch_bits,
-                           bq=bq, interpret=impl == "interpret")
-        kmap = out[:, :n].T
-    else:
-        raise ValueError(f"unknown search impl {impl!r}")
-    return kmap, qt.n_blocks
+        if one == "ref":
+            kmap = octent_query_ref(coords, batch, valid, offsets,
+                                    qt.ublocks, qt.tkey, qt.tval,
+                                    qt.n_blocks, grid_bits=grid_bits,
+                                    batch_bits=batch_bits)
+        else:
+            n = coords.shape[0]
+            qpack = _pack_queries(coords, batch, valid, bq=bq)
+            out = octent_query(qpack, offsets.astype(jnp.int32), qt.ublocks,
+                               qt.tkey, qt.tval, qt.n_blocks,
+                               grid_bits=grid_bits, batch_bits=batch_bits,
+                               bq=bq, interpret=one == "interpret")
+            kmap = out[:, :n].T
+        return kmap, qt.n_blocks
+
+    chain = _guard.FALLBACK_CHAINS["search"].get(impl, ())
+    return _guard.dispatch(
+        "search", impl, chain, _run,
+        key=(coords.shape[0], offsets.shape[0], max_blocks,
+             grid_bits, batch_bits))

@@ -255,6 +255,15 @@ def octent_query_sharded(coords: jnp.ndarray, batch: jnp.ndarray,
     return out, nb
 
 
+def require_blockkey_mesh(mesh=None, axes: tuple | None = None):
+    """Validate that a usable mesh exists, raising the configuration
+    ValueError otherwise. Called *eagerly* by ops.build_kmap before the
+    guarded dispatch (DESIGN.md §11): a missing/axis-less mesh is a
+    configuration error, not an execution failure — it must surface to
+    the caller instead of being silently served by the fallback chain."""
+    return _resolve_mesh(mesh, axes)
+
+
 def build_kmap_sharded(coords: jnp.ndarray, batch: jnp.ndarray,
                        valid: jnp.ndarray, *, max_blocks: int,
                        grid_bits: int = 7, batch_bits: int = 4,

@@ -377,28 +377,41 @@ def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
     from the DESIGN.md §6 VMEM budget unless given. Differentiable under
     every impl (the Pallas paths carry a custom VJP that re-derives the
     gradient through the XLA oracle math).
+
+    Dispatch is guarded (runtime/guard.py, DESIGN.md §11): the resolved
+    impl is retried once (a transient/injected fault recovers with the
+    same impl), then quarantined per shape class and served by the XLA
+    oracle 'ref'. ``REPRO_GUARD_FALLBACK=0`` disables the chain.
     """
+    from repro.runtime import fault as _fault, guard as _guard
     impl = impl or kernel_impl()
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown kernel impl {impl!r}")
     bm, bo = tiles.bm, tiles.bo
     tile_nz = tiles.tile_nz if row_nz is None else tile_liveness(tiles, row_nz)
     c_out = weights.shape[-1]
     w = _pad_cout(weights, bn)
-    if impl in ("pallas", "interpret"):
-        c_out_pad = w.shape[-1]
-        if bk is None:
-            bk = pick_bk(feats.shape[1], bm=bm, bn=bn, bo=bo, c_out=c_out_pad)
-        n_out_pad = -(-n_out // bo) * bo
-        cfg = (n_out, n_out_pad, bm, bn, bo, bk, impl == "interpret")
-        out = _exec_fused(cfg, feats, w, tiles.gather_idx, tiles.tile_tap,
-                          tile_nz, tiles.scatter_idx, tiles.tile_ob,
-                          tiles.tile_first, tiles.tile_run, tiles.grp_skip,
-                          tiles.grp_contig)
-    elif impl == "ref":
-        out = _exec_ref_math(feats, w, tiles.gather_idx, tiles.tile_tap,
-                             tile_nz, tiles.scatter_idx, n_out=n_out,
-                             bm=bm, bn=bn)
-    else:
-        raise ValueError(f"unknown kernel impl {impl!r}")
+
+    def _run(one: str):
+        _fault.check("gemm")
+        if one in ("pallas", "interpret"):
+            c_out_pad = w.shape[-1]
+            bk_ = bk if bk is not None else pick_bk(
+                feats.shape[1], bm=bm, bn=bn, bo=bo, c_out=c_out_pad)
+            n_out_pad = -(-n_out // bo) * bo
+            cfg = (n_out, n_out_pad, bm, bn, bo, bk_, one == "interpret")
+            return _exec_fused(cfg, feats, w, tiles.gather_idx,
+                               tiles.tile_tap, tile_nz, tiles.scatter_idx,
+                               tiles.tile_ob, tiles.tile_first,
+                               tiles.tile_run, tiles.grp_skip,
+                               tiles.grp_contig)
+        return _exec_ref_math(feats, w, tiles.gather_idx, tiles.tile_tap,
+                              tile_nz, tiles.scatter_idx, n_out=n_out,
+                              bm=bm, bn=bn)
+
+    chain = _guard.FALLBACK_CHAINS["gemm"].get(impl, ())
+    out = _guard.dispatch("gemm", impl, chain, _run,
+                          key=(tuple(feats.shape), w.shape[-1], bm, bo))
     out = out[:, :c_out]
     if bias is not None:
         out = out + bias

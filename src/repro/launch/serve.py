@@ -22,7 +22,17 @@ from repro.models import api
 
 def generate(model: api.Model, params, batch: dict, *, max_context: int,
              n_steps: int, greedy: bool = True, key=None):
-    """Prefill then decode n_steps tokens. Returns (tokens (B, n), stats)."""
+    """Prefill then decode n_steps tokens. Returns (tokens (B, n), stats).
+
+    Non-finite logits (a poisoned KV cache, an overflowed activation)
+    are guarded per sequence (DESIGN.md §11): a sequence whose logits go
+    NaN/Inf stops decoding — its last good token is frozen for the
+    remaining steps — instead of emitting argmax-of-NaN garbage or
+    crashing the whole batch. Stops are counted in
+    ``stats['nonfinite_stops']`` and the process-wide health bag
+    (``serve.nonfinite_stops``). The alive mask stays on device; the
+    loop pays one host sync at the end, not per step.
+    """
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_context))
     decode = jax.jit(model.decode_step)
 
@@ -31,23 +41,33 @@ def generate(model: api.Model, params, batch: dict, *, max_context: int,
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    alive = jnp.isfinite(logits).all(-1)                   # (B,)
+    tok = jnp.argmax(jnp.nan_to_num(logits), -1)[:, None].astype(jnp.int32)
     out = [tok]
     t0 = time.time()
     for i in range(n_steps - 1):
         logits, cache = decode(params, cache, tok)
+        step_ok = jnp.isfinite(logits[:, -1]).all(-1)      # (B,)
+        alive = alive & step_ok
         if greedy:
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            nxt = jnp.argmax(jnp.nan_to_num(logits[:, -1]),
+                             -1)[:, None].astype(jnp.int32)
         else:
             key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1])[:, None].astype(jnp.int32)
+            nxt = jax.random.categorical(
+                sub, jnp.nan_to_num(logits[:, -1]))[:, None].astype(jnp.int32)
+        tok = jnp.where(alive[:, None], nxt, tok)          # freeze dead seqs
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
+    stops = int((~alive).sum())
+    if stops:
+        from repro.runtime import guard
+        guard.health().note("serve.nonfinite_stops", stops)
     return jnp.concatenate(out, axis=1), {
         "prefill_s": t_prefill,
-        "decode_s_per_tok": t_decode / max(n_steps - 1, 1)}
+        "decode_s_per_tok": t_decode / max(n_steps - 1, 1),
+        "nonfinite_stops": stops}
 
 
 def main() -> None:

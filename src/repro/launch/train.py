@@ -100,7 +100,11 @@ def make_spconv_step(cfg, opt_cfg, plans, *, impl: str | None = None):
 
 def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
                     impl: str | None = "ref", seed: int = 0, cache=None,
-                    scene: str = "indoor", replay: bool = True) -> dict:
+                    scene: str = "indoor", replay: bool = True,
+                    faults=None, ckpt_dir: str | None = None,
+                    max_blocks: int | None = None, validate=None,
+                    verify_cache: bool = False,
+                    max_retries_per_step: int = 2) -> dict:
     """Train MinkUNet for ``steps`` steps with cross-step plan caching.
 
     Every step re-voxelizes the scene into **freshly allocated** arrays
@@ -117,14 +121,33 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
     real backend per host (``REPRO_KERNEL_IMPL`` / the fused Pallas
     kernel on TPU — the CLI's ``--impl auto`` does exactly that).
 
+    This loop is also the end-to-end face of the hardened runtime
+    (DESIGN.md §11): every cloud passes through the ingress sanitizer
+    (``validate``: a CloudPolicy, or None for the REPRO_GUARD_VALIDATE
+    default), plan builds are overflow-adaptive (``max_blocks`` below
+    the scene's block count triggers escalated replans instead of a
+    raise), and the whole loop runs under a checkpoint/restart
+    :class:`~repro.runtime.fault.TrainRunner` with a zero skip budget —
+    so an injected :class:`~repro.runtime.fault.FaultPlan` (``faults``)
+    must be survived by retry/fallback/replay alone, leaving the final
+    state **bit-identical** to the fault-free run. ``state_digest`` in
+    the result is what benchmarks/chaos.py compares.
+
     Returns a result dict consumed by the CI gates
-    (benchmarks/cache_model.py, tests/test_cache_content.py):
-    ``losses``, ``mapsearch_calls``, ``searches_per_cloud`` (the expected
-    flat count), ``compiled_steps``, and the cache's :meth:`stats`.
+    (benchmarks/cache_model.py, benchmarks/chaos.py,
+    tests/test_cache_content.py, tests/test_robustness.py): ``losses``,
+    ``mapsearch_calls``, ``searches_per_cloud`` (the expected flat
+    count), ``compiled_steps``, the cache's :meth:`stats`, plus
+    ``state_digest``, ``recoveries`` / ``skipped_batches`` /
+    ``ckpt_failures`` and the run's health-counter ``health`` delta.
     """
-    from repro.core import plan as planlib
+    import hashlib
+    import tempfile
+
+    from repro.core import plan as planlib, spconv
     from repro.data import pointcloud
     from repro.models import minkunet
+    from repro.runtime import fault as faultlib, guard
 
     cfg = cfg or minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
                                          classes=4, blocks=1)
@@ -132,8 +155,10 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
     opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=max(steps, 2),
                                 warmup_steps=1)
     state = (params, adamw.init(params))
-    cache = cache if cache is not None else planlib.PlanCache()
+    cache = cache if cache is not None \
+        else planlib.PlanCache(verify=verify_cache)
     planlib.reset_mapsearch_counter()
+    h0 = guard.health().snapshot()
 
     def cloud_at(step: int) -> dict:
         rng = np.random.default_rng(seed if replay else seed + step)
@@ -142,6 +167,14 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
         b = {k: jax.numpy.asarray(np.array(v))      # always fresh buffers
              for k, v in vb._asdict().items()}
         b["labels"] = jax.numpy.clip(b["labels"], 0, cfg.classes - 1)
+        # ingress guard: sanitize the cloud before it reaches the plan
+        # layer (a clean cloud passes the original buffers through)
+        st, _ = spconv.make_sparse_tensor(
+            b["coords"], b["batch"], b["valid"], b["feats"],
+            grid_bits=cfg.grid_bits, batch_bits=cfg.batch_bits,
+            policy=validate)
+        b.update(coords=st.coords, batch=st.batch, valid=st.valid,
+                 feats=st.feats)
         return b
 
     from collections import OrderedDict
@@ -150,12 +183,12 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
     # executable. Bounded FIFO — a non-replaying stream would otherwise
     # pin one MinkPlans + XLA executable per step forever.
     step_fns: OrderedDict = OrderedDict()
-    compiled = 0
-    losses = []
-    for step in range(steps):
-        batch = cloud_at(step)
+    compiled = [0]
+
+    def runner_step(state, batch):
         plans = minkunet.build_plans(batch["coords"], batch["batch"],
-                                     batch["valid"], cfg, cache=cache)
+                                     batch["valid"], cfg, cache=cache,
+                                     n_max=max_blocks)
         key = tuple(id(p) for part in plans for p in part)
         fn = step_fns.get(key)
         if fn is None:
@@ -163,16 +196,36 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
             while len(step_fns) >= 8:
                 step_fns.popitem(last=False)
             step_fns[key] = fn
-            compiled += 1
-        state, metrics = fn(state, batch)
-        losses.append(float(metrics["loss"]))
+            compiled[0] += 1
+        return fn(state, batch)
+
+    # zero skip budget: a skipped batch changes the final state by
+    # construction, and the chaos gate demands bit-identical recovery
+    runner = TrainRunner(
+        RunnerConfig(
+            ckpt_dir=ckpt_dir or tempfile.mkdtemp(prefix="spconv-ckpt-"),
+            ckpt_every=1, keep=2,
+            max_retries_per_step=max_retries_per_step,
+            max_skipped_batches=0),
+        runner_step, cloud_at, state)
+    with faultlib.inject(faults):
+        losses = runner.run(steps)
+
+    digest = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(runner.state):
+        digest.update(np.asarray(leaf).tobytes())
     return {
         "steps": steps,
         "losses": losses,
         "mapsearch_calls": planlib.mapsearch_call_count(),
         "searches_per_cloud": 2 * len(cfg.enc) + 1,
-        "compiled_steps": compiled,
+        "compiled_steps": compiled[0],
         "cache": cache.stats(),
+        "state_digest": digest.hexdigest(),
+        "recoveries": runner.recoveries,
+        "skipped_batches": runner.skipped_batches,
+        "ckpt_failures": runner.ckpt_failures,
+        "health": guard.health().delta(h0),
     }
 
 
@@ -205,7 +258,9 @@ def main() -> None:
               f"map_searches={res['mapsearch_calls']} "
               f"(flat={'yes' if flat else 'NO'}) "
               f"compiled_steps={res['compiled_steps']} "
-              f"content_hits={res['cache']['content_hits']}")
+              f"content_hits={res['cache']['content_hits']} "
+              f"recoveries={res['recoveries']} "
+              f"digest={res['state_digest'][:12]}")
         return
 
     cfg = get_config(args.arch)

@@ -98,7 +98,8 @@ class MinkPlans(NamedTuple):
 
 def build_plans(coords, batch, valid, cfg: MinkUNetConfig, *,
                 cache: planlib.PlanCache | None = None,
-                n_max: int | None = None) -> MinkPlans:
+                n_max: int | None = None,
+                replan: bool | None = None) -> MinkPlans:
     """Build (or fetch) the full plan set for one coordinate set.
 
     Pure geometry — no features, no parameters — so it can run eagerly
@@ -108,18 +109,34 @@ def build_plans(coords, batch, valid, cfg: MinkUNetConfig, *,
     objects and performs **zero** map searches; a fresh cloud pays
     ``len(enc)`` Gconv2 searches + ``len(enc) + 1`` Subm3 searches
     (Tconv2 reuses the Gconv2 maps and never searches, §IV-D2).
+
+    ``replan`` wraps every Subm3 build in
+    :func:`repro.runtime.guard.with_replan`: a scene occupying more
+    16^3 blocks than ``n_max`` rebuilds at geometrically escalated
+    ``max_blocks`` instead of raising (DESIGN.md §11). None resolves
+    from ``REPRO_GUARD_REPLAN`` (on unless 0). Escalated capacities are
+    memoized per shape class, so a replaying training loop stays flat
+    on map-search count from step 2 on.
     """
     assert len(cfg.dec) <= len(cfg.enc), "decoder deeper than encoder"
+    from repro.runtime import guard
+    if replan is None:
+        replan = guard.replan_retries() > 0
     if cache is None:
         cache = planlib.PlanCache()
     n_max = coords.shape[0] if n_max is None else n_max
     gb, bb = cfg.grid_bits, cfg.batch_bits
 
     def subm(c, b, v):
-        return planlib.subm3_plan(c, b, v, max_blocks=n_max,
-                                  method=cfg.map_method, grid_bits=gb,
-                                  batch_bits=bb, bm=cfg.bm, bo=cfg.bo,
-                                  cache=cache)
+        def build(mb):
+            return planlib.subm3_plan(c, b, v, max_blocks=mb,
+                                      method=cfg.map_method, grid_bits=gb,
+                                      batch_bits=bb, bm=cfg.bm, bo=cfg.bo,
+                                      cache=cache)
+        if not replan:
+            return build(n_max)
+        return guard.with_replan(build, n_max,
+                                 key=("minkunet-subm3", c.shape[0], gb, bb))
 
     cur = (coords, batch, valid)
     subms, downs, stack = [subm(*cur)], [], [cur]

@@ -1,31 +1,172 @@
-"""Fault-tolerant training runner.
+"""Deterministic fault injection + fault-tolerant training runner.
 
-Production posture (DESIGN.md §4): synchronous data-parallel training where
-any node failure surfaces as a failed/hung step. Recovery is always
-checkpoint-restart:
+Production posture (DESIGN.md §4, §11): synchronous data-parallel
+training where any node failure surfaces as a failed/hung step. Recovery
+is always checkpoint-restart:
 
   * every step is guarded; exceptions and non-finite losses trip recovery;
   * recovery reloads the newest intact checkpoint (atomic-rename write means
     there always is one) and rewinds the data cursor — the token pipeline is
     a pure function of step, so the replayed stream is bit-identical;
-  * repeated failures at the same step escalate (skip-batch then abort) —
-    the classic poison-batch escape hatch;
+  * repeated failures at the same step escalate: after
+    ``max_retries_per_step`` the batch is **skipped** (counted, up to
+    ``max_skipped_batches``), then the run **aborts** — the classic
+    poison-batch escape ladder;
+  * a failed checkpoint write is retried once and otherwise tolerated
+    (counted): the atomic-rename contract keeps the previous checkpoint
+    intact, so training continues on a slightly older recovery point;
   * straggler mitigation on real clusters = backup workers + collective
     timeouts; on a single-process CPU container we implement the
     *checkpoint/rewind* machinery for real and expose the watchdog timeout
     as a configuration hook (documented, unit-tested via injected failures).
+
+Fault injection (the chaos side of DESIGN.md §11): a :class:`FaultPlan`
+deterministically fires :class:`InjectedFault` at named sites —
+
+  ``search``       kernels/octent/ops.build_kmap (per-impl closure)
+  ``gemm``         kernels/spconv_gemm/ops.apply_tiles (per-impl closure)
+  ``plan``         core/plan.py plan builders (inside build())
+  ``fingerprint``  core/plan.array_fingerprint (words corrupted, not
+                   raised — models a content-key collision; a verifying
+                   cache detects and rebuilds)
+  ``checkpoint``   checkpoint.save (before any file IO)
+
+by per-site call index (``schedule``) or by seeded hash rate (``rate``).
+Faults are one-shot per call index, so the guard layer's retry-same-impl
+recovers them with bit-identical results — the property the chaos gate
+(benchmarks/chaos.py) asserts end-to-end on the MinkUNet train demo.
+Activate with ``inject(plan)`` (context manager) or install()/uninstall().
+Sites inside jitted code fire at trace time only (compiled steps replay
+from cache); the demo's fault sites are all on the eager plan/ckpt path
+or traced once per compile, which is exactly when they can fire.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import math
+import zlib
 from typing import Any, Callable
+
+import numpy as np
 
 from repro.checkpoint import checkpoint
 
 log = logging.getLogger("repro.fault")
 
+#: every named injection site
+FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "checkpoint")
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (never raised in production)."""
+
+    def __init__(self, site: str, index: int):
+        super().__init__(f"injected fault at site={site!r} call={index}")
+        self.site = site
+        self.index = index
+
+
+def _hash01(seed: int, site: str, idx: int) -> float:
+    h = zlib.crc32(f"{seed}/{site}/{idx}".encode())
+    return h / 2 ** 32
+
+
+class FaultPlan:
+    """Deterministic schedule of faults by (site, call index).
+
+    Args:
+      schedule: site -> iterable of call indices that fail (the n-th
+        ``check(site)`` since installation). Exact and reproducible.
+      rate: additionally fail each call with this probability, decided
+        by a seeded hash of (seed, site, index) — deterministic across
+        processes, no RNG state.
+      seed: the hash seed for ``rate`` mode.
+      sites: restrict ``rate`` to these sites (default: scheduled sites
+        if a schedule was given, else every site).
+
+    ``fired`` records site -> list of indices that actually fired;
+    ``calls`` the per-site call counts — both for gate assertions.
+    """
+
+    def __init__(self, schedule: dict | None = None, *, seed: int = 0,
+                 rate: float = 0.0, sites=None):
+        self.schedule = {k: frozenset(v) for k, v in (schedule or {}).items()}
+        self.seed = seed
+        self.rate = rate
+        self.sites = tuple(sites) if sites is not None else \
+            (tuple(self.schedule) or FAULT_SITES)
+        self.calls: dict[str, int] = {}
+        self.fired: dict[str, list] = {}
+
+    def fires(self, site: str) -> bool:
+        idx = self.calls.get(site, 0)
+        self.calls[site] = idx + 1
+        hit = idx in self.schedule.get(site, frozenset())
+        if not hit and self.rate > 0 and site in self.sites:
+            hit = _hash01(self.seed, site, idx) < self.rate
+        if hit:
+            self.fired.setdefault(site, []).append(idx)
+        return hit
+
+
+_ACTIVE: list = [None]
+
+
+def active() -> FaultPlan | None:
+    return _ACTIVE[0]
+
+
+def install(plan: FaultPlan | None) -> None:
+    _ACTIVE[0] = plan
+
+
+def uninstall() -> None:
+    _ACTIVE[0] = None
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan | None):
+    """Activate ``plan`` for the with-block (None is a no-op)."""
+    prev = _ACTIVE[0]
+    _ACTIVE[0] = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE[0] = prev
+
+
+def check(site: str) -> None:
+    """Raise :class:`InjectedFault` iff the active plan fires here."""
+    plan = _ACTIVE[0]
+    if plan is not None and plan.fires(site):
+        idx = plan.fired[site][-1]
+        _note_fault(site)
+        log.warning("injecting fault at site=%r call=%d", site, idx)
+        raise InjectedFault(site, idx)
+
+
+def mangle(site: str, words):
+    """Corrupt ``words`` (same shape/dtype) iff the plan fires here —
+    the non-raising injection used for the fingerprint-collision site."""
+    plan = _ACTIVE[0]
+    if plan is not None and plan.fires(site):
+        _note_fault(site)
+        log.warning("mangling value at site=%r call=%d", site,
+                    plan.fired[site][-1])
+        return np.zeros_like(np.asarray(words))
+    return words
+
+
+def _note_fault(site: str) -> None:
+    from repro.runtime import guard
+    guard.health().note(f"fault.{site}")
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant training runner
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class RunnerConfig:
@@ -33,11 +174,21 @@ class RunnerConfig:
     ckpt_every: int = 50
     keep: int = 3
     max_retries_per_step: int = 2
+    #: poison batches skipped (after retries exhaust) before aborting
+    max_skipped_batches: int = 1
     async_save: bool = False
 
 
 class TrainRunner:
-    """Drives train_step with checkpoint/restart fault tolerance."""
+    """Drives train_step with checkpoint/restart fault tolerance.
+
+    Escalation ladder per step (DESIGN.md §11): retry from the latest
+    checkpoint up to ``max_retries_per_step`` times; then skip the batch
+    (``skipped_batches`` counts, budget ``max_skipped_batches``); then
+    abort with RuntimeError. Set ``max_skipped_batches=0`` when
+    bit-identical replay matters more than liveness (the chaos gate
+    does) — a skipped batch changes the final state by construction.
+    """
 
     def __init__(self, cfg: RunnerConfig, train_step: Callable,
                  batch_at: Callable[[int], Any], state: Any):
@@ -48,15 +199,31 @@ class TrainRunner:
         self.step = 0
         self.failures: dict[int, int] = {}
         self.recoveries = 0
+        self.skipped_batches = 0
+        self.ckpt_failures = 0
+        self._skip: set[int] = set()
         self._pending_save = None
 
     # -- checkpoint plumbing -------------------------------------------------
     def save(self, blocking: bool = True):
         if self._pending_save is not None:
             self._pending_save.join()
-        self._pending_save = checkpoint.save(
-            self.cfg.ckpt_dir, self.step, self.state, keep=self.cfg.keep,
-            blocking=blocking and not self.cfg.async_save)
+            self._pending_save = None
+        for attempt in (0, 1):
+            try:
+                self._pending_save = checkpoint.save(
+                    self.cfg.ckpt_dir, self.step, self.state,
+                    keep=self.cfg.keep,
+                    blocking=blocking and not self.cfg.async_save)
+                return
+            except Exception as e:               # noqa: BLE001
+                self.ckpt_failures += 1
+                self._note("runner.ckpt_failure")
+                log.warning(
+                    "checkpoint save at step %d failed (%s); %s", self.step,
+                    e, "retrying" if attempt == 0 else
+                    "continuing on the previous checkpoint (atomic rename "
+                    "keeps it intact)")
 
     def restore_latest(self) -> bool:
         last = checkpoint.latest_step(self.cfg.ckpt_dir)
@@ -66,6 +233,11 @@ class TrainRunner:
         self.step = last
         return True
 
+    @staticmethod
+    def _note(name: str) -> None:
+        from repro.runtime import guard
+        guard.health().note(name)
+
     # -- the loop -------------------------------------------------------------
     def run(self, n_steps: int, *, fail_hook: Callable[[int], None] | None = None):
         """Run to ``self.step == n_steps``. ``fail_hook(step)`` may raise to
@@ -74,6 +246,15 @@ class TrainRunner:
         history = []
         while self.step < n_steps:
             step = self.step
+            if step in self._skip:
+                self._skip.discard(step)
+                self.skipped_batches += 1
+                self._note("runner.skipped_batch")
+                log.warning("skipping poison batch at step %d "
+                            "(%d/%d skips used)", step, self.skipped_batches,
+                            self.cfg.max_skipped_batches)
+                self.step = step + 1
+                continue
             try:
                 if fail_hook is not None:
                     fail_hook(step)
@@ -85,10 +266,22 @@ class TrainRunner:
             except Exception as e:                     # noqa: BLE001
                 self.failures[step] = self.failures.get(step, 0) + 1
                 self.recoveries += 1
+                self._note("runner.recovery")
                 log.warning("step %d failed (%s); recovering", step, e)
                 if self.failures[step] > self.cfg.max_retries_per_step:
-                    raise RuntimeError(
-                        f"step {step} failed {self.failures[step]} times") from e
+                    budget = self.cfg.max_skipped_batches
+                    if self.skipped_batches + len(self._skip) < budget:
+                        # replay from the checkpoint, then skip the poison
+                        # step when the rewound loop reaches it again
+                        self._skip.add(step)
+                        log.warning("step %d exhausted %d retries; will "
+                                    "skip its batch", step,
+                                    self.failures[step])
+                    else:
+                        raise RuntimeError(
+                            f"step {step} failed {self.failures[step]} times "
+                            f"and the skip budget ({budget}) is exhausted"
+                        ) from e
                 if not self.restore_latest():
                     raise
                 continue

@@ -220,6 +220,8 @@ class PinnedStore:
             if ok is not True:
                 if ok is False:
                     self.collisions += 1
+                    from repro.runtime import guard
+                    guard.health().note("pinned.collision")
                 del self._entries[key]   # collision or unverifiable
                 self.misses += 1         # (no/donated anchor): rebuild
                 return None

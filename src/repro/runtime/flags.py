@@ -29,6 +29,36 @@ the others bind at construction or import as noted):
     override via ``PlanCache(content=...)``. Content-hit verification
     (collision detection) is per-instance only: ``PlanCache(verify=True)``.
 
+``REPRO_GUARD_VALIDATE``
+    Ingress cloud-sanitizer policy (DESIGN.md §11) — ``repair``
+    (default) | ``strict`` | ``off``. Re-read per call by
+    :func:`repro.runtime.guard.validate_policy`: ``repair`` invalidates
+    /clips/dedups bad rows in place (shapes never change), ``strict``
+    raises :class:`repro.core.validate.CloudValidationError` on the
+    first defect, ``off`` skips sanitation entirely. Consumed by
+    :func:`repro.core.spconv.make_sparse_tensor` and the train demo's
+    ingress path.
+
+``REPRO_GUARD_REPLAN``
+    Max overflow-adaptive replan escalations (default ``6``; ``0``
+    disables — overflows raise). Re-read per call by
+    :func:`repro.runtime.guard.replan_retries`; consumed by
+    :func:`repro.runtime.guard.with_replan` and (via its default)
+    :func:`repro.models.minkunet.build_plans`.
+
+``REPRO_GUARD_FALLBACK``
+    Set to ``0`` to disable the backend fallback chain — kernel/search
+    dispatch errors then propagate on first failure instead of
+    retry → quarantine → serve-the-``ref``-oracle. Re-read per call by
+    :func:`repro.runtime.guard.fallback_enabled`; consumed by
+    :func:`repro.runtime.guard.dispatch` (wrapping
+    ``octent.ops.build_kmap`` and ``spconv_gemm.ops.apply_tiles``).
+
+``REPRO_GUARD_COOLDOWN``
+    Calls a quarantined (site, impl, shape-class) sits out before being
+    retried (default ``32``). Re-read per call by
+    :func:`repro.runtime.guard.fallback_cooldown`.
+
 ``REPRO_BENCH_FAST``
     Set to ``1`` for the reduced benchmark sweep (CI); read by
     ``benchmarks/run.py``.

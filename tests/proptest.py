@@ -89,3 +89,35 @@ def random_cloud(rng: np.random.Generator, n: int, extent: int, batch: int = 1,
         valid[i] = True
         i += 1
     return coords, bidx, valid
+
+
+#: the degenerate-cloud taxonomy exercised by tests/test_robustness.py
+DEGENERATE_KINDS = ("empty", "single", "all_duplicate", "all_out_of_grid",
+                    "nan_coords")
+
+
+def degenerate_cloud(kind: str, rng: np.random.Generator | None = None,
+                     n: int = 16, extent: int = 8):
+    """A pathological voxel cloud of the named ``kind``.
+
+    Returns ``(coords, batch, valid)`` with the usual padded layout —
+    ``nan_coords`` returns float32 coords (the sanitizer's repair path
+    floor-casts them back to int32); every other kind returns int32.
+    """
+    rng = rng or np.random.default_rng(0)
+    if kind == "empty":
+        return (np.zeros((n, 3), np.int32), np.zeros((n,), np.int32),
+                np.zeros((n,), bool))
+    if kind == "single":
+        return random_cloud(rng, n, extent, n_valid=1)
+    coords, bidx, valid = random_cloud(rng, n, extent)
+    if kind == "all_duplicate":
+        coords[:] = coords[0]
+    elif kind == "all_out_of_grid":
+        coords += 10_000_000
+    elif kind == "nan_coords":
+        coords = coords.astype(np.float32)
+        coords[::2] = np.nan
+    else:
+        raise ValueError(f"unknown degenerate kind {kind!r}")
+    return coords, bidx, valid

@@ -95,7 +95,7 @@ def test_checkpoint_no_partial_state_visible(tmp_path):
 # Fault-tolerant runner
 # ---------------------------------------------------------------------------
 
-def _toy_problem(tmp_path, ckpt_every=5):
+def _toy_problem(tmp_path, ckpt_every=5, **rc_kw):
     cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
                             total_steps=100)
 
@@ -111,7 +111,7 @@ def _toy_problem(tmp_path, ckpt_every=5):
     state = (params, adamw.init(params))
     batch_at = lambda step: jnp.ones(3) * (1 + 0.01 * step)  # noqa: E731
     rc = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
-                      max_retries_per_step=3)
+                      max_retries_per_step=3, **rc_kw)
     return TrainRunner(rc, train_step, batch_at, state)
 
 
@@ -158,13 +158,14 @@ def test_runner_resume_is_deterministic(tmp_path):
 
 
 def test_runner_escalates_on_poison_step(tmp_path):
-    runner = _toy_problem(tmp_path)
+    # skip budget 0: exhausted retries must abort, not skip the batch
+    runner = _toy_problem(tmp_path, max_skipped_batches=0)
 
     def always_fail(step):
         if step == 3:
             raise RuntimeError("poison batch")
 
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError, match="skip budget"):
         runner.run(10, fail_hook=always_fail)
 
 
