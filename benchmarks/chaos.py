@@ -21,7 +21,7 @@ The hardened-runtime acceptance suite (DESIGN.md §11), persisted to
     (the ISSUE's ≤ 2 % budget); plus the clean-cloud sanitizer's
     absolute cost (it returns the original array objects untouched).
   * **sanitizer sweep** — one cloud per failure class (NaN coords,
-    out-of-grid, duplicates, empty) through
+    out-of-grid, duplicates, oversize, empty) through
     :func:`repro.core.validate.sanitize_cloud`, asserting each class is
     detected, counted, and repaired without a shape change.
 
@@ -172,6 +172,12 @@ def _validate_record() -> dict:
                                    "n_valid_out": rep.n_valid_out,
                                    "shape_kept": v.shape == valid.shape}
 
+    _, _, v, _, rep = validate.sanitize_cloud(coords, batch, valid,
+                                              max_valid=n - 16)
+    cases["oversize"] = {"counts": rep.counts,
+                         "n_valid_out": rep.n_valid_out,
+                         "shape_kept": v.shape == valid.shape}
+
     _, _, v, _, rep = validate.sanitize_cloud(coords, batch,
                                               np.zeros((n,), bool))
     cases["empty"] = {"counts": rep.counts, "n_valid_out": rep.n_valid_out,
@@ -188,7 +194,7 @@ def _assert_records(recs: dict) -> None:
         raise AssertionError(
             f"chaos gate: fault-injected run diverged from the clean run "
             f"({chaos['chaos_digest'][:12]} != {chaos['clean_digest'][:12]})")
-    missing = [s for s in fault.FAULT_SITES if s not in chaos["fired"]]
+    missing = [s for s in fault.TRAIN_FAULT_SITES if s not in chaos["fired"]]
     if missing:
         raise AssertionError(f"chaos gate: sites never fired: {missing}")
 
@@ -211,6 +217,9 @@ def _assert_records(recs: dict) -> None:
         raise AssertionError("sanitizer missed out-of-grid rows")
     if val["all_duplicate_head"]["counts"]["duplicate"] != 3:
         raise AssertionError("sanitizer missed duplicate rows")
+    if val["oversize"]["counts"]["oversize"] != 16 or \
+            val["oversize"]["n_valid_out"] != 48:
+        raise AssertionError("sanitizer missed the oversize truncation")
     if val["empty"]["counts"]["empty"] != 1:
         raise AssertionError("sanitizer missed the empty cloud")
     if val["clean"]["changed"]:

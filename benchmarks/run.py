@@ -20,7 +20,14 @@ the robustness gate (benchmarks/chaos.run_smoke: the same train loop
 under a deterministic fault schedule must end bit-identical to the
 clean run, overflow-adaptive replanning must recover a starved block
 table, guard overhead must stay within the 2 % clean-path budget, and
-the cloud sanitizer must catch every failure class — DESIGN.md §11).
+the cloud sanitizer must catch every failure class — DESIGN.md §11),
+and finally the serving gate (benchmarks/serve_replay.run_smoke: the
+adversarial request replay through the continuous-batching engine with
+faults at every serving site must keep every clean request bit-identical
+to the fault-free replay, isolate the victim request only, account every
+shed/rejected/isolated/degraded outcome exactly in RuntimeHealth, and
+hold the compiled-executable count to the padding-bucket count —
+DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -40,7 +47,7 @@ def main() -> None:
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
     from benchmarks import (cache_model, caching_energy, chaos,
                             overall_comparison, rulebook_exec,
-                            search_speedup, sparsity_saving,
+                            search_speedup, serve_replay, sparsity_saving,
                             weight_distribution)
 
     if args.smoke:
@@ -85,6 +92,14 @@ def main() -> None:
             print("chaos_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("chaos_smoke,0.0,OK", flush=True)
+        try:
+            for row in serve_replay.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("serve_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("serve_smoke,0.0,OK", flush=True)
         return
 
     suites = [
@@ -96,6 +111,7 @@ def main() -> None:
         ("rulebook_exec", rulebook_exec.run),
         ("cache_model", cache_model.run),
         ("robustness", chaos.run),
+        ("serving", serve_replay.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,363 @@
+"""Serving gates: adversarial replay through the continuous-batching engine.
+
+The serving acceptance suite (DESIGN.md §12), persisted to
+``BENCH_serve.json``:
+
+  * **replay gate** — one deterministic request mix (distinct geometries
+    with fresh-allocation repeats across two padding buckets, a
+    NaN-coords cloud, an oversize cloud, two already-expired deadlines,
+    and one designated victim) is replayed twice through
+    :class:`repro.launch.spconv_serve.ServeEngine`: once fault-free,
+    once under a :class:`~repro.runtime.fault.FaultPlan` firing at
+    **every** serving site (search, gemm, plan, fingerprint, admit,
+    batch). Gates: every clean request completes in *both* replays with
+    **bit-identical** logits digests; the victim (persistent admit
+    fault) is isolated in the faulted replay without touching a
+    batchmate; shed/rejected/isolated/degraded counts in the engine's
+    result ledger equal the ``serve.*``/``admit.*`` RuntimeHealth
+    deltas exactly; p99 latency stays inside the deadline; the clean
+    replay performs exactly ``5 x distinct_geometries`` map searches
+    (content-addressed dedup of repeats); and each replay compiles
+    exactly one executable per padding bucket touched — never one per
+    request geometry.
+  * **admission gate** — queue-level unit scenario with an injected
+    clock: bounded-queue backpressure (``queue_full``), deadline
+    shedding at dequeue, strict-policy ``invalid``/``oversize``
+    rejections, and bucket quantization determinism (byte-identical
+    padded buffers for byte-identical raw clouds).
+
+Like benchmarks/chaos.py, records are persisted *before* the assertions
+run, so a regression still lands in ``BENCH_serve.json``. Wired into
+``benchmarks/run.py --smoke`` (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import json
+import logging
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import plan as planlib
+from repro.runtime import admission, fault, guard
+
+OUT_JSON = "BENCH_serve.json"
+
+#: per-request deadline for the replay (generous: CI hosts pay the
+#: per-bucket first-call compiles inside the measured latency)
+DEADLINE_S = 600.0
+
+#: the two padding buckets the replay exercises
+BUCKETS = (96, 192)
+
+#: geometry sizes, alternating buckets (<=96 and <=192)
+GEOM_SIZES = (64, 150, 80, 170)
+
+
+def _cloud(seed: int, n: int, ext: int = 24):
+    """Deterministic fully-valid cloud: n distinct voxels in ext^3."""
+    rng = np.random.default_rng(seed)
+    lin = rng.choice(ext ** 3, size=n, replace=False)
+    coords = np.stack([lin % ext, (lin // ext) % ext, lin // ext ** 2],
+                      -1).astype(np.int32)
+    batch = np.zeros((n,), np.int32)
+    valid = np.ones((n,), bool)
+    feats = rng.standard_normal((n, 4)).astype(np.float32)
+    return coords, batch, valid, feats
+
+
+def _request_mix(n_geoms: int, repeats: int):
+    """The deterministic adversarial submission list.
+
+    Returns ``(subs, clean_rids, victim_rid)`` where ``subs`` is an
+    ordered list of ``(rid, cloud, deadline_s)``. Repeats are *fresh*
+    allocations of byte-identical content — the PlanCache dedup case.
+    """
+    subs, clean_rids = [], []
+    for r in range(repeats):
+        for g in range(n_geoms):
+            rid = f"clean-g{g}-r{r}"
+            c, b, v, f = _cloud(100 + g, GEOM_SIZES[g % len(GEOM_SIZES)])
+            subs.append((rid, (c.copy(), b.copy(), v.copy(), f.copy()),
+                         DEADLINE_S))
+            clean_rids.append(rid)
+    cf, b, v, f = _cloud(200, 64)
+    cf = cf.astype(np.float32)
+    cf[:3] = np.nan                                   # strict: invalid
+    subs.append(("bad-nan", (cf, b, v, f), DEADLINE_S))
+    subs.append(("bad-oversize", _cloud(201, 250), DEADLINE_S))
+    subs.append(("late-0", _cloud(202, 60), -1.0))    # expired on arrival
+    subs.append(("late-1", _cloud(203, 60), -1.0))
+    victim = ("victim", _cloud(300, 70), DEADLINE_S)
+    subs.append(victim)
+    return subs, clean_rids, "victim"
+
+
+def _fault_schedule(n_submissions_before_victim: int) -> dict:
+    """One fault at every serving site.
+
+    ``admit`` carries a transient at index 0 (the first submission
+    retries and admits normally) plus a persistent double-fault aimed at
+    the victim: the transient consumed one extra check, so the victim's
+    two attempts land at indices ``n_before + 1`` and ``n_before + 2``.
+    """
+    v = n_submissions_before_victim + 1
+    return {"search": [1], "gemm": [0], "plan": [2], "fingerprint": [1],
+            "admit": [0, v, v + 1], "batch": [0]}
+
+
+def _replay(subs, plan: fault.FaultPlan | None) -> dict:
+    """One full engine lifecycle over the submission list."""
+    import jax
+    from repro.launch import spconv_serve
+    from repro.models import minkunet
+
+    guard.reset_health()
+    planlib.reset_mapsearch_counter()
+    h0 = guard.health().snapshot()
+
+    cfg = minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
+                                  classes=4, blocks=1)
+    params = minkunet.init_model(cfg, jax.random.key(0))
+    queue = admission.AdmissionQueue(capacity=64, buckets=BUCKETS,
+                                     grid_bits=cfg.grid_bits,
+                                     batch_bits=cfg.batch_bits)
+    engine = spconv_serve.ServeEngine(params, cfg, impl="ref", queue=queue,
+                                      max_batch=8, verify_cache=True)
+    with fault.inject(plan):
+        for rid, (c, b, v, f), dl in subs:
+            engine.submit(rid, c, b, v, f, deadline_s=dl)
+        engine.drain()
+
+    stats = engine.stats()
+    outcomes = {r.rid: {"status": r.status, "reason": r.reason,
+                        "digest": r.digest, "latency_s": r.latency_s,
+                        "degraded": r.degraded}
+                for r in engine.results}
+    return {
+        "stats": {k: v for k, v in stats.items() if k != "cache"},
+        "cache": stats["cache"],
+        "outcomes": outcomes,
+        "mapsearch_calls": planlib.mapsearch_call_count(),
+        "health": guard.health().delta(h0),
+        "fired": {k: list(v) for k, v in plan.fired.items()} if plan else {},
+    }
+
+
+def _replay_record(n_geoms: int, repeats: int) -> dict:
+    subs, clean_rids, victim = _request_mix(n_geoms, repeats)
+    schedule = _fault_schedule(len(subs) - 1)
+    clean = _replay(subs, None)
+    faulted = _replay(subs, fault.FaultPlan(schedule=schedule))
+    both = [rid for rid in clean_rids
+            if clean["outcomes"].get(rid, {}).get("status") == "completed"
+            and faulted["outcomes"].get(rid, {}).get("status") == "completed"]
+    return {
+        "gate": "serve_replay",
+        "buckets": list(BUCKETS),
+        "deadline_s": DEADLINE_S,
+        "n_geoms": n_geoms, "repeats": repeats,
+        "clean_rids": clean_rids, "victim": victim,
+        "schedule": {k: list(v) for k, v in schedule.items()},
+        "clean": clean, "faulted": faulted,
+        "completed_in_both": both,
+        "bit_identical": all(
+            clean["outcomes"][rid]["digest"]
+            == faulted["outcomes"][rid]["digest"] for rid in both),
+    }
+
+
+def _accounting_ok(rep: dict) -> list[str]:
+    """Result-ledger vs RuntimeHealth cross-check; returns mismatches."""
+    bad = []
+    s, h = rep["stats"], rep["health"]
+    for status, counter in (("completed", "serve.completed"),
+                            ("shed", "serve.shed"),
+                            ("rejected", "serve.rejected"),
+                            ("isolated", "serve.isolated"),
+                            ("degraded", "serve.degraded")):
+        if s[status] != h.get(counter, 0):
+            bad.append(f"{status}={s[status]} != {counter}="
+                       f"{h.get(counter, 0)}")
+    admitted = sum(1 for o in rep["outcomes"].values()
+                   if o["status"] in ("completed",)) \
+        + sum(1 for o in rep["outcomes"].values()
+              if o["status"] == "shed" and o["reason"] != "queue_full")
+    if h.get("admit.ok", 0) != admitted:
+        bad.append(f"admit.ok={h.get('admit.ok', 0)} != {admitted} "
+                   f"(completed + post-admission sheds)")
+    return bad
+
+
+def _assert_replay(rec: dict) -> None:
+    clean, faulted = rec["clean"], rec["faulted"]
+    # every clean request completes in BOTH replays, bit-identically
+    missing = [rid for rid in rec["clean_rids"]
+               if rid not in rec["completed_in_both"]]
+    if missing:
+        raise AssertionError(
+            f"serve gate: clean requests not completed in both replays: "
+            f"{missing}")
+    if not rec["bit_identical"]:
+        diff = [rid for rid in rec["completed_in_both"]
+                if clean["outcomes"][rid]["digest"]
+                != faulted["outcomes"][rid]["digest"]]
+        raise AssertionError(
+            f"serve gate: cross-request contamination — digests diverged "
+            f"under faults for {diff}")
+    # the victim is isolated under faults, served cleanly without them
+    v = rec["victim"]
+    if clean["outcomes"][v]["status"] != "completed":
+        raise AssertionError("serve gate: victim failed the clean replay")
+    fv = faulted["outcomes"][v]
+    if fv["status"] != "isolated" or fv["reason"] != admission.ISOLATED_FAULT:
+        raise AssertionError(
+            f"serve gate: victim not isolated under the persistent admit "
+            f"fault (got {fv})")
+    # every serving fault site actually fired
+    missing_sites = [s for s in fault.SERVE_FAULT_SITES
+                     if s not in faulted["fired"]]
+    if missing_sites:
+        raise AssertionError(
+            f"serve gate: fault sites never fired: {missing_sites}")
+    # exact accounting in both replays
+    for name, rep in (("clean", clean), ("faulted", faulted)):
+        bad = _accounting_ok(rep)
+        if bad:
+            raise AssertionError(
+                f"serve gate: {name} replay ledger/health mismatch: {bad}")
+    # typed expectations per special request
+    for rep in (clean, faulted):
+        if rep["outcomes"]["bad-nan"]["reason"] != admission.REJECT_INVALID:
+            raise AssertionError("serve gate: NaN cloud not reject.invalid")
+        if rep["outcomes"]["bad-oversize"]["reason"] \
+                != admission.REJECT_OVERSIZE:
+            raise AssertionError("serve gate: oversize not reject.oversize")
+        for rid in ("late-0", "late-1"):
+            if rep["outcomes"][rid]["reason"] != admission.SHED_DEADLINE:
+                raise AssertionError(f"serve gate: {rid} not deadline-shed")
+    # one executable per bucket class touched — never per geometry
+    for name, rep in (("clean", clean), ("faulted", faulted)):
+        if rep["stats"]["compiled"] > len(rec["buckets"]):
+            raise AssertionError(
+                f"serve gate: {name} replay compiled "
+                f"{rep['stats']['compiled']} executables for "
+                f"{len(rec['buckets'])} buckets")
+    # content-addressed dedup: repeats search zero extra times
+    expected = 5 * (rec["n_geoms"] + 1)        # +1: the victim's geometry
+    if clean["mapsearch_calls"] != expected:
+        raise AssertionError(
+            f"serve gate: clean replay performed "
+            f"{clean['mapsearch_calls']} map searches, expected {expected} "
+            f"(5 per distinct geometry)")
+    # p99 within deadline
+    for name, rep in (("clean", clean), ("faulted", faulted)):
+        p99 = rep["stats"]["latency_p99_s"]
+        if p99 is None or p99 > rec["deadline_s"]:
+            raise AssertionError(
+                f"serve gate: {name} replay p99 {p99}s breaches the "
+                f"{rec['deadline_s']}s deadline")
+
+
+def _admission_record() -> dict:
+    """Queue-level scenario with an injected clock (no model execution)."""
+    now = [0.0]
+    q = admission.AdmissionQueue(capacity=2, buckets=(96, 192),
+                                 clock=lambda: now[0])
+    c, b, v, f = _cloud(0, 64)
+    cases = {}
+    r0 = q.submit("a", c, b, v, f, deadline_s=10.0)
+    cases["admitted"] = {"ok": isinstance(r0, admission.Request),
+                         "bucket": getattr(r0, "bucket", None),
+                         "n_valid": getattr(r0, "n_valid", None)}
+    q.submit("b", c, b, v, f, deadline_s=0.5)
+    r2 = q.submit("c", c, b, v, f)
+    cases["queue_full"] = {"reason": getattr(r2, "reason", None),
+                           "shed": getattr(r2, "shed", None)}
+    # byte-identical raw clouds quantize to byte-identical buffers
+    q1 = admission.quantize_to_bucket(c, b, v, f, 96)
+    q2 = admission.quantize_to_bucket(c.copy(), b.copy(), v.copy(),
+                                      f.copy(), 96)
+    cases["quantize_deterministic"] = {
+        "equal": all(np.array_equal(x, y) for x, y in zip(q1, q2)),
+        "padded_shape": list(q1[0].shape)}
+    now[0] = 1.0                                   # 'b' is now hopeless
+    got, shed = q.take(8)
+    cases["deadline_shed"] = {"taken": [r.rid for r in got],
+                              "shed": [(r.rid, r.reason) for r in shed]}
+    cf = c.astype(np.float32)
+    cf[0] = np.inf
+    r = q.submit("bad", cf, b, v, f)
+    cases["invalid"] = {"reason": getattr(r, "reason", None)}
+    co, bo_, vo, fo = _cloud(1, 250)
+    r = q.submit("big", co, bo_, vo, fo)
+    cases["oversize"] = {"reason": getattr(r, "reason", None),
+                         "kind": getattr(r, "kind", None)}
+    return {"gate": "admission", "cases": cases}
+
+
+def _assert_admission(rec: dict) -> None:
+    c = rec["cases"]
+    if not c["admitted"]["ok"] or c["admitted"]["bucket"] != 96:
+        raise AssertionError("admission gate: clean submit not admitted "
+                             "into the 96 bucket")
+    if c["queue_full"]["reason"] != admission.SHED_QUEUE_FULL:
+        raise AssertionError("admission gate: no backpressure at capacity")
+    if not c["quantize_deterministic"]["equal"]:
+        raise AssertionError("admission gate: quantization not "
+                             "content-deterministic")
+    if c["deadline_shed"]["taken"] != ["a"] or \
+            c["deadline_shed"]["shed"] != [("b", admission.SHED_DEADLINE)]:
+        raise AssertionError("admission gate: deadline shedding wrong")
+    if c["invalid"]["reason"] != admission.REJECT_INVALID:
+        raise AssertionError("admission gate: nonfinite cloud admitted")
+    if c["oversize"]["reason"] != admission.REJECT_OVERSIZE:
+        raise AssertionError("admission gate: oversize cloud admitted")
+
+
+def run(full: bool = True, smoke: bool = False) -> list[str]:
+    logging.getLogger("repro.guard").setLevel(logging.ERROR)
+    logging.getLogger("repro.fault").setLevel(logging.ERROR)
+    n_geoms, repeats = (3, 2) if smoke else (4, 3)
+    recs = {
+        "replay": _replay_record(n_geoms, repeats),
+        "admission": _admission_record(),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(list(recs.values()), f, indent=2)
+    _assert_replay(recs["replay"])            # after persisting: a failing
+    _assert_admission(recs["admission"])      # gate is still rendered
+    rep = recs["replay"]
+    fs, cs = rep["faulted"]["stats"], rep["clean"]["stats"]
+    rows = [
+        csv_row("serve/replay", 1e6 * (cs["latency_p50_s"] or 0),
+                f"bit_identical={rep['bit_identical']};"
+                f"completed={fs['completed']};shed={fs['shed']};"
+                f"rejected={fs['rejected']};isolated={fs['isolated']};"
+                f"degraded={fs['degraded']};compiled={fs['compiled']};"
+                f"p99_s={fs['latency_p99_s']:.2f}"),
+        csv_row("serve/searches", 0.0,
+                f"clean={rep['clean']['mapsearch_calls']};"
+                f"expected={5 * (rep['n_geoms'] + 1)};"
+                f"content_hits={rep['clean']['cache']['content_hits']}"),
+        csv_row("serve/admission", 0.0,
+                f"cases={len(recs['admission']['cases'])}"),
+    ]
+    return rows
+
+
+def run_smoke() -> list[str]:
+    """CI gate: the full adversarial replay on the reduced request mix.
+
+    Raises on: any clean request failing either replay or diverging
+    bit-wise under faults, the victim not being isolated, a serving
+    fault site never firing, ledger/health accounting drift, executable
+    count exceeding the bucket-class count, a non-flat clean search
+    count, or p99 breaching the deadline.
+    """
+    return run(smoke=True)
+
+
+if __name__ == "__main__":
+    for row in run(full=False):
+        print(row)

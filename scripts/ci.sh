@@ -27,7 +27,14 @@
 # the clean run, a starved block table must recover via overflow-
 # adaptive replanning, guard overhead must stay within the 2 %
 # clean-path budget, and the cloud sanitizer must catch every failure
-# class (DESIGN.md §11).
+# class (DESIGN.md §11); and the serving gate (serve_replay.run_smoke,
+# deterministic adversarial replay through the continuous-batching
+# engine with faults at every serving site incl. admit/batch): zero
+# cross-request contamination — every clean request's logits digest
+# bit-identical to the fault-free replay, only the victim isolated —
+# exact shed/rejected/isolated/degraded accounting against
+# RuntimeHealth, bounded shedding (only the expired-deadline requests),
+# and one compiled executable per padding bucket (DESIGN.md §12).
 #
 # The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
 # benchmarks/README honest: internal anchors, referenced file paths, and
@@ -48,7 +55,7 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + octent search + cache + robustness smoke gates =="
+echo "== rulebook + search + cache + robustness + serving smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

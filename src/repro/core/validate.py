@@ -24,6 +24,12 @@ Failure taxonomy (the ``CloudPolicy`` fields):
                     ``reject`` raises.
   ``duplicate``   — two valid rows with the same (batch, x, y, z).
                     ``repair`` dedups keep-first, ``reject`` raises.
+  ``oversize``    — more valid rows than the caller's voxel budget
+                    (``max_valid``, e.g. the largest serving padding
+                    bucket — runtime/admission.py). ``repair`` truncates
+                    keep-first (valid bits beyond the budget clear, in
+                    row order), ``reject`` raises. Checked only when a
+                    budget is passed.
   ``empty``       — zero valid rows after the passes above. ``allow``
                     passes it through (every layer is mask-correct on an
                     empty cloud — tested), ``reject`` raises.
@@ -57,7 +63,7 @@ from repro.core import morton
 
 #: taxonomy class names, in the order the passes run
 CLOUD_FAILURE_CLASSES = ("shape", "dtype", "nonfinite", "out_of_grid",
-                         "duplicate", "empty")
+                         "duplicate", "oversize", "empty")
 
 
 class CloudValidationError(ValueError):
@@ -92,9 +98,9 @@ class CapacityOverflow(ValueError):
 class CloudPolicy:
     """Per-failure-class policy. Values per field:
 
-    ``shape``: reject only. ``dtype``/``nonfinite``/``duplicate``:
-    ``repair`` | ``reject``. ``out_of_grid``: ``repair`` | ``clip`` |
-    ``reject``. ``empty``: ``allow`` | ``reject``.
+    ``shape``: reject only. ``dtype``/``nonfinite``/``duplicate``/
+    ``oversize``: ``repair`` | ``reject``. ``out_of_grid``: ``repair`` |
+    ``clip`` | ``reject``. ``empty``: ``allow`` | ``reject``.
     """
 
     shape: str = "reject"
@@ -102,6 +108,7 @@ class CloudPolicy:
     nonfinite: str = "repair"
     out_of_grid: str = "repair"
     duplicate: str = "repair"
+    oversize: str = "repair"
     empty: str = "allow"
 
 
@@ -110,7 +117,7 @@ REPAIR = CloudPolicy()
 #: strict: any violation raises (serving admission control)
 STRICT = CloudPolicy(dtype="reject", nonfinite="reject",
                      out_of_grid="reject", duplicate="reject",
-                     empty="reject")
+                     oversize="reject", empty="reject")
 
 
 class CloudReport(NamedTuple):
@@ -153,7 +160,8 @@ def _pack_keys(coords: np.ndarray, batch: np.ndarray) -> np.ndarray:
 
 
 def sanitize_cloud(coords, batch, valid, feats=None, *, grid_bits: int = 7,
-                   batch_bits: int = 4, policy: CloudPolicy | None = None):
+                   batch_bits: int = 4, policy: CloudPolicy | None = None,
+                   max_valid: int | None = None):
     """Validate/repair one padded cloud against the taxonomy above.
 
     Args:
@@ -163,6 +171,9 @@ def sanitize_cloud(coords, batch, valid, feats=None, *, grid_bits: int = 7,
       grid_bits, batch_bits: the block-key budget the cloud will be
         searched under (core/morton.py) — defines the valid ranges.
       policy: per-class :class:`CloudPolicy` (default :data:`REPAIR`).
+      max_valid: optional voxel budget — more surviving valid rows than
+        this is the ``oversize`` class (truncate-keep-first under
+        ``repair``, raise under ``reject``). None skips the check.
 
     Returns:
       ``(coords, batch, valid, feats, report)``. On a clean cloud the
@@ -284,6 +295,18 @@ def sanitize_cloud(coords, batch, valid, feats=None, *, grid_bits: int = 7,
                     "duplicate", f"{counts['duplicate']} duplicate "
                     f"(batch, coord) rows")
             v_out[idx[dup]] = False
+
+    # -- oversize (keep-first truncation to the caller's budget) ------------
+    if max_valid is not None:
+        live = np.flatnonzero(v_out)
+        if live.size > max_valid:
+            counts["oversize"] = int(live.size - max_valid)
+            if policy.oversize == "reject":
+                _note("oversize", counts["oversize"])
+                raise CloudValidationError(
+                    "oversize", f"{live.size} valid voxels exceed the "
+                    f"budget of {max_valid}")
+            v_out[live[max_valid:]] = False
 
     # -- empty --------------------------------------------------------------
     if not v_out.any():

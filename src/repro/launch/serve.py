@@ -32,7 +32,13 @@ def generate(model: api.Model, params, batch: dict, *, max_context: int,
     ``stats['nonfinite_stops']`` and the process-wide health bag
     (``serve.nonfinite_stops``). The alive mask stays on device; the
     loop pays one host sync at the end, not per step.
+
+    ``key`` is only consumed when ``greedy=False``; passing None there
+    derives a fixed default key instead of crashing in
+    ``jax.random.split`` on the first sampled step.
     """
+    if not greedy and key is None:
+        key = jax.random.key(0)
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_context))
     decode = jax.jit(model.decode_step)
 

@@ -30,6 +30,7 @@ from repro.configs import get_config
 from repro.data.tokens import FrameStream, TokenStream
 from repro.models import api
 from repro.optim import adamw
+from repro.runtime import guard
 from repro.runtime.fault import RunnerConfig, TrainRunner
 
 
@@ -246,6 +247,9 @@ def main() -> None:
                     help="rulebook-execution backend for --arch minkunet: "
                          "auto (REPRO_KERNEL_IMPL / fused kernel on TPU) | "
                          "pallas | interpret | ref | xla")
+    ap.add_argument("--health-json", default=None,
+                    help="write the RuntimeHealth snapshot as structured "
+                         "JSON to this path after the run")
     args = ap.parse_args()
 
     if args.arch == "minkunet":
@@ -261,6 +265,11 @@ def main() -> None:
               f"content_hits={res['cache']['content_hits']} "
               f"recoveries={res['recoveries']} "
               f"digest={res['state_digest'][:12]}")
+        if args.health_json:
+            guard.dump_health_json(args.health_json,
+                                   meta={"arch": "minkunet",
+                                         "steps": res["steps"],
+                                         "digest": res["state_digest"]})
         return
 
     cfg = get_config(args.arch)
@@ -285,6 +294,9 @@ def main() -> None:
     print(f"arch={cfg.name} steps={len(losses)} "
           f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "
           f"({dt / max(len(losses), 1):.3f}s/step)")
+    if args.health_json:
+        guard.dump_health_json(args.health_json,
+                               meta={"arch": cfg.name, "steps": len(losses)})
 
 
 if __name__ == "__main__":

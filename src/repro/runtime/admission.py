@@ -1,0 +1,326 @@
+"""Serving admission control: bounded queue, padding buckets, shedding.
+
+The ingress of the continuous-batching SpConv serving runtime
+(DESIGN.md §12). Three jobs, all at the request boundary, all host-side
+and eager — nothing here ever enters a trace:
+
+  * **Padding-bucket quantization** — arbitrary cloud sizes are
+    quantized into a fixed, small set of bucket classes
+    (:func:`bucket_classes`): the request's *valid* rows are compacted
+    to the front and zero-padded to the smallest bucket that holds
+    them. Every static shape downstream (plans, tiles, the jitted
+    forward) is a pure function of the bucket, so the engine compiles
+    exactly one executable per bucket class touched — never one per
+    request (the gate ``BENCH_serve.json`` asserts).
+  * **Admission validation** — the ingress sanitizer
+    (:func:`repro.core.validate.sanitize_cloud`) under the serving
+    policy (``REPRO_SERVE_VALIDATE``, default ``strict``), including
+    the ``oversize`` class against the largest bucket. A rejected
+    cloud becomes a typed :class:`Rejection` for *that request only*;
+    nothing malformed ever reaches the plan layer or a batchmate.
+  * **Bounded queueing + deadline-aware shedding** — the queue holds at
+    most ``REPRO_SERVE_QUEUE_CAP`` requests; a submit beyond that is
+    shed immediately with :data:`SHED_QUEUE_FULL` (explicit
+    backpressure, never unbounded buffering). At dequeue, a request
+    whose deadline has passed — or would pass before the bucket's
+    estimated service time elapses — is shed with
+    :data:`SHED_DEADLINE`: SpOctA's real-time framing makes a late
+    answer a wrong answer, so the cycles go to requests that can still
+    meet theirs.
+
+Fault injection attacks the queue itself through the ``admit`` site
+(runtime/fault.py): a transient injected fault is retried and the
+request admitted normally; a persistent one isolates that single
+request with a typed :data:`ISOLATED_FAULT` rejection — batchmates are
+never touched. Every outcome lands in the process-wide
+:class:`~repro.runtime.guard.RuntimeHealth` bag under ``admit.*`` so
+the serve gates can account shed/rejected/isolated exactly.
+
+Flags (re-read per queue construction — runtime/flags.py):
+REPRO_SERVE_BUCKETS, REPRO_SERVE_QUEUE_CAP, REPRO_SERVE_DEADLINE_MS,
+REPRO_SERVE_VALIDATE.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import validate
+from repro.runtime import fault, guard
+
+# -- typed rejection reasons ------------------------------------------------
+
+#: queue at capacity — explicit backpressure, resubmit later
+SHED_QUEUE_FULL = "queue_full"
+#: deadline already passed (or cannot be met) at dequeue
+SHED_DEADLINE = "deadline"
+#: engine shedding mode (degradation-ladder level 3, DESIGN.md §12)
+SHED_OVERLOAD = "overload"
+#: sanitizer rejected the cloud (reject-policy taxonomy hit)
+REJECT_INVALID = "invalid"
+#: more valid voxels than the largest padding bucket admits
+REJECT_OVERSIZE = "oversize"
+#: a persistent injected/runtime fault quarantined this request
+ISOLATED_FAULT = "fault"
+
+#: reasons counted as *shed* (load, not request defects) vs *rejected*
+SHED_REASONS = (SHED_QUEUE_FULL, SHED_DEADLINE, SHED_OVERLOAD)
+REJECT_REASONS = (REJECT_INVALID, REJECT_OVERSIZE)
+
+#: default padding-bucket classes (voxel budgets); REPRO_SERVE_BUCKETS
+#: overrides. Geometric spacing bounds pad waste at <= 2x while keeping
+#: the compiled-executable count at len(buckets).
+DEFAULT_BUCKETS = (512, 1024, 2048, 4096, 8192, 16384)
+
+
+def bucket_classes() -> tuple[int, ...]:
+    """The active padding-bucket classes, ascending (REPRO_SERVE_BUCKETS:
+    comma-separated voxel budgets; default :data:`DEFAULT_BUCKETS`)."""
+    env = os.environ.get("REPRO_SERVE_BUCKETS", "")
+    if not env.strip():
+        return DEFAULT_BUCKETS
+    return tuple(sorted(int(x) for x in env.split(",") if x.strip()))
+
+
+def bucket_for(n_valid: int, buckets=None) -> int | None:
+    """Smallest bucket holding ``n_valid`` voxels; None if none does."""
+    for b in buckets or bucket_classes():
+        if n_valid <= b:
+            return int(b)
+    return None
+
+
+def queue_capacity() -> int:
+    """REPRO_SERVE_QUEUE_CAP: bounded queue depth (default 64)."""
+    return int(os.environ.get("REPRO_SERVE_QUEUE_CAP", "64"))
+
+
+def default_deadline_s() -> float:
+    """REPRO_SERVE_DEADLINE_MS: per-request deadline budget (default
+    60000 ms — generous because CI hosts pay first-call compiles)."""
+    return float(os.environ.get("REPRO_SERVE_DEADLINE_MS", "60000")) / 1e3
+
+
+def serve_policy() -> validate.CloudPolicy | None:
+    """REPRO_SERVE_VALIDATE: 'strict' (default — serving admission
+    control rejects rather than repairs) | 'repair' | 'off'."""
+    mode = os.environ.get("REPRO_SERVE_VALIDATE", "strict")
+    if mode == "off":
+        return None
+    if mode == "repair":
+        return validate.REPAIR
+    return validate.STRICT
+
+
+@dataclasses.dataclass
+class Rejection:
+    """Typed admission/shedding outcome for one request.
+
+    ``reason`` is one of the module-level reason constants; ``kind``
+    carries the sanitizer taxonomy class when the reason is
+    :data:`REJECT_INVALID`/:data:`REJECT_OVERSIZE`.
+    """
+
+    rid: str
+    reason: str
+    detail: str = ""
+    kind: str | None = None
+
+    @property
+    def shed(self) -> bool:
+        return self.reason in SHED_REASONS
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted request: bucket-quantized arrays + bookkeeping.
+
+    ``coords``/``batch``/``valid``/``feats`` are the *compacted,
+    bucket-padded* numpy arrays (shape ``(bucket, ...)``), not the raw
+    submission — identical raw clouds quantize to identical buffers, so
+    the content-addressed PlanCache deduplicates resubmissions even
+    though every request allocates fresh arrays. ``deadline`` is an
+    absolute clock time; ``n_valid`` the live row count.
+    """
+
+    rid: str
+    coords: np.ndarray
+    batch: np.ndarray
+    valid: np.ndarray
+    feats: np.ndarray
+    bucket: int
+    n_valid: int
+    deadline: float
+    submitted_at: float
+
+
+def quantize_to_bucket(coords, batch, valid, feats, bucket: int):
+    """Compact valid rows to the front (stable) and zero-pad to ``bucket``.
+
+    Deterministic: the same raw cloud always produces byte-identical
+    padded buffers, which is what lets the PlanCache content keys
+    deduplicate repeated submissions of one scene.
+    """
+    c = np.asarray(coords)
+    b = np.asarray(batch)
+    v = np.asarray(valid).astype(bool)
+    f = np.asarray(feats)
+    live = np.flatnonzero(v)[:bucket]
+    n = live.size
+    cq = np.zeros((bucket, 3), np.int32)
+    bq = np.zeros((bucket,), np.int32)
+    vq = np.zeros((bucket,), bool)
+    fq = np.zeros((bucket, f.shape[1]), np.float32)
+    cq[:n] = c[live]
+    bq[:n] = b[live]
+    vq[:n] = True
+    fq[:n] = f[live]
+    return cq, bq, vq, fq, n
+
+
+class AdmissionQueue:
+    """Bounded FIFO of bucket-quantized requests with typed shedding.
+
+    Args:
+      capacity: queue depth bound (None: :func:`queue_capacity`).
+      buckets: padding-bucket classes (None: :func:`bucket_classes`).
+      policy: sanitizer :class:`~repro.core.validate.CloudPolicy` (None:
+        :func:`serve_policy`; pass ``False`` to skip sanitation).
+      grid_bits, batch_bits: the grid contract requests are validated
+        against (must match the model config downstream).
+      clock: monotonic time source (injectable for deterministic tests).
+
+    ``submit`` returns a :class:`Request` (admitted) or a typed
+    :class:`Rejection`; ``take`` dequeues up to ``max_n`` requests,
+    shedding the deadline-hopeless ones. Every outcome increments an
+    ``admit.*`` health counter.
+    """
+
+    def __init__(self, capacity: int | None = None, *, buckets=None,
+                 policy=None, grid_bits: int = 7, batch_bits: int = 4,
+                 clock=time.monotonic):
+        self.capacity = queue_capacity() if capacity is None else capacity
+        self.buckets = tuple(buckets) if buckets is not None \
+            else bucket_classes()
+        self.policy = serve_policy() if policy is None else \
+            (None if policy is False else policy)
+        self.grid_bits = grid_bits
+        self.batch_bits = batch_bits
+        self.clock = clock
+        self._q: collections.deque[Request] = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def _note(self, name: str) -> None:
+        guard.health().note(name)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, rid: str, coords, batch, valid, feats, *,
+               deadline_s: float | None = None) -> Request | Rejection:
+        """Admit one raw cloud, or shed/reject it with a typed outcome.
+
+        The pipeline, cheapest check first: queue-full backpressure →
+        the ``admit`` fault site (retried once: a transient injected
+        fault admits normally, a persistent one isolates this request)
+        → sanitizer under the serving policy (including ``oversize``
+        against the largest bucket) → bucket quantization → enqueue.
+        ``deadline_s`` is relative to now (None:
+        :func:`default_deadline_s`); it may be negative to model an
+        already-late request (shed at dequeue).
+        """
+        now = self.clock()
+        if len(self._q) >= self.capacity:
+            self._note("admit.shed.queue_full")
+            return Rejection(rid, SHED_QUEUE_FULL,
+                             f"queue at capacity {self.capacity}")
+        for attempt in (0, 1):
+            try:
+                fault.check("admit")
+                break
+            except fault.InjectedFault as e:
+                if attempt:
+                    self._note("admit.isolated_fault")
+                    return Rejection(rid, ISOLATED_FAULT, str(e))
+                self._note("admit.retry")
+
+        if self.policy is not None:
+            try:
+                coords, batch, valid, feats, _ = validate.sanitize_cloud(
+                    coords, batch, valid, feats, grid_bits=self.grid_bits,
+                    batch_bits=self.batch_bits, policy=self.policy,
+                    max_valid=self.buckets[-1])
+            except validate.CloudValidationError as e:
+                reason = REJECT_OVERSIZE if e.kind == "oversize" \
+                    else REJECT_INVALID
+                self._note(f"admit.reject.{reason}")
+                return Rejection(rid, reason, str(e), kind=e.kind)
+
+        n_valid = int(np.asarray(valid).astype(bool).sum())
+        bucket = bucket_for(n_valid, self.buckets)
+        if bucket is None:
+            # policy 'off'/'repair-without-budget' can still overshoot
+            # the largest bucket; the shape contract is non-negotiable
+            self._note(f"admit.reject.{REJECT_OVERSIZE}")
+            return Rejection(rid, REJECT_OVERSIZE,
+                             f"{n_valid} valid voxels exceed the largest "
+                             f"bucket {self.buckets[-1]}", kind="oversize")
+        cq, bq, vq, fq, n = quantize_to_bucket(coords, batch, valid, feats,
+                                               bucket)
+        ddl = now + (default_deadline_s() if deadline_s is None
+                     else deadline_s)
+        req = Request(rid, cq, bq, vq, fq, bucket, n, ddl, now)
+        self._q.append(req)
+        self._note("admit.ok")
+        return req
+
+    # -- dequeue + deadline shedding ----------------------------------------
+
+    def take(self, max_n: int, *, est_service_s=None):
+        """Dequeue up to ``max_n`` serviceable requests.
+
+        ``est_service_s``: optional ``bucket -> seconds`` estimate (the
+        engine's per-bucket EWMA); a request whose remaining deadline
+        budget is below the estimate — or already negative — is shed
+        with :data:`SHED_DEADLINE` instead of wasting a batch slot on
+        an answer that would arrive late.
+
+        Returns ``(requests, shed)`` — the batch plus the typed
+        rejections of everything shed while assembling it.
+        """
+        out: list[Request] = []
+        shed: list[Rejection] = []
+        while self._q and len(out) < max_n:
+            req = self._q.popleft()
+            now = self.clock()
+            est = 0.0
+            if est_service_s is not None:
+                est = float(est_service_s(req.bucket) or 0.0)
+            if now + est > req.deadline:
+                self._note("admit.shed.deadline")
+                shed.append(Rejection(
+                    req.rid, SHED_DEADLINE,
+                    f"deadline missed by {now + est - req.deadline:.3f}s "
+                    f"(est service {est:.3f}s)"))
+                continue
+            out.append(req)
+        return out, shed
+
+    def shed_all(self, reason: str = SHED_OVERLOAD) -> list[Rejection]:
+        """Drain the whole queue with a typed rejection (the degradation
+        ladder's last rung — the engine is refusing new work)."""
+        shed = []
+        while self._q:
+            req = self._q.popleft()
+            self._note(f"admit.shed.{reason}")
+            shed.append(Rejection(req.rid, reason, "engine shedding mode"))
+        return shed

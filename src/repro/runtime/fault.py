@@ -30,6 +30,13 @@ deterministically fires :class:`InjectedFault` at named sites —
                    raised — models a content-key collision; a verifying
                    cache detects and rebuilds)
   ``checkpoint``   checkpoint.save (before any file IO)
+  ``admit``        runtime/admission.AdmissionQueue.submit (attacks the
+                   serving queue: a transient fault is retried and the
+                   request admitted normally; a persistent one isolates
+                   that request with a typed rejection)
+  ``batch``        launch/spconv_serve.ServeEngine tick (attacks batch
+                   assembly; persistent failure isolates only the
+                   requests of that tick)
 
 by per-site call index (``schedule``) or by seeded hash rate (``rate``).
 Faults are one-shot per call index, so the guard layer's retry-same-impl
@@ -56,7 +63,17 @@ from repro.checkpoint import checkpoint
 log = logging.getLogger("repro.fault")
 
 #: every named injection site
-FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "checkpoint")
+FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "checkpoint",
+               "admit", "batch")
+
+#: the sites reachable from the training demo (the chaos train gate
+#: schedules exactly these; 'admit'/'batch' live on the serving path and
+#: are exercised by benchmarks/serve_replay.py instead)
+TRAIN_FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "checkpoint")
+
+#: the sites reachable from the serving engine (no checkpointing there)
+SERVE_FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "admit",
+                     "batch")
 
 
 class InjectedFault(RuntimeError):

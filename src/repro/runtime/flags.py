@@ -59,6 +59,39 @@ the others bind at construction or import as noted):
     retried (default ``32``). Re-read per call by
     :func:`repro.runtime.guard.fallback_cooldown`.
 
+``REPRO_SERVE_BUCKETS``
+    Padding-bucket classes for the serving admission queue (DESIGN.md
+    §12) — comma-separated ascending voxel budgets, default
+    ``512,1024,2048,4096,8192,16384``. Every admitted request is
+    quantized to the smallest bucket that fits, so the engine holds one
+    compiled executable per bucket class instead of one per request
+    geometry. Re-read per construction by
+    :func:`repro.runtime.admission.bucket_classes`.
+
+``REPRO_SERVE_QUEUE_CAP``
+    Bounded admission-queue depth (default ``64``); a submit beyond it
+    is shed with typed ``queue_full`` backpressure. Read by
+    :func:`repro.runtime.admission.queue_capacity`.
+
+``REPRO_SERVE_DEADLINE_MS``
+    Default per-request deadline in milliseconds (default ``60000``)
+    when ``submit(deadline_s=None)``. Requests whose remaining budget is
+    below the engine's per-bucket service estimate are shed at dequeue
+    with reason ``deadline``. Read by
+    :func:`repro.runtime.admission.default_deadline_s`.
+
+``REPRO_SERVE_MAX_BATCH``
+    Requests the serve engine drains per continuous-batching tick
+    (default ``8``); the degradation ladder's level 1 halves it. Read
+    at :class:`repro.launch.spconv_serve.ServeEngine` construction.
+
+``REPRO_SERVE_VALIDATE``
+    Admission sanitizer policy — ``strict`` (default: any defect,
+    including ``oversize`` past the largest bucket, is a typed
+    rejection) | ``repair`` (defects repaired in place, oversize
+    truncated keep-first) | ``off``. Read by
+    :func:`repro.runtime.admission.serve_policy`.
+
 ``REPRO_BENCH_FAST``
     Set to ``1`` for the reduced benchmark sweep (CI); read by
     ``benchmarks/run.py``.

@@ -91,6 +91,21 @@ def reset_health() -> None:
     _CAPACITY_HINTS.clear()
 
 
+def dump_health_json(path: str, meta: dict | None = None) -> dict:
+    """Write the health snapshot as structured JSON (the ``--health-json``
+    flag of launch/train.py and launch/spconv_serve.py).
+
+    The payload is ``{"health": <snapshot>, "meta": <meta or {}>}`` with
+    sorted keys, so chaos/serve CI gates assert on counters instead of
+    parsing stdout. Returns the payload for in-process callers.
+    """
+    import json
+    payload = {"health": _HEALTH.snapshot(), "meta": dict(meta or {})}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return payload
+
+
 # ---------------------------------------------------------------------------
 # Flags (re-read per call; documented in runtime/flags.py)
 # ---------------------------------------------------------------------------
