@@ -24,6 +24,12 @@ The hardened-runtime acceptance suite (DESIGN.md §11), persisted to
     out-of-grid, duplicates, oversize, empty) through
     :func:`repro.core.validate.sanitize_cloud`, asserting each class is
     detected, counted, and repaired without a shape change.
+  * **persist-fault gate** — the demo with a durability dir and
+    injected snapshot I/O faults (``persist.save``, ``persist.load``)
+    must stay bit-identical to the clean run: persistence failures are
+    absorbed into counters (DESIGN.md §13), never surfaced to the
+    training loop. (The kill-and-restart side lives in
+    benchmarks/restart_replay.py — SIGKILL needs a subprocess.)
 
 Like benchmarks/cache_model.py, records are persisted *before* the
 assertions run, so a regression still lands in ``BENCH_robust.json``.
@@ -34,6 +40,8 @@ from __future__ import annotations
 import json
 import logging
 import os
+import shutil
+import tempfile
 
 import numpy as np
 import jax.numpy as jnp
@@ -140,6 +148,31 @@ def _overhead_record(n: int = 4096, c: int = 64, attempts: int = 5) -> dict:
     }
 
 
+def _persist_record() -> dict:
+    """Snapshot I/O faults are absorbed, not surfaced (DESIGN.md §13)."""
+    guard.reset_health()
+    clean = _demo()
+    guard.reset_health()
+    plan = fault.FaultPlan(schedule={"persist.save": [1],
+                                     "persist.load": [2]})
+    pdir = tempfile.mkdtemp(prefix="chaos-persist-")
+    try:
+        faulty = _demo(faults=plan, persist_dir=pdir)
+    finally:
+        shutil.rmtree(pdir, ignore_errors=True)
+    return {
+        "gate": "persist_faults",
+        "schedule": {"persist.save": [1], "persist.load": [2]},
+        "fired": {k: list(v) for k, v in plan.fired.items()},
+        "clean_digest": clean["state_digest"],
+        "faulty_digest": faulty["state_digest"],
+        "bit_identical": clean["state_digest"] == faulty["state_digest"],
+        "store_faults": faulty["persist"]["faults"],
+        "store_stats": faulty["persist"],
+        "health": faulty["health"],
+    }
+
+
 def _validate_record() -> dict:
     """One degenerate cloud per failure class through the sanitizer."""
     n = 64
@@ -210,6 +243,20 @@ def _assert_records(recs: dict) -> None:
             f"guard overhead {ov['ratio_min']:.3f}x exceeds the "
             f"{ov['budget']}x clean-path budget")
 
+    pf = recs["persist_faults"]
+    if not pf["bit_identical"]:
+        raise AssertionError(
+            "persist gate: snapshot I/O faults leaked into the training "
+            "loop (digest diverged)")
+    missing = [s for s in ("persist.save", "persist.load")
+               if s not in pf["fired"]]
+    if missing:
+        raise AssertionError(f"persist gate: sites never fired: {missing}")
+    if pf["store_faults"] < 2:
+        raise AssertionError(
+            f"persist gate: store absorbed {pf['store_faults']} faults, "
+            f"expected both injected ones")
+
     val = recs["validate"]["cases"]
     if val["nan_coords"]["counts"]["nonfinite"] != 3:
         raise AssertionError("sanitizer missed NaN coordinate rows")
@@ -237,6 +284,7 @@ def run(full: bool = True, smoke: bool = False) -> list[str]:
         "replan": _replan_record(),
         "overhead": _overhead_record(
             n=1024 if smoke else 4096, attempts=3 if smoke else 5),
+        "persist_faults": _persist_record(),
         "validate": _validate_record(),
     }
     with open(OUT_JSON, "w") as f:
@@ -254,6 +302,9 @@ def run(full: bool = True, smoke: bool = False) -> list[str]:
                 f"ratio_min={recs['overhead']['ratio_min']:.4f};"
                 f"budget={recs['overhead']['budget']};"
                 f"sanitize_us={recs['overhead']['sanitize_clean_us']:.1f}"),
+        csv_row("chaos/persist_faults", 0.0,
+                f"bit_identical={recs['persist_faults']['bit_identical']};"
+                f"store_faults={recs['persist_faults']['store_faults']}"),
         csv_row("chaos/validate", 0.0,
                 f"classes_checked={len(recs['validate']['cases'])}"),
     ]
@@ -261,11 +312,13 @@ def run(full: bool = True, smoke: bool = False) -> list[str]:
 
 
 def run_smoke() -> list[str]:
-    """CI gate: chaos + replan + overhead + sanitizer sweep on tiny shapes.
+    """CI gate: chaos + replan + overhead + persist-fault + sanitizer
+    sweep on tiny shapes.
 
     Raises on: fault-injected or capacity-starved runs diverging from
     the clean digest, a fault site never firing, guard overhead above
-    the 2 % clean-path budget, or a sanitizer class going undetected.
+    the 2 % clean-path budget, a snapshot I/O fault leaking into the
+    training loop, or a sanitizer class going undetected.
     """
     return run(smoke=True)
 

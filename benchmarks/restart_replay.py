@@ -1,0 +1,553 @@
+"""Kill-and-restart gate: crash-safe persistence proven under SIGKILL.
+
+The acceptance suite of the durability layer (DESIGN.md §13), persisted
+to ``BENCH_persist.json``. Worker subprocesses run the real entry-point
+loops (launch/train.run_spconv_demo, launch/spconv_serve.ServeEngine)
+with a ``kill`` fault scheduled at a chosen call index — the kill sites
+sit *inside* checkpoint writes (between the temp write and the rename),
+*inside* snapshot writes, and at serve-tick / train-step boundaries, so
+sweeping the index SIGKILLs the process mid-checkpoint, mid-snapshot,
+and mid-tick. The driver then restarts and asserts the §13 contract:
+
+  * **bit-identical recovery** — a killed-and-resumed training run ends
+    with the same ``state_digest`` as the uninterrupted reference (the
+    lr schedule is pinned via ``total_steps``, checkpoints are
+    digest-verified, the replayed stream is a pure function of step);
+    a restarted serve engine re-queues its journaled in-flight requests
+    and completes them with logit digests equal to the fault-free
+    reference replay.
+  * **warm restarts are free** — a fresh process over a warm persist
+    dir replays every previously-seen geometry with **zero** map
+    searches (the search counter stays flat at 0).
+  * **no corrupt state crashes the loader** — truncation, bit flips,
+    version and salt mismatches, and foreign files in the snapshot dir
+    all cold-start cleanly, increment ``persist.dropped``, and still
+    reproduce the reference digest.
+
+Worker modes (internal): ``--worker-train`` / ``--worker-serve`` — the
+subprocess bodies the driver SIGKILLs. Records are persisted *before*
+the assertions run (the benchmarks/chaos.py idiom), so a regression
+still lands in ``BENCH_persist.json``. Wired into
+``benchmarks/run.py --smoke`` (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+
+OUT_JSON = "BENCH_persist.json"
+
+#: demo geometry (matches benchmarks/chaos.py so compiles stay tiny)
+STEPS = 2
+VOXELS = 96
+#: serve scenario shape
+SERVE_BUCKETS = (48, 96)
+SERVE_REQUESTS = 4
+
+#: kill-index sweep: each index lands the SIGKILL at a different point
+#: of the interleaved kill-site stream (train-step boundaries,
+#: mid-checkpoint-write, mid-snapshot-write). Smoke takes a subset.
+TRAIN_KILL_POINTS = (0, 2, 4, 7, 10)
+SERVE_KILL_POINTS = (0, 2, 5)
+
+
+# ---------------------------------------------------------------------------
+# Worker bodies (run in subprocesses the driver may SIGKILL)
+# ---------------------------------------------------------------------------
+
+def _worker_train(args) -> None:
+    from repro.launch.train import run_spconv_demo
+    from repro.runtime import fault as faultlib
+
+    faults = None
+    if args.kill_at >= 0:
+        faults = faultlib.FaultPlan(
+            schedule={faultlib.KILL_SITE: [args.kill_at]})
+    res = run_spconv_demo(
+        steps=STEPS, voxels=VOXELS, impl="ref", faults=faults,
+        persist_dir=args.persist_dir or None,
+        ckpt_dir=args.ckpt_dir or None, resume=args.resume,
+        total_steps=STEPS)
+    with open(args.out, "w") as f:
+        json.dump({k: res[k] for k in
+                   ("state_digest", "mapsearch_calls", "searches_per_cloud",
+                    "resumed_from", "persist", "cache")}, f, indent=2)
+
+
+def _serve_requests():
+    import numpy as np
+    from repro.data import pointcloud
+    reqs = []
+    for i in range(SERVE_REQUESTS):
+        rng = np.random.default_rng(100 + i)
+        vox = 36 if i % 2 else 72
+        vb = pointcloud.make_batch(rng, "indoor" if i % 2 else "lidar",
+                                   batch_size=1, max_voxels=vox)
+        reqs.append((f"req-{i}", vb))
+    return reqs
+
+
+def _make_engine(persist_dir: str | None):
+    import jax
+    from repro.launch.spconv_serve import ServeEngine
+    from repro.models import minkunet
+    from repro.runtime import admission
+
+    cfg = minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
+                                  classes=4, blocks=1)
+    params = minkunet.init_model(cfg, jax.random.key(0))
+    queue = admission.AdmissionQueue(buckets=SERVE_BUCKETS,
+                                     grid_bits=cfg.grid_bits,
+                                     batch_bits=cfg.batch_bits)
+    return ServeEngine(params, cfg, impl="ref", queue=queue, max_batch=2,
+                       persist_dir=persist_dir)
+
+
+def _worker_serve(args) -> None:
+    from repro.core import plan as planlib
+    from repro.runtime import fault as faultlib
+
+    engine = _make_engine(args.persist_dir or None)
+    recovery = engine.recover()
+    if not args.restart_only:
+        for rid, vb in _serve_requests():
+            engine.submit(rid, vb.coords, vb.batch, vb.valid, vb.feats,
+                          deadline_s=600.0)
+    faults = None
+    if args.kill_at >= 0:
+        faults = faultlib.FaultPlan(
+            schedule={faultlib.KILL_SITE: [args.kill_at]})
+    planlib.reset_mapsearch_counter()
+    with faultlib.inject(faults):
+        engine.drain()
+    with open(args.out, "w") as f:
+        json.dump({
+            "completed": {r.rid: r.digest for r in engine.results
+                          if r.status == "completed"},
+            "statuses": {r.rid: [r.status, r.reason]
+                         for r in engine.results},
+            "recovery": recovery,
+            "mapsearch_calls": planlib.mapsearch_call_count(),
+            "journal_entries": (len(engine.journal)
+                                if engine.journal is not None else 0),
+            "persist": (engine.persist.stats()
+                        if engine.persist is not None else None),
+        }, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Driver: spawn, kill, restart, compare
+# ---------------------------------------------------------------------------
+
+def _spawn(worker_args, timeout: int = 600):
+    cmd = [sys.executable, "-m", "benchmarks.restart_replay"] + worker_args
+    return subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def _read_json(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _train_worker_args(d: dict, out: str) -> list[str]:
+    args = ["--worker-train", "--out", out,
+            "--persist-dir", d["persist"], "--ckpt-dir", d["ckpt"]]
+    if d.get("resume"):
+        args.append("--resume")
+    if d.get("kill_at", -1) >= 0:
+        args += ["--kill-at", str(d["kill_at"])]
+    return args
+
+
+def _dirs(root: str, tag: str) -> dict:
+    d = {"persist": os.path.join(root, tag, "persist"),
+         "ckpt": os.path.join(root, tag, "ckpt")}
+    os.makedirs(d["persist"], exist_ok=True)
+    os.makedirs(d["ckpt"], exist_ok=True)
+    return d
+
+
+def _baseline_and_warm(root: str) -> tuple[dict, dict]:
+    """Reference digest from a clean run, then a fresh process over the
+    warm persist dir — which must search zero times."""
+    d = _dirs(root, "base")
+    out = os.path.join(root, "base", "cold.json")
+    proc = _spawn(_train_worker_args({**d}, out))
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"baseline worker failed rc={proc.returncode}:\n{proc.stderr[-2000:]}")
+    cold = _read_json(out)
+
+    out2 = os.path.join(root, "base", "warm.json")
+    d2 = {"persist": d["persist"], "ckpt": os.path.join(root, "base",
+                                                       "ckpt2")}
+    os.makedirs(d2["ckpt"], exist_ok=True)
+    proc = _spawn(_train_worker_args(d2, out2))
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"warm worker failed rc={proc.returncode}:\n{proc.stderr[-2000:]}")
+    warm = _read_json(out2)
+    record = {
+        "gate": "warm_restart",
+        "cold_digest": cold["state_digest"],
+        "warm_digest": warm["state_digest"],
+        "bit_identical": warm["state_digest"] == cold["state_digest"],
+        "cold_searches": cold["mapsearch_calls"],
+        "warm_searches": warm["mapsearch_calls"],
+        "searches_per_cloud": cold["searches_per_cloud"],
+        "warm_persist": warm["persist"],
+    }
+    return record, {"digest": cold["state_digest"], "dirs": d}
+
+
+def _kill_sweep(root: str, ref_digest: str, points) -> dict:
+    """SIGKILL the training worker at each scheduled kill index, then
+    restart with ``--resume`` over the same dirs: every restart must
+    exit cleanly with the reference digest."""
+    scenarios = []
+    for k in points:
+        d = _dirs(root, f"kill{k}")
+        out = os.path.join(root, f"kill{k}", "killed.json")
+        proc = _spawn(_train_worker_args({**d, "kill_at": k}, out))
+        killed = proc.returncode == -signal.SIGKILL
+        scen = {"kill_at": k, "killed": killed,
+                "first_rc": proc.returncode}
+        if not killed and proc.returncode == 0:
+            # index beyond this run's kill-site stream: completed clean
+            scen["restart_digest"] = _read_json(out)["state_digest"]
+            scen["restart_rc"] = 0
+            scen["bit_identical"] = scen["restart_digest"] == ref_digest
+            scenarios.append(scen)
+            continue
+        out2 = os.path.join(root, f"kill{k}", "restarted.json")
+        proc2 = _spawn(_train_worker_args({**d, "resume": True}, out2))
+        scen["restart_rc"] = proc2.returncode
+        if proc2.returncode == 0:
+            res = _read_json(out2)
+            scen["restart_digest"] = res["state_digest"]
+            scen["resumed_from"] = res["resumed_from"]
+            scen["restart_searches"] = res["mapsearch_calls"]
+            scen["bit_identical"] = res["state_digest"] == ref_digest
+        else:
+            scen["stderr"] = proc2.stderr[-2000:]
+            scen["bit_identical"] = False
+        scenarios.append(scen)
+    return {"gate": "kill_sweep", "reference_digest": ref_digest,
+            "scenarios": scenarios}
+
+
+def _corrupt_one(snap_dir: str, mode: str) -> None:
+    names = sorted(n for n in os.listdir(snap_dir) if n.endswith(".snap"))
+    path = os.path.join(snap_dir, names[0])
+    blob = open(path, "rb").read()
+    if mode == "truncate":
+        open(path, "wb").write(blob[: len(blob) // 2])
+    elif mode == "bitflip":
+        body = bytearray(blob)
+        body[-max(4, len(body) // 8)] ^= 0x40
+        open(path, "wb").write(bytes(body))
+    elif mode == "version":
+        from repro.runtime import persist
+        magic = persist._MAGIC
+        rest = blob[len(magic):]
+        nl = rest.index(b"\n")
+        header = json.loads(rest[:nl])
+        header["version"] = header["version"] + 999
+        open(path, "wb").write(
+            magic + json.dumps(header, sort_keys=True,
+                               separators=(",", ":")).encode()
+            + b"\n" + rest[nl + 1:])
+    elif mode == "foreign":
+        # a real entry replaced by non-snapshot bytes (magic mismatch)
+        # plus stray files the store must ignore without reading
+        open(path, "wb").write(b"not a snapshot at all")
+        open(os.path.join(snap_dir, "zzzz-foreign.snap"), "wb").write(
+            b"also not a snapshot")
+        open(os.path.join(snap_dir, "README.txt"), "w").write("ignore me")
+    else:
+        raise ValueError(mode)
+
+
+def _corruption_record(root: str, warm_dirs: dict, ref_digest: str) -> dict:
+    """Fuzz copies of the warm snapshot dir in-process: every corruption
+    mode must cold-start cleanly (digest preserved, ``persist.dropped``
+    counted, no crash)."""
+    from repro.launch.train import run_spconv_demo
+    from repro.runtime import guard
+
+    cases = {}
+    modes = ["truncate", "bitflip", "version", "foreign", "salt"]
+    for mode in modes:
+        pdir = os.path.join(root, f"corrupt-{mode}")
+        shutil.copytree(warm_dirs["persist"], pdir)
+        env_prev = os.environ.pop("REPRO_PERSIST_SALT", None)
+        try:
+            if mode == "salt":
+                os.environ["REPRO_PERSIST_SALT"] = "bumped-code-version"
+            else:
+                _corrupt_one(os.path.join(pdir, "snap"), mode)
+            with guard.scoped_health() as health:
+                res = run_spconv_demo(steps=STEPS, voxels=VOXELS,
+                                      impl="ref", persist_dir=pdir,
+                                      total_steps=STEPS)
+            cases[mode] = {
+                "digest": res["state_digest"],
+                "bit_identical": res["state_digest"] == ref_digest,
+                "dropped": res["persist"]["dropped"],
+                "dropped_health": health.get("persist.dropped"),
+                "searches": res["mapsearch_calls"],
+                "crashed": False,
+            }
+        except Exception as e:                           # noqa: BLE001
+            cases[mode] = {"crashed": True, "error": repr(e)}
+        finally:
+            if env_prev is None:
+                os.environ.pop("REPRO_PERSIST_SALT", None)
+            else:
+                os.environ["REPRO_PERSIST_SALT"] = env_prev
+    return {"gate": "corruption", "cases": cases}
+
+
+def _serve_worker_args(persist: str | None, out: str, *, kill_at: int = -1,
+                       restart_only: bool = False) -> list[str]:
+    args = ["--worker-serve", "--out", out]
+    if persist:
+        args += ["--persist-dir", persist]
+    if kill_at >= 0:
+        args += ["--kill-at", str(kill_at)]
+    if restart_only:
+        args.append("--restart-only")
+    return args
+
+
+def _serve_record(root: str, points) -> dict:
+    """Serve-tick kill sweep: reference replay, then for each kill index
+    SIGKILL mid-drain and restart an empty engine over the journal —
+    every recovered request must complete with the reference digest and
+    the journal must drain to empty."""
+    ref_out = os.path.join(root, "serve-ref.json")
+    proc = _spawn(_serve_worker_args(None, ref_out))
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"serve reference worker failed rc={proc.returncode}:\n"
+            f"{proc.stderr[-2000:]}")
+    ref = _read_json(ref_out)
+
+    scenarios = []
+    for k in points:
+        pdir = os.path.join(root, f"serve-kill{k}", "persist")
+        os.makedirs(pdir, exist_ok=True)
+        out = os.path.join(root, f"serve-kill{k}", "killed.json")
+        proc = _spawn(_serve_worker_args(pdir, out, kill_at=k))
+        killed = proc.returncode == -signal.SIGKILL
+        scen = {"kill_at": k, "killed": killed,
+                "first_rc": proc.returncode}
+        if not killed and proc.returncode == 0:
+            scen["restart_rc"] = 0
+            scen["recovered"] = 0
+            scen["digests_match"] = True
+            scen["journal_empty"] = _read_json(out)["journal_entries"] == 0
+            scenarios.append(scen)
+            continue
+        out2 = os.path.join(root, f"serve-kill{k}", "restarted.json")
+        proc2 = _spawn(_serve_worker_args(pdir, out2, restart_only=True))
+        scen["restart_rc"] = proc2.returncode
+        if proc2.returncode == 0:
+            res = _read_json(out2)
+            scen["recovered"] = res["recovery"]["recovered"]
+            scen["restart_completed"] = sorted(res["completed"])
+            scen["digests_match"] = all(
+                ref["completed"].get(rid) == dig
+                for rid, dig in res["completed"].items())
+            scen["journal_empty"] = res["journal_entries"] == 0
+            scen["restart_searches"] = res["mapsearch_calls"]
+            scen["persist_hits"] = (res["persist"] or {}).get("hits", 0)
+        else:
+            scen["stderr"] = proc2.stderr[-2000:]
+            scen["digests_match"] = False
+        scenarios.append(scen)
+    return {"gate": "serve_restart",
+            "reference_completed": sorted(ref["completed"]),
+            "scenarios": scenarios}
+
+
+def _restart_shed_record(root: str) -> dict:
+    """In-process: a journaled request whose deadline expires across the
+    restart must surface as a typed ``restart`` shed, not silent loss."""
+    from repro.runtime import guard
+
+    pdir = os.path.join(root, "shed", "persist")
+    os.makedirs(pdir, exist_ok=True)
+    with guard.scoped_health():
+        engine = _make_engine(pdir)
+        _, vb = _serve_requests()[0]
+        engine.submit("late-req", vb.coords, vb.batch, vb.valid, vb.feats,
+                      deadline_s=-1.0)          # already past its deadline
+        journaled = len(engine.journal)
+        # no drain: the process "dies" with the request in flight
+        engine2 = _make_engine(pdir)
+        rec = engine2.recover()
+        outcome = [(r.rid, r.status, r.reason) for r in engine2.results]
+    return {"gate": "restart_shed", "journaled": journaled,
+            "recovery": rec, "outcomes": outcome,
+            "journal_after": len(engine2.journal)}
+
+
+# ---------------------------------------------------------------------------
+# Assertions + harness wiring
+# ---------------------------------------------------------------------------
+
+def _assert_records(recs: dict) -> None:
+    warm = recs["warm_restart"]
+    if not warm["bit_identical"]:
+        raise AssertionError("warm restart diverged from the cold run")
+    if warm["cold_searches"] != warm["searches_per_cloud"]:
+        raise AssertionError(
+            f"cold run searched {warm['cold_searches']} times, expected "
+            f"{warm['searches_per_cloud']}")
+    if warm["warm_searches"] != 0:
+        raise AssertionError(
+            f"warm restart performed {warm['warm_searches']} map searches; "
+            f"the §13 contract is zero for seen geometries")
+
+    ks = recs["kill_sweep"]
+    if not any(s["killed"] for s in ks["scenarios"]):
+        raise AssertionError("kill sweep: no scheduled kill actually fired")
+    for s in ks["scenarios"]:
+        if s.get("restart_rc") != 0:
+            raise AssertionError(
+                f"kill_at={s['kill_at']}: restart crashed "
+                f"(rc={s.get('restart_rc')}): {s.get('stderr', '')[-500:]}")
+        if not s.get("bit_identical"):
+            raise AssertionError(
+                f"kill_at={s['kill_at']}: restart digest diverged from the "
+                f"uninterrupted reference")
+
+    for mode, c in recs["corruption"]["cases"].items():
+        if c.get("crashed"):
+            raise AssertionError(
+                f"corruption mode {mode!r} crashed the loader: {c['error']}")
+        if not c["bit_identical"]:
+            raise AssertionError(f"corruption mode {mode!r} diverged")
+        if c["dropped"] < 1:
+            raise AssertionError(
+                f"corruption mode {mode!r}: no entry was dropped/counted")
+
+    sv = recs["serve_restart"]
+    if not any(s["killed"] for s in sv["scenarios"]):
+        raise AssertionError("serve sweep: no scheduled kill actually fired")
+    for s in sv["scenarios"]:
+        if s.get("restart_rc") != 0:
+            raise AssertionError(
+                f"serve kill_at={s['kill_at']}: restart crashed: "
+                f"{s.get('stderr', '')[-500:]}")
+        if not s.get("digests_match"):
+            raise AssertionError(
+                f"serve kill_at={s['kill_at']}: recovered request logits "
+                f"diverged from the reference replay")
+        if s["killed"] and s.get("recovered", 0) < 1:
+            raise AssertionError(
+                f"serve kill_at={s['kill_at']}: nothing recovered from the "
+                f"journal after a mid-drain kill")
+        if not s.get("journal_empty"):
+            raise AssertionError(
+                f"serve kill_at={s['kill_at']}: journal not empty after "
+                f"the restarted drain")
+
+    shed = recs["restart_shed"]
+    if shed["journaled"] != 1 or shed["journal_after"] != 0:
+        raise AssertionError("restart_shed: journal accounting broken")
+    if shed["outcomes"] != [("late-req", "shed", "restart")]:
+        raise AssertionError(
+            f"restart_shed: expected one typed 'restart' shed, got "
+            f"{shed['outcomes']}")
+
+
+def run(full: bool = True, smoke: bool = False) -> list[str]:
+    from benchmarks.common import csv_row
+
+    logging.getLogger("repro.guard").setLevel(logging.ERROR)
+    logging.getLogger("repro.fault").setLevel(logging.ERROR)
+    logging.getLogger("repro.persist").setLevel(logging.CRITICAL)
+    train_points = TRAIN_KILL_POINTS[1:3] if smoke else TRAIN_KILL_POINTS
+    serve_points = SERVE_KILL_POINTS[:2] if smoke else SERVE_KILL_POINTS
+    root = tempfile.mkdtemp(prefix="restart-replay-")
+    try:
+        warm_rec, base = _baseline_and_warm(root)
+        recs = {
+            "warm_restart": warm_rec,
+            "kill_sweep": _kill_sweep(root, base["digest"], train_points),
+            "corruption": _corruption_record(root, base["dirs"],
+                                             base["digest"]),
+            "serve_restart": _serve_record(root, serve_points),
+            "restart_shed": _restart_shed_record(root),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(list(recs.values()), f, indent=2)
+    _assert_records(recs)                 # after persisting: a failing
+    ks = recs["kill_sweep"]["scenarios"]  # gate is still rendered
+    sv = recs["serve_restart"]["scenarios"]
+    return [
+        csv_row("persist/warm_restart", 0.0,
+                f"bit_identical={recs['warm_restart']['bit_identical']};"
+                f"warm_searches={recs['warm_restart']['warm_searches']}"),
+        csv_row("persist/kill_sweep", 0.0,
+                f"points={len(ks)};killed={sum(s['killed'] for s in ks)};"
+                f"all_bit_identical="
+                f"{all(s.get('bit_identical') for s in ks)}"),
+        csv_row("persist/corruption", 0.0,
+                f"modes={len(recs['corruption']['cases'])};"
+                f"all_clean_coldstart=True"),
+        csv_row("persist/serve_restart", 0.0,
+                f"points={len(sv)};killed={sum(s['killed'] for s in sv)};"
+                f"recovered={sum(s.get('recovered', 0) for s in sv)}"),
+        csv_row("persist/restart_shed", 0.0,
+                f"outcomes={recs['restart_shed']['outcomes']}"),
+    ]
+
+
+def run_smoke() -> list[str]:
+    """CI gate: SIGKILL-at-randomized-points restart replay on tiny
+    shapes. Raises on: a killed-and-resumed run diverging from the
+    uninterrupted digest, a warm restart performing any map search, a
+    corruption mode crashing the loader or going uncounted, a restarted
+    serve engine losing/duplicating journaled work, or a past-deadline
+    journal entry not surfacing as a typed ``restart`` shed.
+    """
+    return run(smoke=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--worker-train", action="store_true")
+    ap.add_argument("--worker-serve", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--persist-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--restart-only", action="store_true")
+    ap.add_argument("--kill-at", type=int, default=-1, dest="kill_at")
+    args = ap.parse_args()
+    if args.worker_train:
+        _worker_train(args)
+        return
+    if args.worker_serve:
+        _worker_serve(args)
+        return
+    for row in run(smoke=args.smoke):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

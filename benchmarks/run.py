@@ -27,7 +27,13 @@ faults at every serving site must keep every clean request bit-identical
 to the fault-free replay, isolate the victim request only, account every
 shed/rejected/isolated/degraded outcome exactly in RuntimeHealth, and
 hold the compiled-executable count to the padding-bucket count —
-DESIGN.md §12).
+DESIGN.md §12). Last comes the persistence gate
+(benchmarks/restart_replay.run_smoke: SIGKILL worker subprocesses
+mid-checkpoint / mid-snapshot / mid-serve-tick, restart them over the
+surviving dirs, and assert bit-identical recovery, zero map searches on
+warm geometries, clean cold starts from every corrupted-snapshot mode,
+and typed ``restart`` sheds for journaled past-deadline requests —
+DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -46,9 +52,9 @@ def main() -> None:
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FAST", "0") != "1"
     from benchmarks import (cache_model, caching_energy, chaos,
-                            overall_comparison, rulebook_exec,
-                            search_speedup, serve_replay, sparsity_saving,
-                            weight_distribution)
+                            overall_comparison, restart_replay,
+                            rulebook_exec, search_speedup, serve_replay,
+                            sparsity_saving, weight_distribution)
 
     if args.smoke:
         print("name,us_per_call,derived")
@@ -100,6 +106,14 @@ def main() -> None:
             print("serve_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("serve_smoke,0.0,OK", flush=True)
+        try:
+            for row in restart_replay.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("persist_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("persist_smoke,0.0,OK", flush=True)
         return
 
     suites = [
@@ -112,6 +126,7 @@ def main() -> None:
         ("cache_model", cache_model.run),
         ("robustness", chaos.run),
         ("serving", serve_replay.run),
+        ("persistence", restart_replay.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

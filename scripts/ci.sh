@@ -34,7 +34,17 @@
 # bit-identical to the fault-free replay, only the victim isolated —
 # exact shed/rejected/isolated/degraded accounting against
 # RuntimeHealth, bounded shedding (only the expired-deadline requests),
-# and one compiled executable per padding bucket (DESIGN.md §12).
+# and one compiled executable per padding bucket (DESIGN.md §12); and
+# the persistence gate (restart_replay.run_smoke): SIGKILL worker
+# subprocesses mid-checkpoint / mid-snapshot / mid-serve-tick via the
+# scheduled "kill" fault site, restart them over the surviving dirs,
+# and assert bit-identical recovery against the uninterrupted
+# reference, zero map searches on warm-restarted geometries, clean
+# cold starts (counted persist.dropped, never a crash) from truncated /
+# bit-flipped / version-bumped / foreign / salt-mismatched snapshots,
+# journaled in-flight serve requests re-queued exactly once, and typed
+# "restart" sheds for the ones whose deadline died with the process
+# (DESIGN.md §13).
 #
 # The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
 # benchmarks/README honest: internal anchors, referenced file paths, and
@@ -55,7 +65,7 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + search + cache + robustness + serving smoke gates =="
+echo "== rulebook + search + cache + robustness + serving + persistence smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

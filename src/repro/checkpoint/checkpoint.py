@@ -1,10 +1,18 @@
-"""Checkpointing: atomic, async-capable, elastic-restore pytree snapshots.
+"""Checkpointing: atomic, digest-verified, async-capable pytree snapshots.
 
 No orbax offline, so this is a self-contained implementation:
 
-  * save: flatten-with-paths -> one .npz blob + a JSON manifest, written to
-    a temp dir then atomically renamed (a crash mid-save never corrupts the
-    latest checkpoint — fault-tolerance requirement).
+  * save: flatten-with-paths -> one .npz blob + a JSON manifest carrying
+    a sha256 over the blob, written to a temp dir (every file fsynced)
+    then atomically renamed — a crash or SIGKILL mid-save never corrupts
+    the latest checkpoint (DESIGN.md §13 discipline; the ``kill`` fault
+    site fires between the temp write and the rename so the restart gate
+    can prove it).
+  * verify-on-load: :func:`verify` recomputes the blob digest against
+    the manifest; :func:`latest_step` returns the newest checkpoint that
+    *passes* — a truncated or bit-flipped step-N is skipped (counted
+    ``ckpt.corrupt``) and step-N-1 is used. :func:`restore` re-verifies
+    and refuses corrupt input.
   * async save: hand the host copy to a worker thread; training continues.
   * restore: rebuild the pytree; with ``shardings`` given, each leaf is
     device_put to its target sharding — this is the *elastic* path: a
@@ -13,6 +21,7 @@ No orbax offline, so this is a self-contained implementation:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -28,6 +37,14 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, tree, *, keep: int = 3,
          blocking: bool = True) -> threading.Thread | None:
     """Write checkpoint ``step``; returns the writer thread if async.
@@ -39,8 +56,6 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
     fault.check("checkpoint")
     leaves, treedef = _flatten(tree)
     host = [np.asarray(x) for x in leaves]          # device->host copy, sync
-    manifest = {"step": step, "treedef": str(treedef),
-                "n_leaves": len(host), "time": time.time()}
 
     def _write():
         os.makedirs(directory, exist_ok=True)
@@ -48,12 +63,25 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
         final = os.path.join(directory, f"step-{step:010d}")
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "leaves.npz"),
-                 **{f"leaf_{i}": a for i, a in enumerate(host)})
+        blob = os.path.join(tmp, "leaves.npz")
+        with open(blob, "wb") as f:
+            np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(host)})
+            f.flush()
+            os.fsync(f.fileno())
+        with open(blob, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest = {"step": step, "treedef": str(treedef),
+                    "n_leaves": len(host), "time": time.time(),
+                    "sha256": digest}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        shutil.rmtree(final, ignore_errors=True)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_file(tmp)
+        fault.check("kill")          # mid-checkpoint SIGKILL point: the
+        shutil.rmtree(final, ignore_errors=True)     # tmp dir is complete
         os.rename(tmp, final)                        # atomic commit
+        _fsync_file(directory)
         _gc(directory, keep)
 
     if blocking:
@@ -71,6 +99,26 @@ def _gc(directory: str, keep: int) -> None:
                       ignore_errors=True)
 
 
+def verify(directory: str, step: int) -> bool:
+    """True iff checkpoint ``step`` is complete and its blob matches the
+    manifest digest. Manifests predating the digest field pass (nothing
+    to check against); any read/parse error fails."""
+    path = os.path.join(directory, f"step-{step:010d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with open(os.path.join(path, "leaves.npz"), "rb") as f:
+            blob = f.read()
+        want = manifest.get("sha256")
+        if want is not None and \
+                hashlib.sha256(blob).hexdigest() != want:
+            return False
+        with np.load(os.path.join(path, "leaves.npz")) as data:
+            return len(data.files) == manifest["n_leaves"]
+    except Exception:                                # noqa: BLE001
+        return False
+
+
 def all_steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
         return []
@@ -83,13 +131,25 @@ def all_steps(directory: str) -> list[int]:
 
 
 def latest_step(directory: str) -> int | None:
-    steps = all_steps(directory)
-    return steps[-1] if steps else None
+    """Newest step that passes :func:`verify` — a truncated step-N is
+    skipped (counted ``ckpt.corrupt``) and the intact step-N-1 served,
+    so recovery always lands on real state."""
+    for s in reversed(all_steps(directory)):
+        if verify(directory, s):
+            return s
+        from repro.runtime import guard
+        guard.health().note("ckpt.corrupt")
+    return None
 
 
 def restore(directory: str, step: int, like, *, shardings=None):
     """Rebuild pytree shaped ``like``. ``shardings`` (same structure or a
-    single sharding) triggers elastic placement onto the current mesh."""
+    single sharding) triggers elastic placement onto the current mesh.
+    Verifies the blob digest first and refuses corrupt input."""
+    if not verify(directory, step):
+        raise ValueError(
+            f"checkpoint step {step} in {directory!r} is corrupt or "
+            f"incomplete (digest/manifest mismatch)")
     path = os.path.join(directory, f"step-{step:010d}")
     data = np.load(os.path.join(path, "leaves.npz"))
     leaves_like, treedef = _flatten(like)

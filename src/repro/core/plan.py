@@ -47,6 +47,12 @@ to additionally compare the arrays element-wise on every content hit
 ``REPRO_PLANCACHE_CONTENT=0`` disables content keys process-wide
 (identity-only, the pre-PR-5 behavior) — see runtime/flags.py.
 
+The content tier can additionally be made *durable* (DESIGN.md §13):
+construct with ``persist=SnapshotStore(...)`` and content-keyed builds
+write through to disk atomically while content misses read through —
+a restarted process replays previously-seen geometries with zero map
+searches. ``save()``/``load()`` bulk-flush and rehydrate.
+
 The PlanCache cooperates with the **pinned tier** of the non-uniform
 caching policy (runtime/feature_cache.py): on a plan build, the small
 OCTENT search structure (directory + compacted table) is pinned in a
@@ -250,25 +256,34 @@ class PlanCache:
         serving a stale plan.
       pinned: the :class:`~repro.runtime.feature_cache.PinnedStore` for
         the pinned tier (None: the process-wide default store).
+      persist: a :class:`~repro.runtime.persist.SnapshotStore` making the
+        content tier durable (DESIGN.md §13): a content-key miss reads
+        through to disk before building (a verified on-disk plan costs
+        zero map searches), and every content-keyed build writes through
+        atomically. Identity-only entries (tracer keys) are never
+        persisted — object ids mean nothing across processes.
 
     Counters: ``hits`` (total), ``id_hits``, ``content_hits``,
-    ``misses``, ``collisions`` — see :meth:`stats`.
+    ``persist_hits``, ``misses``, ``collisions`` — see :meth:`stats`.
     """
 
     def __init__(self, capacity: int = 64, *, content: bool | None = None,
                  verify: bool = False,
-                 pinned: feature_cache.PinnedStore | None = None):
+                 pinned: feature_cache.PinnedStore | None = None,
+                 persist=None):
         self.capacity = capacity
         self.content = _content_enabled() if content is None else content
         self.verify = verify
         self.pinned = pinned if pinned is not None \
             else feature_cache.default_store()
+        self.persist = persist
         self._entries: OrderedDict = OrderedDict()  # canonical key -> _Entry
         self._by_id: dict = {}                      # identity key -> canonical
         self.hits = 0
         self.misses = 0
         self.id_hits = 0
         self.content_hits = 0
+        self.persist_hits = 0
         self.collisions = 0
 
     def __len__(self) -> int:
@@ -279,8 +294,50 @@ class PlanCache:
         observability of the whole §10 policy)."""
         return {"entries": len(self), "hits": self.hits,
                 "id_hits": self.id_hits, "content_hits": self.content_hits,
+                "persist_hits": self.persist_hits,
                 "misses": self.misses, "collisions": self.collisions,
                 "pinned": self.pinned.stats()}
+
+    # -- durability (DESIGN.md §13) -----------------------------------------
+
+    def save(self, persist=None) -> int:
+        """Flush every content-keyed entry to the snapshot store; returns
+        the number committed. With write-through active this is a no-op
+        flush for entries built before ``persist`` was attached (e.g. a
+        cache handed to :meth:`save` at shutdown)."""
+        store = persist if persist is not None else self.persist
+        if store is None:
+            return 0
+        n = 0
+        for ckey, entry in self._entries.items():
+            if entry.fingerprint is None:
+                continue
+            fp, statics = ckey
+            if store.put(("plan", fp, statics), entry.plan):
+                n += 1
+        return n
+
+    def load(self, persist=None) -> int:
+        """Rehydrate every verified on-disk plan into the content tier;
+        returns the number loaded. Corrupt/stale entries are dropped by
+        the store (``persist.dropped``), never raised. Loaded plans have
+        no identity aliases yet — the first lookup content-hits and
+        aliases as usual, with **zero** map searches."""
+        store = persist if persist is not None else self.persist
+        if store is None:
+            return 0
+        n = 0
+        for key, value in store.items():
+            if not (isinstance(key, tuple) and len(key) == 3
+                    and key[0] == "plan"):
+                continue
+            ckey = (key[1], key[2])
+            if ckey in self._entries:
+                continue
+            self._evict_to_capacity()
+            self._entries[ckey] = _Entry(value, OrderedDict(), key[1])
+            n += 1
+        return n
 
     # -- internals ----------------------------------------------------------
 
@@ -354,8 +411,19 @@ class PlanCache:
         else:
             ckey = idkey                           # identity-only entry
 
-        self.misses += 1
-        plan = build(fp)
+        plan = None
+        if fp is not None and self.persist is not None:
+            # durable read-through: a verified on-disk plan for this
+            # content key replays with zero map searches (DESIGN.md §13)
+            plan = self.persist.get(("plan", fp, statics))
+        if plan is not None:
+            self.hits += 1
+            self.persist_hits += 1
+        else:
+            self.misses += 1
+            plan = build(fp)
+            if fp is not None and self.persist is not None:
+                self.persist.put(("plan", fp, statics), plan)
         self._evict_to_capacity()
         self._entries[ckey] = _Entry(plan, OrderedDict(), fp)
         self._alias(ckey, idkey, arrays)

@@ -129,6 +129,13 @@ class ServeEngine:
       verify_cache: content-hit verification on the shared PlanCache
         (detects injected fingerprint collisions).
       recover_after: healthy ticks before the ladder steps down a level.
+      persist_dir: durability root (DESIGN.md §13). Plans and pinned
+        search structures snapshot under ``<persist_dir>/snap`` (warm
+        restarts replay seen geometries with zero map searches), and
+        every admitted request journals under ``<persist_dir>/journal``
+        until its terminal result — :meth:`recover` re-queues the
+        journaled in-flight work after a crash, shedding past-deadline
+        entries with the typed ``restart`` reason.
 
     ``submit`` + ``drain`` is the batch-replay arrangement
     (benchmarks/serve_replay.py); a live loop would interleave them.
@@ -140,7 +147,8 @@ class ServeEngine:
     def __init__(self, params, model_cfg: minkunet.MinkUNetConfig, *,
                  impl: str = "ref", queue: admission.AdmissionQueue | None = None,
                  max_batch: int | None = None, clock=time.monotonic,
-                 verify_cache: bool = False, recover_after: int = 2):
+                 verify_cache: bool = False, recover_after: int = 2,
+                 persist_dir: str | None = None):
         import os
         self.params = params
         self.model_cfg = model_cfg
@@ -151,10 +159,20 @@ class ServeEngine:
             clock=clock)
         self.max_batch = int(os.environ.get("REPRO_SERVE_MAX_BATCH", "8")) \
             if max_batch is None else max_batch
+        self.persist = None
+        self.journal = None
+        pinned = None
+        if persist_dir:
+            from repro.runtime import feature_cache, persist as persistlib
+            self.persist = persistlib.SnapshotStore(
+                os.path.join(persist_dir, "snap"))
+            self.journal = persistlib.SnapshotStore(
+                os.path.join(persist_dir, "journal"))
+            pinned = feature_cache.PinnedStore(persist=self.persist)
         self.cache = planlib.PlanCache(
             capacity=max(64, 8 * (2 * (len(model_cfg.enc)
                                        + len(model_cfg.dec)) + 2)),
-            verify=verify_cache)
+            verify=verify_cache, persist=self.persist, pinned=pinned)
         self.recover_after = recover_after
         self.level = 0
         self._healthy_ticks = 0
@@ -169,12 +187,57 @@ class ServeEngine:
     def submit(self, rid: str, coords, batch, valid, feats, *,
                deadline_s: float | None = None):
         """Admit one raw request; a typed rejection is terminal and
-        recorded immediately."""
+        recorded immediately. Admitted requests journal to disk
+        (DESIGN.md §13) until their terminal result, so a crash between
+        admit and answer is recoverable, not silent loss."""
         out = self.queue.submit(rid, coords, batch, valid, feats,
                                 deadline_s=deadline_s)
         if isinstance(out, admission.Rejection):
             self._record_rejection(out)
+        elif self.journal is not None:
+            # monotonic deadlines don't survive a process, so the journal
+            # carries the remaining budget as a wall-clock expiry
+            self.journal.put(("req", out.rid), {
+                "rid": out.rid, "coords": out.coords, "batch": out.batch,
+                "valid": out.valid, "feats": out.feats,
+                "bucket": out.bucket, "n_valid": out.n_valid,
+                "wall_deadline": time.time()
+                + (out.deadline - self.queue.clock())})
         return out
+
+    def recover(self) -> dict:
+        """Re-queue journaled in-flight requests after a restart.
+
+        Every verified journal entry whose deadline still holds is
+        restored to the admission queue (``serve.recovered``); expired
+        or un-restorable entries get a terminal typed ``restart``
+        rejection. Corrupt journal files are dropped by the store
+        (``persist.dropped``) — a torn journal write costs that one
+        request, never the engine. Returns ``{"recovered", "shed"}``.
+        """
+        if self.journal is None:
+            return {"recovered": 0, "shed": 0}
+        recovered = shed = 0
+        for key, val in list(self.journal.items()):
+            if not (isinstance(key, tuple) and len(key) == 2
+                    and key[0] == "req"):
+                continue
+            remaining = float(val["wall_deadline"]) - time.time()
+            now = self.clock()
+            req = admission.Request(
+                val["rid"], np.asarray(val["coords"]),
+                np.asarray(val["batch"]), np.asarray(val["valid"]),
+                np.asarray(val["feats"]), int(val["bucket"]),
+                int(val["n_valid"]), now + remaining, now)
+            out = self.queue.restore(req)
+            if isinstance(out, admission.Rejection):
+                self._record_rejection(out)
+                self.journal.delete(key)
+                shed += 1
+            else:
+                guard.health().note("serve.recovered")
+                recovered += 1
+        return {"recovered": recovered, "shed": shed}
 
     def _record_rejection(self, rej: admission.Rejection) -> None:
         if rej.reason == admission.ISOLATED_FAULT:
@@ -231,7 +294,18 @@ class ServeEngine:
     def step(self) -> list[ServeResult]:
         """One tick: assemble a batch, execute it with per-request
         isolation, update the degradation ladder. Returns this tick's
-        terminal results (also appended to ``self.results``)."""
+        terminal results (also appended to ``self.results``). Journal
+        entries of requests reaching a terminal state this tick are
+        deleted — a kill *during* the tick (the ``kill`` fault site
+        below) leaves them journaled for :meth:`recover`."""
+        fault.check(fault.KILL_SITE)        # mid-tick SIGKILL point
+        results = self._step()
+        if self.journal is not None:
+            for r in results:
+                self.journal.delete(("req", r.rid))
+        return results
+
+    def _step(self) -> list[ServeResult]:
         self.ticks += 1
         h0 = guard.health().snapshot()
         tick_results: list[ServeResult] = []
@@ -393,6 +467,8 @@ class ServeEngine:
             "latency_p50_s": float(np.percentile(lat, 50)) if lat else None,
             "latency_p99_s": float(np.percentile(lat, 99)) if lat else None,
             "cache": self.cache.stats(),
+            "persist": self.persist.stats() if self.persist else None,
+            "journal": self.journal.stats() if self.journal else None,
         }
 
 
@@ -424,6 +500,10 @@ def main() -> None:
     ap.add_argument("--health-json", default=None,
                     help="write the RuntimeHealth snapshot + serve stats "
                          "as JSON to this path")
+    ap.add_argument("--persist-dir", default=None,
+                    help="durability root for warm restarts + the request "
+                         "journal (default: REPRO_PERSIST_DIR; unset "
+                         "disables persistence) — DESIGN.md §13")
     args = ap.parse_args()
 
     buckets = tuple(int(x) for x in args.buckets.split(",") if x.strip()) \
@@ -434,8 +514,15 @@ def main() -> None:
     queue = admission.AdmissionQueue(buckets=buckets,
                                      grid_bits=cfg.grid_bits,
                                      batch_bits=cfg.batch_bits)
+    from repro.runtime import persist as persistlib
     engine = ServeEngine(params, cfg, impl=args.impl, queue=queue,
-                         max_batch=args.max_batch)
+                         max_batch=args.max_batch,
+                         persist_dir=args.persist_dir
+                         or persistlib.default_dir())
+    rec = engine.recover()
+    if rec["recovered"] or rec["shed"]:
+        print(f"journal recovery: re-queued {rec['recovered']}, "
+              f"shed {rec['shed']} past-deadline")
     t0 = time.monotonic()
     for rid, c, b, v, f in _demo_requests(args.requests, buckets):
         engine.submit(rid, c, b, v, f, deadline_s=args.deadline_s)

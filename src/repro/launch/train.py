@@ -105,7 +105,9 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
                     faults=None, ckpt_dir: str | None = None,
                     max_blocks: int | None = None, validate=None,
                     verify_cache: bool = False,
-                    max_retries_per_step: int = 2) -> dict:
+                    max_retries_per_step: int = 2,
+                    persist_dir: str | None = None, resume: bool = False,
+                    total_steps: int | None = None) -> dict:
     """Train MinkUNet for ``steps`` steps with cross-step plan caching.
 
     Every step re-voxelizes the scene into **freshly allocated** arrays
@@ -141,23 +143,43 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
     count), ``compiled_steps``, the cache's :meth:`stats`, plus
     ``state_digest``, ``recoveries`` / ``skipped_batches`` /
     ``ckpt_failures`` and the run's health-counter ``health`` delta.
+
+    Warm restarts (DESIGN.md §13): with ``persist_dir`` the PlanCache
+    and PinnedStore are backed by a durable
+    :class:`~repro.runtime.persist.SnapshotStore` under
+    ``<persist_dir>/snap`` — a restarted demo replays previously-seen
+    geometries with **zero** map searches (``mapsearch_calls == 0`` on a
+    warm dir) — and ``resume=True`` continues from the newest *verified*
+    checkpoint in ``ckpt_dir``. ``total_steps`` pins the lr-schedule
+    horizon independently of ``steps``, so a killed-and-resumed run
+    reaches a state **bit-identical** to the uninterrupted one
+    (benchmarks/restart_replay.py gates on exactly this).
     """
     import hashlib
+    import os as _os
     import tempfile
 
     from repro.core import plan as planlib, spconv
     from repro.data import pointcloud
     from repro.models import minkunet
-    from repro.runtime import fault as faultlib, guard
+    from repro.runtime import fault as faultlib, feature_cache, guard
 
     cfg = cfg or minkunet.MinkUNetConfig(stem=8, enc=(8, 16), dec=(16, 8),
                                          classes=4, blocks=1)
     params = minkunet.init_model(cfg, jax.random.key(seed))
-    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=max(steps, 2),
+    opt_cfg = adamw.AdamWConfig(lr=1e-3,
+                                total_steps=max(total_steps or steps, 2),
                                 warmup_steps=1)
     state = (params, adamw.init(params))
-    cache = cache if cache is not None \
-        else planlib.PlanCache(verify=verify_cache)
+    pstore = None
+    if persist_dir:
+        from repro.runtime import persist as persistlib
+        pstore = persistlib.SnapshotStore(_os.path.join(persist_dir, "snap"))
+    if cache is None:
+        cache = planlib.PlanCache(
+            verify=verify_cache, persist=pstore,
+            pinned=feature_cache.PinnedStore(persist=pstore)
+            if pstore is not None else None)
     planlib.reset_mapsearch_counter()
     h0 = guard.health().snapshot()
 
@@ -187,6 +209,7 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
     compiled = [0]
 
     def runner_step(state, batch):
+        faultlib.check(faultlib.KILL_SITE)     # mid-step SIGKILL point
         plans = minkunet.build_plans(batch["coords"], batch["batch"],
                                      batch["valid"], cfg, cache=cache,
                                      n_max=max_blocks)
@@ -209,6 +232,9 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
             max_retries_per_step=max_retries_per_step,
             max_skipped_batches=0),
         runner_step, cloud_at, state)
+    resumed_from = None
+    if resume and runner.restore_latest():
+        resumed_from = runner.step
     with faultlib.inject(faults):
         losses = runner.run(steps)
 
@@ -226,6 +252,8 @@ def run_spconv_demo(steps: int = 2, *, voxels: int = 128, cfg=None,
         "recoveries": runner.recoveries,
         "skipped_batches": runner.skipped_batches,
         "ckpt_failures": runner.ckpt_failures,
+        "resumed_from": resumed_from,
+        "persist": pstore.stats() if pstore is not None else None,
         "health": guard.health().delta(h0),
     }
 
@@ -250,17 +278,36 @@ def main() -> None:
     ap.add_argument("--health-json", default=None,
                     help="write the RuntimeHealth snapshot as structured "
                          "JSON to this path after the run")
+    ap.add_argument("--persist-dir", default=None,
+                    help="durable snapshot-store directory for warm "
+                         "restarts (default: REPRO_PERSIST_DIR; unset "
+                         "disables persistence) — DESIGN.md §13")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume --arch minkunet from the newest verified "
+                         "checkpoint in --ckpt-dir")
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="lr-schedule horizon when resuming a partial run "
+                         "(default: --steps)")
     args = ap.parse_args()
 
     if args.arch == "minkunet":
+        from repro.runtime import persist as persistlib
         res = run_spconv_demo(steps=args.steps, voxels=args.voxels,
-                              impl=None if args.impl == "auto" else args.impl)
+                              impl=None if args.impl == "auto" else args.impl,
+                              persist_dir=args.persist_dir
+                              or persistlib.default_dir(),
+                              ckpt_dir=args.ckpt_dir if args.resume else None,
+                              resume=args.resume,
+                              total_steps=args.total_steps)
+        # a warm restart rehydrates every plan from the persist dir, so
+        # zero searches is the best case, not a broken flat count
+        warm = res["persist"] is not None and res["mapsearch_calls"] == 0
         flat = res["mapsearch_calls"] == res["searches_per_cloud"]
         print(f"arch=minkunet steps={res['steps']} "
               f"first_loss={res['losses'][0]:.4f} "
               f"last_loss={res['losses'][-1]:.4f} "
               f"map_searches={res['mapsearch_calls']} "
-              f"(flat={'yes' if flat else 'NO'}) "
+              f"(flat={'warm' if warm else 'yes' if flat else 'NO'}) "
               f"compiled_steps={res['compiled_steps']} "
               f"content_hits={res['cache']['content_hits']} "
               f"recoveries={res['recoveries']} "

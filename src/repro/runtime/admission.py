@@ -66,9 +66,12 @@ REJECT_INVALID = "invalid"
 REJECT_OVERSIZE = "oversize"
 #: a persistent injected/runtime fault quarantined this request
 ISOLATED_FAULT = "fault"
+#: in flight when the process died; its deadline expired before the
+#: restarted engine could re-queue it (DESIGN.md §13 journal recovery)
+SHED_RESTART = "restart"
 
 #: reasons counted as *shed* (load, not request defects) vs *rejected*
-SHED_REASONS = (SHED_QUEUE_FULL, SHED_DEADLINE, SHED_OVERLOAD)
+SHED_REASONS = (SHED_QUEUE_FULL, SHED_DEADLINE, SHED_OVERLOAD, SHED_RESTART)
 REJECT_REASONS = (REJECT_INVALID, REJECT_OVERSIZE)
 
 #: default padding-bucket classes (voxel budgets); REPRO_SERVE_BUCKETS
@@ -281,6 +284,25 @@ class AdmissionQueue:
         req = Request(rid, cq, bq, vq, fq, bucket, n, ddl, now)
         self._q.append(req)
         self._note("admit.ok")
+        return req
+
+    def restore(self, req: Request) -> Request | Rejection:
+        """Re-enqueue an already-quantized request (the serve journal's
+        restart-recovery path, DESIGN.md §13): no re-validation or
+        re-quantization — the journaled buffers are the admitted ones —
+        but the capacity bound still holds, and an expired deadline at
+        restore time is shed as :data:`SHED_RESTART` rather than
+        occupying a slot it can no longer use."""
+        if len(self._q) >= self.capacity:
+            self._note("admit.shed.queue_full")
+            return Rejection(req.rid, SHED_QUEUE_FULL,
+                             f"queue at capacity {self.capacity}")
+        if self.clock() > req.deadline:
+            self._note(f"admit.shed.{SHED_RESTART}")
+            return Rejection(req.rid, SHED_RESTART,
+                             "deadline expired across the restart")
+        self._q.append(req)
+        self._note("admit.restored")
         return req
 
     # -- dequeue + deadline shedding ----------------------------------------

@@ -37,6 +37,14 @@ deterministically fires :class:`InjectedFault` at named sites —
   ``batch``        launch/spconv_serve.ServeEngine tick (attacks batch
                    assembly; persistent failure isolates only the
                    requests of that tick)
+  ``persist.save`` runtime/persist.SnapshotStore.put — absorbed, never
+                   raised to callers: the write is skipped and counted
+  ``persist.load`` runtime/persist.SnapshotStore.get — absorbed: the
+                   read degrades to a cold miss
+  ``kill``         (schedule-only, not in FAULT_SITES) SIGKILLs the
+                   process at the fired call — checkpoint/_write and
+                   SnapshotStore.put check it mid-write, ServeEngine
+                   per tick; driven by benchmarks/restart_replay.py
 
 by per-site call index (``schedule``) or by seeded hash rate (``rate``).
 Faults are one-shot per call index, so the guard layer's retry-same-impl
@@ -64,7 +72,15 @@ log = logging.getLogger("repro.fault")
 
 #: every named injection site
 FAULT_SITES = ("search", "gemm", "plan", "fingerprint", "checkpoint",
-               "admit", "batch")
+               "admit", "batch", "persist.save", "persist.load")
+
+#: the hard-kill site: ``check("kill")`` SIGKILLs the *current process*
+#: instead of raising — the restart gate (benchmarks/restart_replay.py)
+#: schedules it inside checkpoint writes, snapshot writes, and serve
+#: ticks to prove a mid-write death leaves recoverable state. Kept out
+#: of FAULT_SITES so ``rate=``-mode plans never kill by accident; it
+#: fires only when a schedule names it explicitly.
+KILL_SITE = "kill"
 
 #: the sites reachable from the training demo (the chaos train gate
 #: schedules exactly these; 'admit'/'batch' live on the serving path and
@@ -155,10 +171,21 @@ def inject(plan: FaultPlan | None):
 
 
 def check(site: str) -> None:
-    """Raise :class:`InjectedFault` iff the active plan fires here."""
+    """Raise :class:`InjectedFault` iff the active plan fires here.
+
+    The :data:`KILL_SITE` is special: instead of raising, a firing
+    ``check("kill")`` SIGKILLs the process on the spot — no cleanup, no
+    atexit, exactly what a node loss looks like. Only schedule-mode
+    plans can fire it (it is not in FAULT_SITES, so rate mode never
+    selects it)."""
     plan = _ACTIVE[0]
     if plan is not None and plan.fires(site):
         idx = plan.fired[site][-1]
+        if site == KILL_SITE:
+            import os
+            import signal
+            log.warning("injected SIGKILL at call=%d", idx)
+            os.kill(os.getpid(), signal.SIGKILL)
         _note_fault(site)
         log.warning("injecting fault at site=%r call=%d", site, idx)
         raise InjectedFault(site, idx)

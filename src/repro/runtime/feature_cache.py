@@ -174,14 +174,26 @@ class PinnedStore:
     plans (cached tier, count-bounded FIFO) may churn while the small
     search structures (pinned tier, byte-bounded) stay resident — that is
     the non-uniform part. See DESIGN.md §10.
+
+    With a :class:`~repro.runtime.persist.SnapshotStore` attached
+    (``persist=``, DESIGN.md §13) the pinned tier is durable too: pins
+    write through to disk, and a memory miss reads through before
+    reporting cold — a restarted process re-pins each verified on-disk
+    search structure instead of rebuilding it. Verification anchors are
+    *not* persisted (they are the key's full source arrays); a
+    rehydrated entry is therefore anchorless, so a ``verify=True``
+    reader conservatively drops it and rebuilds — warm restarts serve
+    non-verifying readers (the default) only.
     """
 
-    def __init__(self, capacity_bytes: int = 32 * 2 ** 20):
+    def __init__(self, capacity_bytes: int = 32 * 2 ** 20, *, persist=None):
         self.capacity_bytes = capacity_bytes
+        self.persist = persist
         # key -> (pytree, bytes, anchor arrays | None)
         self._entries: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.persist_hits = 0
         self.evictions = 0
         self.collisions = 0
 
@@ -212,6 +224,13 @@ class PinnedStore:
         even on a store shared with non-verifying caches.
         """
         entry = self._entries.get(key)
+        if entry is None and self.persist is not None and not verify:
+            value = self.persist.get(("pinned", key))
+            if value is not None:
+                self.persist_hits += 1
+                self.hits += 1
+                self.put(key, value, _writethrough=False)
+                return value
         if entry is None:
             self.misses += 1
             return None
@@ -228,7 +247,7 @@ class PinnedStore:
         self.hits += 1
         return entry[0]
 
-    def put(self, key, value, anchor=None) -> None:
+    def put(self, key, value, anchor=None, *, _writethrough=True) -> None:
         """Pin ``value`` under ``key``, evicting FIFO to fit the budget.
 
         Tracer leaves are refused (a traced table is jit-transient —
@@ -236,7 +255,10 @@ class PinnedStore:
         ``anchor`` (the key's source arrays) enables collision
         verification on :meth:`get`; its bytes count against the budget,
         since in a re-allocated-buffer loop the store's reference may be
-        the only thing keeping the anchor alive on device.
+        the only thing keeping the anchor alive on device. With a
+        snapshot store attached the pin writes through to disk
+        (anchorless — see class doc); ``_writethrough=False`` is the
+        internal rehydration path that must not echo disk back to disk.
         """
         if any(isinstance(leaf, jax.core.Tracer)
                for leaf in jax.tree_util.tree_leaves((value, anchor))):
@@ -252,14 +274,49 @@ class PinnedStore:
             self.evictions += 1
         self._entries[key] = (value, size,
                               tuple(anchor) if anchor is not None else None)
+        if self.persist is not None and _writethrough:
+            self.persist.put(("pinned", key), value)
 
     def clear(self) -> None:
         self._entries.clear()
+
+    # -- durability (DESIGN.md §13) -----------------------------------------
+
+    def save(self, persist=None) -> int:
+        """Flush every pinned entry to the snapshot store (anchorless);
+        returns the number committed."""
+        store = persist if persist is not None else self.persist
+        if store is None:
+            return 0
+        n = 0
+        for key, (value, _, _) in self._entries.items():
+            if store.put(("pinned", key), value):
+                n += 1
+        return n
+
+    def load(self, persist=None) -> int:
+        """Re-pin every verified on-disk search structure; returns the
+        number loaded. Corrupt/stale files are dropped by the store
+        (``persist.dropped``), never raised."""
+        store = persist if persist is not None else self.persist
+        if store is None:
+            return 0
+        n = 0
+        for pkey, value in store.items():
+            if not (isinstance(pkey, tuple) and len(pkey) == 2
+                    and pkey[0] == "pinned"):
+                continue
+            if pkey[1] in self._entries:
+                continue
+            self.put(pkey[1], value, _writethrough=False)
+            n += 1
+        return n
 
     def stats(self) -> dict:
         return {"entries": len(self),
                 "resident_bytes": self.resident_bytes(),
                 "hits": self.hits, "misses": self.misses,
+                "persist_hits": self.persist_hits,
                 "evictions": self.evictions, "collisions": self.collisions}
 
 

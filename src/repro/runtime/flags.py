@@ -92,6 +92,36 @@ the others bind at construction or import as noted):
     truncated keep-first) | ``off``. Read by
     :func:`repro.runtime.admission.serve_policy`.
 
+``REPRO_PERSIST_DIR``
+    Durability root for warm restarts (DESIGN.md §13). When set (and not
+    overridden by ``--persist-dir``), ``launch/train.py`` and
+    ``launch/spconv_serve.py`` open a
+    :class:`repro.runtime.persist.SnapshotStore` under
+    ``<dir>/snap`` (durable PlanCache + PinnedStore entries — restarted
+    processes replay seen geometries with zero map searches) and the
+    serve engine journals admitted requests under ``<dir>/journal``.
+    Unset (the default) disables persistence entirely. Read per launch
+    by :func:`repro.runtime.persist.default_dir`.
+
+``REPRO_PERSIST_MAX_BYTES``
+    On-disk byte budget per snapshot store (default ``268435456`` =
+    256 MiB); oldest entries are evicted to admit new ones, and an
+    entry larger than the whole budget is skipped. Re-read per store
+    construction by :func:`repro.runtime.persist.default_max_bytes`.
+
+``REPRO_PERSIST_VERIFY``
+    Set to ``0`` to skip sha256 verification when loading snapshot
+    entries (version/salt/key checks always run). Default on — a
+    bit-flipped entry is then dropped and counted ``persist.dropped``
+    instead of decoded. Re-read per store construction by
+    :func:`repro.runtime.persist._verify_enabled`.
+
+``REPRO_PERSIST_SALT``
+    Override the snapshot invalidation salt (default: format version +
+    codec revision + jax version, :func:`repro.runtime.persist.default_salt`).
+    Entries written under a different salt read as stale and cold-start;
+    tests use this to model a code-version bump.
+
 ``REPRO_BENCH_FAST``
     Set to ``1`` for the reduced benchmark sweep (CI); read by
     ``benchmarks/run.py``.

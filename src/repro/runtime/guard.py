@@ -27,6 +27,7 @@ REPRO_GUARD_REPLAN, REPRO_GUARD_FALLBACK, REPRO_GUARD_COOLDOWN.
 """
 from __future__ import annotations
 
+import contextlib
 import logging
 import os
 import threading
@@ -89,6 +90,37 @@ def reset_health() -> None:
     _HEALTH.reset()
     _QUARANTINE.clear()
     _CAPACITY_HINTS.clear()
+
+
+@contextlib.contextmanager
+def scoped_health():
+    """Swap in a fresh :class:`RuntimeHealth` (and empty quarantine /
+    capacity-hint state) for the with-block, restoring the previous bag
+    and state on exit.
+
+    The process-wide ``_HEALTH`` is deliberately mutable and shared —
+    that is what lets every layer note counters without plumbing — but
+    it leaks between test cases. Fixtures wrap each case in this scope
+    so counters can't bleed: assertions inside the block see only the
+    block's own events, and the enclosing process's tallies are intact
+    afterwards. Yields the scoped bag (``health()`` returns the same
+    object inside the block).
+    """
+    global _HEALTH
+    prev_health = _HEALTH
+    prev_quarantine = dict(_QUARANTINE)
+    prev_hints = dict(_CAPACITY_HINTS)
+    _HEALTH = RuntimeHealth()
+    _QUARANTINE.clear()
+    _CAPACITY_HINTS.clear()
+    try:
+        yield _HEALTH
+    finally:
+        _HEALTH = prev_health
+        _QUARANTINE.clear()
+        _QUARANTINE.update(prev_quarantine)
+        _CAPACITY_HINTS.clear()
+        _CAPACITY_HINTS.update(prev_hints)
 
 
 def dump_health_json(path: str, meta: dict | None = None) -> dict:

@@ -1,0 +1,460 @@
+"""Durable content-addressed snapshots: crash-safe persistence layer.
+
+The warm-restart substrate of DESIGN.md §13. PRs 5-7 made map search and
+plan compilation survivable *within* a process (content-addressed
+PlanCache, byte-bounded PinnedStore, fault-isolated serving); this module
+makes them survive the process itself. A :class:`SnapshotStore` is a
+directory of versioned, per-entry-checksummed, content-keyed files that a
+restarted `launch/train.py` or `launch/spconv_serve.py` rehydrates, so a
+redeploy pays **zero** extra map searches for previously-seen geometries
+— exactly the latency cliff the paper's non-uniform caching exists to
+avoid.
+
+Durability discipline (every write, every entry):
+
+  * **atomic commit** — serialize to a same-directory temp file, flush +
+    ``fsync``, then ``os.replace`` onto the final name and fsync the
+    directory. A kill at any instant leaves either the old bytes or the
+    new bytes, never a torn file visible under the entry's name.
+  * **per-entry verification** — each entry carries a magic string, a
+    format version, a salt (jax version + snapshot codec revision, see
+    :func:`default_salt`), the encoded key, and a sha256 over spec +
+    payload. Loads verify all of it.
+  * **never crash on bad state** — a truncated, bit-flipped, foreign,
+    stale-salted, or wrong-versioned file is *silently dropped* (deleted
+    and counted under the ``persist.dropped`` RuntimeHealth counter) and
+    reads as a cold entry. Corrupt on-disk state can cost a rebuild,
+    never a dead process. ``benchmarks/restart_replay.py`` fuzzes this
+    contract under SIGKILL and bit-flip sweeps.
+
+Keys are array-free pytrees (tuples/ints/strings — in practice the
+PlanCache's 96-bit content fingerprints + build statics + mesh
+fingerprint); values are pytrees of arrays and repro NamedTuples
+(ConvPlan, TapTiles, StridedMaps, QueryTable), round-tripped bit-exactly
+through a restricted structural codec (:func:`encode` / :func:`decode`).
+
+Fault sites ``persist.save`` / ``persist.load`` (runtime/fault.py) are
+checked inside :meth:`SnapshotStore.put` / :meth:`SnapshotStore.get` and
+**absorbed**: an injected snapshot-I/O fault degrades to a skipped write
+or a cold read (counted ``persist.fault``), never an exception — the
+chaos gate asserts the training digest is unchanged under them. The
+``kill`` site inside :meth:`put` (between the temp write and the rename)
+is the mid-snapshot SIGKILL point of the restart gate.
+
+Flags (runtime/flags.py): ``REPRO_PERSIST_DIR`` (default store location
+for the launch entry points), ``REPRO_PERSIST_MAX_BYTES`` (on-disk byte
+budget, oldest-first eviction), ``REPRO_PERSIST_VERIFY`` (``0`` skips
+checksum verification on load; version/salt are always checked),
+``REPRO_PERSIST_SALT`` (salt override — restart tests use it to model a
+code-version bump invalidating every entry).
+"""
+from __future__ import annotations
+
+import hashlib
+import importlib
+import io
+import json
+import logging
+import os
+
+import numpy as np
+import jax
+
+log = logging.getLogger("repro.persist")
+
+#: bump when the entry format or the value codec changes incompatibly —
+#: old entries then read as stale and cold-start instead of mis-decoding
+SNAPSHOT_VERSION = 1
+
+#: codec revision: part of the salt, bumped when the *semantics* of
+#: persisted values change (e.g. a ConvPlan field reorder) even if the
+#: file format itself still parses
+CODEC_REVISION = "2026-08"
+
+_MAGIC = b"SPOCTA-SNAP\n"
+_SUFFIX = ".snap"
+
+
+def default_salt() -> str:
+    """The invalidation salt baked into every entry (DESIGN.md §13).
+
+    Combines the snapshot format version, the codec revision, and the
+    running jax version: a plan built under one jax may embed lowering
+    and layout decisions of that jax, so an upgraded process must
+    cold-start rather than replay stale entries. ``REPRO_PERSIST_SALT``
+    overrides (tests model salt churn with it).
+    """
+    env = os.environ.get("REPRO_PERSIST_SALT")
+    if env:
+        return env
+    return f"v{SNAPSHOT_VERSION}/{CODEC_REVISION}/jax-{jax.__version__}"
+
+
+def _verify_enabled() -> bool:
+    return os.environ.get("REPRO_PERSIST_VERIFY", "1") != "0"
+
+
+def default_max_bytes() -> int:
+    """REPRO_PERSIST_MAX_BYTES: on-disk budget (default 256 MiB)."""
+    return int(os.environ.get("REPRO_PERSIST_MAX_BYTES",
+                              str(256 * 2 ** 20)))
+
+
+def default_dir() -> str | None:
+    """REPRO_PERSIST_DIR, or None when persistence is off."""
+    return os.environ.get("REPRO_PERSIST_DIR") or None
+
+
+# ---------------------------------------------------------------------------
+# Structural codec: restricted pytrees <-> (JSON spec, array list)
+# ---------------------------------------------------------------------------
+
+def encode(obj, arrays: list | None = None):
+    """Encode ``obj`` into a JSON-able spec plus a flat array list.
+
+    Handles None, bool/int/float/str, numpy/jax arrays, tuples, lists,
+    string-keyed dicts, and NamedTuples from ``repro.*`` modules (stored
+    by import path, so ConvPlan/TapTiles/StridedMaps/QueryTable
+    round-trip as themselves). Raises TypeError on anything else — the
+    store only ever persists plan-layer structures, and refusing keeps
+    the format closed. Tracers are refused too (a traced value is
+    jit-transient; persisting it would leak the trace).
+    """
+    if arrays is None:
+        arrays = []
+    if obj is None:
+        return {"t": "none"}, arrays
+    if isinstance(obj, jax.core.Tracer):
+        raise TypeError("cannot persist a traced value")
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "py", "v": obj}, arrays
+    if isinstance(obj, (np.ndarray, np.generic, jax.Array)):
+        arrays.append(np.asarray(obj))
+        return {"t": "arr", "i": len(arrays) - 1}, arrays
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+        cls = type(obj)
+        if not cls.__module__.startswith("repro."):
+            raise TypeError(f"refusing to persist foreign NamedTuple {cls}")
+        specs = [encode(v, arrays)[0] for v in obj]
+        return {"t": "nt", "cls": f"{cls.__module__}:{cls.__qualname__}",
+                "v": specs}, arrays
+    if isinstance(obj, (tuple, list)):
+        specs = [encode(v, arrays)[0] for v in obj]
+        return {"t": "tuple" if isinstance(obj, tuple) else "list",
+                "v": specs}, arrays
+    if isinstance(obj, dict):
+        if not all(isinstance(k, str) for k in obj):
+            raise TypeError("persisted dicts must be string-keyed")
+        return {"t": "dict",
+                "v": {k: encode(v, arrays)[0] for k, v in obj.items()}}, \
+            arrays
+    raise TypeError(f"cannot persist value of type {type(obj)!r}")
+
+
+def decode(spec, arrays, *, device: bool = True):
+    """Inverse of :func:`encode`; array leaves become jnp (``device``)
+    or numpy arrays. Class references are resolved only inside
+    ``repro.*`` — a tampered spec cannot import arbitrary code."""
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "py":
+        return spec["v"]
+    if t == "arr":
+        a = arrays[spec["i"]]
+        return jax.numpy.asarray(a) if device else a
+    if t == "tuple":
+        return tuple(decode(s, arrays, device=device) for s in spec["v"])
+    if t == "list":
+        return [decode(s, arrays, device=device) for s in spec["v"]]
+    if t == "dict":
+        return {k: decode(s, arrays, device=device)
+                for k, s in spec["v"].items()}
+    if t == "nt":
+        mod, _, qual = spec["cls"].partition(":")
+        if not mod.startswith("repro."):
+            raise ValueError(f"refusing foreign class {spec['cls']!r}")
+        cls = importlib.import_module(mod)
+        for part in qual.split("."):
+            cls = getattr(cls, part)
+        return cls(*(decode(s, arrays, device=device) for s in spec["v"]))
+    raise ValueError(f"unknown spec tag {t!r}")
+
+
+def _key_json(key) -> str:
+    spec, arrays = encode(key)
+    if arrays:
+        raise TypeError("snapshot keys must be array-free")
+    return json.dumps(spec, sort_keys=True, separators=(",", ":"))
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _note(name: str, n: int = 1) -> None:
+    from repro.runtime import guard  # deferred: guard is import-light but
+    guard.health().note(name, n)     # keep persist importable standalone
+
+
+# ---------------------------------------------------------------------------
+# The store
+# ---------------------------------------------------------------------------
+
+class SnapshotStore:
+    """Durable, content-keyed, checksummed on-disk store (DESIGN.md §13).
+
+    One file per entry, named by the sha256 of the encoded key. Entries
+    are written atomically (temp + fsync + ``os.replace``) and verified
+    on read (magic, version, salt, key match, sha256 over spec +
+    payload); anything that fails verification is deleted, counted
+    under ``persist.dropped``, and served as a miss — the loader never
+    raises on bad state.
+
+    Args:
+      directory: the store directory (created on first write).
+      max_bytes: on-disk budget (None: ``REPRO_PERSIST_MAX_BYTES``).
+        Oldest entries (by mtime) are evicted to admit new ones; an
+        entry larger than the whole budget is skipped, not written.
+      verify: checksum verification on load (None:
+        ``REPRO_PERSIST_VERIFY``; version/salt/key are always checked).
+      salt: invalidation salt (None: :func:`default_salt`).
+
+    Counters (``stats()``): ``saves`` / ``save_skips`` / ``hits`` /
+    ``misses`` / ``dropped`` / ``evictions`` / ``faults`` — mirrored
+    into the process-wide RuntimeHealth bag under ``persist.*``.
+    """
+
+    def __init__(self, directory: str, *, max_bytes: int | None = None,
+                 verify: bool | None = None, salt: str | None = None):
+        self.directory = directory
+        self.max_bytes = default_max_bytes() if max_bytes is None \
+            else max_bytes
+        self.verify = _verify_enabled() if verify is None else verify
+        self.salt = default_salt() if salt is None else salt
+        self.saves = 0
+        self.save_skips = 0
+        self.hits = 0
+        self.misses = 0
+        self.dropped = 0
+        self.evictions = 0
+        self.faults = 0
+
+    # -- paths ----------------------------------------------------------------
+
+    def _path_for(self, key_json: str) -> str:
+        name = hashlib.sha256(key_json.encode()).hexdigest()[:40]
+        return os.path.join(self.directory, name + _SUFFIX)
+
+    def _entry_paths(self) -> list[str]:
+        if not os.path.isdir(self.directory):
+            return []
+        return [os.path.join(self.directory, n)
+                for n in sorted(os.listdir(self.directory))
+                if n.endswith(_SUFFIX) and not n.startswith(".")]
+
+    def resident_bytes(self) -> int:
+        total = 0
+        for p in self._entry_paths():
+            try:
+                total += os.path.getsize(p)
+            except OSError:
+                pass
+        return total
+
+    def __len__(self) -> int:
+        return len(self._entry_paths())
+
+    # -- write ----------------------------------------------------------------
+
+    def put(self, key, value) -> bool:
+        """Persist ``value`` under ``key`` atomically; True on commit.
+
+        Refuses (False, counted) on traced leaves, unencodable values,
+        an injected ``persist.save`` fault, an entry over the byte
+        budget, or any I/O error — a failed save is a cold future
+        entry, never a raised exception. The ``kill`` fault site fires
+        between the temp write and the rename (the torn-write instant
+        the restart gate SIGKILLs at).
+        """
+        from repro.runtime import fault
+        try:
+            fault.check("persist.save")
+        except fault.InjectedFault:
+            self.faults += 1
+            _note("persist.fault")
+            return False
+        try:
+            key_json = _key_json(key)
+            spec, arrays = encode(value)
+        except TypeError as e:
+            self.save_skips += 1
+            log.debug("snapshot save skipped: %s", e)
+            return False
+        spec_json = json.dumps(spec, sort_keys=True, separators=(",", ":"))
+        buf = io.BytesIO()
+        np.savez(buf, **{f"a{i}": a for i, a in enumerate(arrays)})
+        payload = buf.getvalue()
+        digest = hashlib.sha256(spec_json.encode() + payload).hexdigest()
+        header = json.dumps(
+            {"version": SNAPSHOT_VERSION, "salt": self.salt,
+             "sha256": digest, "nbytes": len(payload),
+             "key": json.loads(key_json), "spec": json.loads(spec_json)},
+            sort_keys=True, separators=(",", ":")).encode()
+        blob = _MAGIC + header + b"\n" + payload
+        if len(blob) > self.max_bytes:
+            self.save_skips += 1
+            return False
+        final = self._path_for(key_json)
+        tmp = os.path.join(self.directory,
+                           f".tmp-{os.path.basename(final)}-{os.getpid()}")
+        try:
+            os.makedirs(self.directory, exist_ok=True)
+            self._evict_for(len(blob), keep=final)
+            with open(tmp, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            fault.check("kill")          # mid-snapshot SIGKILL point
+            os.replace(tmp, final)       # atomic commit
+            _fsync_dir(self.directory)
+        except OSError as e:
+            self.save_skips += 1
+            _note("persist.save_error")
+            log.warning("snapshot save failed for %s: %s", final, e)
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+        self.saves += 1
+        _note("persist.saved")
+        return True
+
+    def _evict_for(self, incoming: int, keep: str) -> None:
+        """Oldest-first eviction to fit ``incoming`` bytes in budget."""
+        paths = [p for p in self._entry_paths() if p != keep]
+        try:
+            paths.sort(key=os.path.getmtime)
+        except OSError:
+            pass
+        total = self.resident_bytes()
+        for p in paths:
+            if total + incoming <= self.max_bytes:
+                return
+            try:
+                total -= os.path.getsize(p)
+                os.unlink(p)
+                self.evictions += 1
+                _note("persist.evicted")
+            except OSError:
+                pass
+
+    # -- read -----------------------------------------------------------------
+
+    def _read_verified(self, path: str, expect_key_json: str | None):
+        """Decode one entry file, or None (dropping it) on any defect."""
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+            if not blob.startswith(_MAGIC):
+                raise ValueError("bad magic")
+            rest = blob[len(_MAGIC):]
+            nl = rest.index(b"\n")
+            header = json.loads(rest[:nl])
+            payload = rest[nl + 1:]
+            if header.get("version") != SNAPSHOT_VERSION:
+                raise ValueError(f"version {header.get('version')!r}")
+            if header.get("salt") != self.salt:
+                raise ValueError("stale salt")
+            if len(payload) != header.get("nbytes"):
+                raise ValueError("truncated payload")
+            spec = header["spec"]
+            key_json = json.dumps(header["key"], sort_keys=True,
+                                  separators=(",", ":"))
+            if expect_key_json is not None and key_json != expect_key_json:
+                raise ValueError("key mismatch")
+            if self.verify:
+                spec_json = json.dumps(spec, sort_keys=True,
+                                       separators=(",", ":"))
+                digest = hashlib.sha256(
+                    spec_json.encode() + payload).hexdigest()
+                if digest != header.get("sha256"):
+                    raise ValueError("checksum mismatch")
+            with np.load(io.BytesIO(payload)) as data:
+                arrays = [data[f"a{i}"] for i in range(len(data.files))]
+            return decode(header["key"], [], device=False), \
+                decode(spec, arrays)
+        except Exception as e:                       # noqa: BLE001
+            # torn/bit-flipped/foreign/stale: a cold entry, not a crash
+            self.dropped += 1
+            _note("persist.dropped")
+            log.warning("dropping corrupt/stale snapshot %s: %s", path, e)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+
+    def get(self, key):
+        """Verified value for ``key``, or None (cold). Never raises:
+        corrupt/stale entries are dropped + counted, injected
+        ``persist.load`` faults read as misses."""
+        from repro.runtime import fault
+        try:
+            fault.check("persist.load")
+        except fault.InjectedFault:
+            self.faults += 1
+            _note("persist.fault")
+            return None
+        try:
+            key_json = _key_json(key)
+        except TypeError:
+            self.misses += 1
+            return None
+        path = self._path_for(key_json)
+        if not os.path.isfile(path):
+            self.misses += 1
+            return None
+        out = self._read_verified(path, key_json)
+        if out is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        _note("persist.loaded")
+        return out[1]
+
+    def delete(self, key) -> None:
+        try:
+            os.unlink(self._path_for(_key_json(key)))
+        except (OSError, TypeError):
+            pass
+
+    def items(self):
+        """Iterate verified ``(key, value)`` pairs; corrupt/stale/foreign
+        entries are dropped + counted, never raised (warm-restart bulk
+        loads walk this)."""
+        for path in self._entry_paths():
+            out = self._read_verified(path, None)
+            if out is not None:
+                yield out
+
+    def stats(self) -> dict:
+        return {"entries": len(self), "resident_bytes": self.resident_bytes(),
+                "saves": self.saves, "save_skips": self.save_skips,
+                "hits": self.hits, "misses": self.misses,
+                "dropped": self.dropped, "evictions": self.evictions,
+                "faults": self.faults}
+
+
+def open_default(directory: str | None = None) -> SnapshotStore | None:
+    """A store at ``directory`` (or ``REPRO_PERSIST_DIR``); None when
+    neither is set — callers then run memory-only, the pre-§13 mode."""
+    directory = directory or default_dir()
+    if not directory:
+        return None
+    return SnapshotStore(directory)

@@ -1,0 +1,369 @@
+"""Durability layer (DESIGN.md §13): snapshot store, codec, corruption
+fuzz, cache rehydration, checkpoint digests, journal restore."""
+import dataclasses
+import json
+import os
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core import plan as planlib
+from repro.runtime import admission, fault, feature_cache, guard, persist
+
+
+@pytest.fixture(autouse=True)
+def _fresh_guard_state():
+    fault.uninstall()
+    with guard.scoped_health():
+        yield
+    fault.uninstall()
+
+
+def _store(tmp_path, **kw):
+    return persist.SnapshotStore(str(tmp_path / "snap"), **kw)
+
+
+def _cloud(seed: int = 0, n: int = 64, ext: int = 16):
+    rng = np.random.default_rng(seed)
+    lin = rng.choice(ext ** 3, size=n, replace=False)
+    coords = jnp.asarray(np.stack(
+        [lin % ext, (lin // ext) % ext, lin // ext ** 2], -1)
+        .astype(np.int32))
+    return coords, jnp.zeros((n,), jnp.int32), jnp.ones((n,), bool)
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+def test_codec_roundtrips_structure_exactly():
+    val = {"a": (1, 2.5, "x", None, True),
+           "b": [np.arange(4, dtype=np.int32), ()],
+           "c": {"nested": (jnp.ones((2, 3)),)}}
+    spec, arrays = persist.encode(val)
+    out = persist.decode(spec, arrays)
+    assert isinstance(out["a"], tuple) and out["a"] == val["a"]
+    assert isinstance(out["b"], list) and out["b"][1] == ()
+    np.testing.assert_array_equal(np.asarray(out["b"][0]),
+                                  np.arange(4, dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(out["c"]["nested"][0]),
+                                  np.ones((2, 3)))
+
+
+def test_codec_tuple_list_distinction_survives():
+    spec_t, _ = persist.encode((1, 2))
+    spec_l, _ = persist.encode([1, 2])
+    assert spec_t["t"] == "tuple" and spec_l["t"] == "list"
+
+
+def test_codec_roundtrips_repro_namedtuple():
+    coords, batch, valid = _cloud()
+    p = planlib.subm3_plan(coords, batch, valid, max_blocks=64,
+                           search_impl="ref")
+    spec, arrays = persist.encode(p)
+    out = persist.decode(spec, arrays)
+    assert type(out) is type(p)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_codec_refuses_foreign_and_traced():
+    import collections
+    Foreign = collections.namedtuple("Foreign", "x")
+    with pytest.raises(TypeError):
+        persist.encode(Foreign(1))
+    with pytest.raises(TypeError):
+        jax.jit(lambda x: persist.encode(x)[0])(jnp.ones(3))
+    # decode side: a tampered class path outside repro.* is refused
+    with pytest.raises(ValueError):
+        persist.decode({"t": "nt", "cls": "os.path:join", "v": []}, [])
+
+
+# ---------------------------------------------------------------------------
+# Store basics
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_and_stats(tmp_path):
+    st = _store(tmp_path)
+    key = ("plan", "fp" * 12, (3, 1, 7))
+    assert st.put(key, {"v": np.arange(5)})
+    out = st.get(key)
+    np.testing.assert_array_equal(np.asarray(out["v"]), np.arange(5))
+    assert st.get(("other",)) is None
+    s = st.stats()
+    assert s["entries"] == 1 and s["saves"] == 1
+    assert s["hits"] == 1 and s["misses"] == 1 and s["dropped"] == 0
+
+
+def test_store_survives_reopen(tmp_path):
+    _store(tmp_path).put(("k",), (1, 2))
+    assert _store(tmp_path).get(("k",)) == (1, 2)
+
+
+def test_store_byte_bound_evicts_oldest(tmp_path):
+    st = _store(tmp_path, max_bytes=6000)
+    for i in range(8):
+        assert st.put(("k", i), np.full(128, i, np.float32))
+    assert st.resident_bytes() <= 6000
+    assert st.stats()["evictions"] >= 1
+    assert st.get(("k", 7)) is not None        # newest survives
+    assert st.get(("k", 0)) is None            # oldest evicted
+
+
+def test_store_skips_oversize_entry(tmp_path):
+    st = _store(tmp_path, max_bytes=2000)
+    assert not st.put(("big",), np.zeros(10_000, np.float32))
+    assert st.stats()["save_skips"] == 1 and len(st) == 0
+
+
+# ---------------------------------------------------------------------------
+# Corruption fuzz: every defect is a counted cold start, never a crash
+# ---------------------------------------------------------------------------
+
+def _one_entry(tmp_path):
+    st = _store(tmp_path)
+    st.put(("k",), {"a": np.arange(8, dtype=np.float32)})
+    (path,) = [os.path.join(st.directory, n)
+               for n in os.listdir(st.directory) if n.endswith(".snap")]
+    return st, path
+
+
+def _dropped():
+    return guard.health().get("persist.dropped")
+
+
+def test_truncation_drops_cleanly(tmp_path):
+    st, path = _one_entry(tmp_path)
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) // 2])
+    assert st.get(("k",)) is None
+    assert _dropped() == 1 and not os.path.exists(path)
+
+
+@pytest.mark.parametrize("offset", [-1, -20, 30])
+def test_bitflip_drops_cleanly(tmp_path, offset):
+    st, path = _one_entry(tmp_path)
+    blob = bytearray(open(path, "rb").read())
+    blob[offset] ^= 0x10
+    open(path, "wb").write(bytes(blob))
+    assert st.get(("k",)) is None
+    assert _dropped() == 1
+
+
+def test_version_mismatch_reads_as_stale(tmp_path):
+    st, path = _one_entry(tmp_path)
+    blob = open(path, "rb").read()
+    rest = blob[len(persist._MAGIC):]
+    nl = rest.index(b"\n")
+    header = json.loads(rest[:nl])
+    header["version"] += 1
+    open(path, "wb").write(
+        persist._MAGIC + json.dumps(header, sort_keys=True,
+                                    separators=(",", ":")).encode()
+        + b"\n" + rest[nl + 1:])
+    assert st.get(("k",)) is None and _dropped() == 1
+
+
+def test_salt_mismatch_reads_as_stale(tmp_path):
+    _store(tmp_path, salt="code-v1").put(("k",), 42)
+    st2 = _store(tmp_path, salt="code-v2")
+    assert st2.get(("k",)) is None
+    assert _dropped() == 1 and len(st2) == 0
+
+
+def test_foreign_files_are_ignored_or_dropped(tmp_path):
+    st, _ = _one_entry(tmp_path)
+    open(os.path.join(st.directory, "junk.snap"), "wb").write(b"garbage")
+    open(os.path.join(st.directory, "README"), "w").write("not a snapshot")
+    items = list(st.items())
+    assert len(items) == 1 and items[0][0] == ("k",)
+    assert st.get(("k",)) is not None
+
+
+def test_wrong_key_content_is_dropped(tmp_path):
+    # an entry renamed over another key's filename must not serve
+    st = _store(tmp_path)
+    st.put(("a",), 1)
+    st.put(("b",), 2)
+    paths = sorted(os.path.join(st.directory, n)
+                   for n in os.listdir(st.directory) if n.endswith(".snap"))
+    shutil.copyfile(paths[0], paths[1])
+    vals = {st.get(("a",)), st.get(("b",))}
+    assert None in vals and _dropped() >= 1
+
+
+def test_injected_persist_faults_are_absorbed(tmp_path):
+    st = _store(tmp_path)
+    with fault.inject(fault.FaultPlan(schedule={"persist.save": [0],
+                                                "persist.load": [0]})):
+        assert not st.put(("k",), 1)       # save fault: silently skipped
+        assert st.put(("k",), 1)
+        assert st.get(("k",)) is None      # load fault: reads as cold
+        assert st.get(("k",)) == 1
+    assert st.stats()["faults"] == 2
+    assert guard.health().get("persist.fault") == 2
+
+
+# ---------------------------------------------------------------------------
+# PlanCache / PinnedStore rehydration
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_warm_restart_zero_searches(tmp_path):
+    coords, batch, valid = _cloud()
+    store = persist.SnapshotStore(str(tmp_path / "snap"))
+    cache = planlib.PlanCache(persist=store)
+    p1 = planlib.subm3_plan(coords, batch, valid, max_blocks=64,
+                            search_impl="ref", cache=cache)
+    assert cache.misses == 1 and store.stats()["saves"] >= 1
+
+    # fresh process: new cache, new arrays, same store directory
+    cache2 = planlib.PlanCache(
+        persist=persist.SnapshotStore(str(tmp_path / "snap")))
+    c2 = jnp.asarray(np.asarray(coords).copy())
+    planlib.reset_mapsearch_counter()
+    p2 = planlib.subm3_plan(c2, batch, valid, max_blocks=64,
+                            search_impl="ref", cache=cache2)
+    assert planlib.mapsearch_call_count() == 0
+    assert cache2.persist_hits == 1 and cache2.misses == 0
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_cache_save_load_counts(tmp_path):
+    coords, batch, valid = _cloud(seed=3)
+    store = persist.SnapshotStore(str(tmp_path / "snap"))
+    cache = planlib.PlanCache()
+    planlib.subm3_plan(coords, batch, valid, max_blocks=64,
+                       search_impl="ref", cache=cache)
+    assert cache.save(store) == 1
+    fresh = planlib.PlanCache()
+    assert fresh.load(store) == 1
+    planlib.reset_mapsearch_counter()
+    planlib.subm3_plan(coords, batch, valid, max_blocks=64,
+                       search_impl="ref", cache=fresh)
+    assert planlib.mapsearch_call_count() == 0 and fresh.hits == 1
+
+
+def test_pinned_store_rehydrates_anchorless(tmp_path):
+    store = persist.SnapshotStore(str(tmp_path / "snap"))
+    ps = feature_cache.PinnedStore(persist=store)
+    val = {"q": jnp.arange(6)}
+    ps.put(("qtable", "fp"), val)
+    ps2 = feature_cache.PinnedStore(
+        persist=persist.SnapshotStore(str(tmp_path / "snap")))
+    out = ps2.get(("qtable", "fp"))
+    np.testing.assert_array_equal(np.asarray(out["q"]), np.arange(6))
+    assert ps2.persist_hits == 1
+    # verifying readers refuse anchorless rehydrated entries (rebuild)
+    ps3 = feature_cache.PinnedStore(
+        persist=persist.SnapshotStore(str(tmp_path / "snap")))
+    assert ps3.get(("qtable", "fp"), verify=True) is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint digests (satellite: truncated step detected, previous used)
+# ---------------------------------------------------------------------------
+
+def _tree(step):
+    return {"w": jnp.full((4, 4), float(step)), "b": jnp.arange(4.0)}
+
+
+def test_checkpoint_truncation_detected_previous_used(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, _tree(1))
+    checkpoint.save(d, 2, _tree(2))
+    assert checkpoint.latest_step(d) == 2
+    blob = os.path.join(d, "step-0000000002", "leaves.npz")
+    data = open(blob, "rb").read()
+    open(blob, "wb").write(data[: len(data) // 2])
+    assert not checkpoint.verify(d, 2)
+    assert checkpoint.verify(d, 1)
+    assert checkpoint.latest_step(d) == 1
+    assert guard.health().get("ckpt.corrupt") == 1
+    out = checkpoint.restore(d, 1, _tree(0))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full((4, 4), 1.0))
+    with pytest.raises(ValueError):
+        checkpoint.restore(d, 2, _tree(0))
+
+
+def test_checkpoint_bitflip_detected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, _tree(1))
+    blob = os.path.join(d, "step-0000000001", "leaves.npz")
+    data = bytearray(open(blob, "rb").read())
+    data[len(data) // 2] ^= 0x01
+    open(blob, "wb").write(bytes(data))
+    assert not checkpoint.verify(d, 1)
+    assert checkpoint.latest_step(d) is None
+
+
+def test_checkpoint_manifest_carries_digest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, _tree(1))
+    man = json.load(open(os.path.join(d, "step-0000000001",
+                                      "manifest.json")))
+    assert len(man["sha256"]) == 64
+
+
+# ---------------------------------------------------------------------------
+# scoped_health
+# ---------------------------------------------------------------------------
+
+def test_scoped_health_isolates_and_restores():
+    guard.health().note("outer.counter")
+    with guard.scoped_health() as h:
+        assert guard.health() is h
+        assert h.get("outer.counter") == 0
+        guard.health().note("inner.counter")
+        with guard.scoped_health() as h2:        # nests
+            assert h2.get("inner.counter") == 0
+        assert guard.health().get("inner.counter") == 1
+    assert guard.health().get("outer.counter") == 1
+    assert guard.health().get("inner.counter") == 0
+
+
+# ---------------------------------------------------------------------------
+# Journal restore / typed restart shedding
+# ---------------------------------------------------------------------------
+
+def _request(q, rid="r1", deadline_s=60.0):
+    coords, batch, valid = _cloud(seed=9, n=24)
+    feats = jnp.ones((24, 4), jnp.float32)
+    return q.submit(rid, np.asarray(coords), np.asarray(batch),
+                    np.asarray(valid), np.asarray(feats),
+                    deadline_s=deadline_s)
+
+
+def test_queue_restore_requeues_live_request():
+    q = admission.AdmissionQueue(capacity=4, buckets=(32,))
+    req = _request(q)
+    assert not isinstance(req, admission.Rejection)
+    q2 = admission.AdmissionQueue(capacity=4, buckets=(32,))
+    out = q2.restore(req)
+    assert not isinstance(out, admission.Rejection) and len(q2) == 1
+    assert guard.health().get("admit.restored") == 1
+
+
+def test_queue_restore_sheds_expired_as_restart():
+    q = admission.AdmissionQueue(capacity=4, buckets=(32,))
+    req = _request(q, deadline_s=60.0)
+    expired = dataclasses.replace(req, deadline=q.clock() - 1.0)
+    out = q.restore(expired)
+    assert isinstance(out, admission.Rejection)
+    assert out.reason == admission.SHED_RESTART
+    assert "restart" in admission.SHED_REASONS
+
+
+def test_queue_restore_respects_capacity():
+    q = admission.AdmissionQueue(capacity=1, buckets=(32,))
+    r1 = _request(q, rid="a")
+    q2 = admission.AdmissionQueue(capacity=1, buckets=(32,))
+    assert not isinstance(q2.restore(r1), admission.Rejection)
+    r2 = _request(q, rid="b")
+    out = q2.restore(r2)
+    assert isinstance(out, admission.Rejection)
+    assert out.reason == admission.SHED_QUEUE_FULL

@@ -29,12 +29,12 @@ TINY = minkunet.MinkUNetConfig(name="minkunet-tiny", in_ch=3, classes=4,
 
 @pytest.fixture(autouse=True)
 def _fresh_guard_state():
-    """Health counters, quarantine, and capacity hints are process-wide."""
+    """Health counters, quarantine, and capacity hints are process-wide:
+    scope them per test so leakage in either direction is impossible."""
     fault.uninstall()
-    guard.reset_health()
-    yield
+    with guard.scoped_health():
+        yield
     fault.uninstall()
-    guard.reset_health()
 
 
 # ---------------------------------------------------------------------------

@@ -37,12 +37,12 @@ SEARCHES_PER_GEOM = 2 * len(SERVE_CFG.enc) + 1
 
 @pytest.fixture(autouse=True)
 def _fresh_guard_state():
-    """Health counters, quarantine, and capacity hints are process-wide."""
+    """Health counters, quarantine, and capacity hints are process-wide:
+    scope them per test so leakage in either direction is impossible."""
     fault.uninstall()
-    guard.reset_health()
-    yield
+    with guard.scoped_health():
+        yield
     fault.uninstall()
-    guard.reset_health()
 
 
 @functools.lru_cache(maxsize=1)
