@@ -16,9 +16,12 @@ hash, and the sort-free vs argsort plan-build comparison with its audits.
 BENCH_cache.json (benchmarks/cache_model.py) adds the cross-step caching
 side (DESIGN.md §10): pinned/cached/stream tier bytes, the cached-vs-
 uncached external-access ratio over a modeled training loop, and the live
-two-step train-loop gate (map-search count flat across steps). All three
-sections are skipped silently when their JSON is absent — run the
-producing benchmark first.
+two-step train-loop gate (map-search count flat across steps).
+BENCH_spac.json (benchmarks/sparsity_saving.py) adds the SPAC side
+(DESIGN.md §14): measured MAC reduction at the tile and Cin-block grains,
+row elision, and spac-on vs spac-off wall clock with its bit-identical
+parity audit. All sections are skipped silently when their JSON is
+absent — run the producing benchmark first.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 RULEBOOK_JSON = "BENCH_rulebook.json"
 SEARCH_JSON = "BENCH_search.json"
 CACHE_JSON = "BENCH_cache.json"
+SPAC_JSON = "BENCH_spac.json"
 
 
 def load(mesh: str = "single", tag: str = "") -> list[dict]:
@@ -184,6 +188,34 @@ def cache_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def spac_table(recs: list[dict]) -> str:
+    """§Roofline (SPAC) rows: measured MAC reduction at the tile and
+    Cin-block grains plus spac-on/off wall clock, from BENCH_spac.json."""
+    hdr = ("| workload | Cin | bk | maps | value sp. | row elision "
+           "| live/geo tiles | live/geo blocks | MAC red. tile | block "
+           "| off us | on us | speedup |")
+    sep = "|" + "---|" * 13
+    lines = ["", "## Sparsity-aware processing (SPAC, §14)", "", hdr, sep]
+    for r in recs:
+        red, us = r["mac_reduction"], r["us"]
+        lines.append(
+            f"| {r['workload']} | {r['c_in']} | {r['bk']} | {r['n_maps']} "
+            f"| {r['value_sparsity']:.3f} | {r['row_elision']:.3f} "
+            f"| {r['tiles_live']}/{r['tiles_geo']} "
+            f"| {r['blocks_live']}/{r['blocks_geo']} "
+            f"| {red['tile'] * 100:.1f}% | {red['block'] * 100:.1f}% "
+            f"| {us['spac_off']:.1f} | {us['spac_on']:.1f} "
+            f"| {r['speedup']:.2f}x |")
+    ordered = all(r["macs_block"] <= r["macs_tile"] <= r["macs_geo"]
+                  for r in recs)
+    parity = all(r["parity_bitexact"] for r in recs)
+    lines.append("")
+    lines.append(f"spac audit (grain ordering block <= tile <= geo / "
+                 f"spac-on forward bit-identical to spac-off): "
+                 f"{'PASS' if ordered and parity else 'FAIL'}")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
@@ -197,6 +229,9 @@ def main() -> None:
     ap.add_argument("--cache", default=CACHE_JSON,
                     help="BENCH_cache.json from benchmarks/cache_model"
                          " (section skipped when the file is absent)")
+    ap.add_argument("--spac", default=SPAC_JSON,
+                    help="BENCH_spac.json from benchmarks/sparsity_saving"
+                         " (section skipped when the file is absent)")
     args = ap.parse_args()
     recs = load(args.mesh, args.tag)
     print(table(recs))
@@ -209,6 +244,9 @@ def main() -> None:
     cr = load_rulebook(args.cache)
     if cr:
         print(cache_table(cr))
+    sp = load_rulebook(args.spac)
+    if sp:
+        print(spac_table(sp))
     ok = [r for r in recs if r["status"] == "ok"]
     if ok:
         doms = {}

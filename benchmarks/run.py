@@ -33,7 +33,15 @@ mid-checkpoint / mid-snapshot / mid-serve-tick, restart them over the
 surviving dirs, and assert bit-identical recovery, zero map searches on
 warm geometries, clean cold starts from every corrupted-snapshot mode,
 and typed ``restart`` sheds for journaled past-deadline requests —
-DESIGN.md §13).
+DESIGN.md §13). Last is the SPAC gate
+(benchmarks/sparsity_saving.run_smoke: a tiny octent-engine plan with
+deterministically killed tiles and Cin blocks must show a measured MAC
+reduction above the floor with macs_block < macs_tile < macs_geo,
+spac-on forward bit-identical to spac-off under interpret and ref
+impls, and the fused BN/ReLU epilogue matching the unfused math with
+its emitted ActSparsity exactly a fresh sweep of its own output —
+DESIGN.md §14; records in BENCH_spac.json, rendered by
+benchmarks/roofline.py --spac).
 """
 from __future__ import annotations
 
@@ -114,6 +122,14 @@ def main() -> None:
             print("persist_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("persist_smoke,0.0,OK", flush=True)
+        try:
+            for row in sparsity_saving.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("spac_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("spac_smoke,0.0,OK", flush=True)
         return
 
     suites = [

@@ -1,31 +1,55 @@
-"""Fig. 9(b): latency reduction from the fine-grained pipeline (§IV-C) and
-sparsity-aware computing (§V-B), by input-channel count.
+"""Fig. 9(b) + SPAC gate: measured MAC reduction and wall clock for the
+inherent-sparsity-aware processing chain (§V-B), spac-on vs spac-off.
 
-Method mirrors the paper: per benchmark, real map counts from OCTENT search
-on the workload + measured post-ReLU value sparsity (a randomly-initialized
-Subm3+BN+ReLU layer produces the 40-60 % band of Fig. 3(b)); the cycle model
-turns these into coarse / fine-pipeline / fine+SPAC latencies.
-Paper claims: up to 1.68x from the pipeline at C_in=16; ~80 % total saving
-at large C_in; SPAC saves 44.4-79.1 %.
+Per case this builds an octent-engine ConvPlan (core/plan.subm3_plan — the
+map counts come from the paper's search engine, not a side rulebook build),
+constructs post-ReLU-band features with *structured* dead regions, and then
+reads the three SPAC grains straight off the execution masks the fused
+kernel consumes:
 
-Also reports the TPU-grain counterpart: row-level map elision and 8x128
-tile skip fractions (what kernels/spconv_gemm + masked_matmul exploit),
-making the ASIC-vs-MXU granularity gap explicit (DESIGN.md §2).
+  macs_geo   = sum(tiles.tile_nz)          * bm * Cin * Cout_pad
+  macs_tile  = sum(tile_liveness(...))     * bm * Cin * Cout_pad
+  macs_block = sum(tile_block_liveness(..))* bm * bk  * Cout_pad
+
+so ``macs_block <= macs_tile <= macs_geo`` is a hard invariant and
+``1 - macs_block / macs_geo`` is the measured MAC reduction (the TPU-grain
+counterpart of the paper's 44.4-79.1 % SPAC saving; the ASIC cycle model is
+still reported alongside for the Fig. 9(b) comparison). Wall clock times
+``apply_tiles`` spac-on vs spac-off and a bit-identical forward parity
+check guards losslessness (DESIGN.md §2: elision is forward-only).
+
+Structured sparsity matters here: unstructured random zeros essentially
+never kill a 128-slot tile (p^128), so both the full sweep and the smoke
+case zero the *gather sources* of selected tiles — the index-space image
+of a spatially dead region, since a tile's sources are a spatial
+neighborhood — plus upper-Cin-block kills for the block grain.
+
+``run_smoke`` (wired into benchmarks/run.py --smoke and scripts/ci.sh) is
+the CI gate: interpret + ref parity bit-identical, MAC-reduction floor,
+grain ordering, and fused-epilogue parity, all on tiny shapes. Records go
+to BENCH_spac.json (schema in benchmarks/README.md), rendered by
+``benchmarks/roofline.py --spac``.
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, workload
-from repro.core import cyclemodel, mapsearch, morton, rulebook, spconv, sparsity
+from benchmarks.common import csv_row, time_fn, workload
+from repro.core import cyclemodel, plan as planlib, spconv, sparsity
+from repro.kernels.spconv_gemm import ops as sg_ops
 
+OUT_JSON = "BENCH_spac.json"
 CINS = (16, 48, 96, 128)
+MAC_REDUCTION_FLOOR = 0.02
 
 
 def _post_relu_feats(vb, c_in: int, seed: int = 0):
-    """Features after conv+BN+ReLU — the inherent-sparsity source."""
+    """Features after conv+BN+ReLU — the inherent-sparsity source
+    (a randomly initialized layer lands in the 40-60 % band of Fig. 3(b))."""
     st = spconv.SparseTensor(jnp.asarray(vb.coords), jnp.asarray(vb.batch),
                              jnp.asarray(vb.valid),
                              jnp.asarray(np.random.default_rng(seed)
@@ -39,30 +63,239 @@ def _post_relu_feats(vb, c_in: int, seed: int = 0):
     return spconv.relu(st)
 
 
-def run(full: bool = True) -> list[str]:
-    rows = []
-    vb = workload("Seg(i)")
-    offs = jnp.asarray(morton.subm3_offsets())
-    kmap = mapsearch.build_kmap_octree(
-        jnp.asarray(vb.coords), jnp.asarray(vb.batch), jnp.asarray(vb.valid),
-        offs, max_blocks=vb.coords.shape[0])
-    n_voxels = int(vb.valid.sum())
-    n_maps = int((np.asarray(kmap) >= 0).sum())
+def _kill_structure(feats: np.ndarray, tiles, bk: int, *,
+                    stride: int = 3) -> np.ndarray:
+    """Zero the gather sources of every ``stride``-th geometry-live tile
+    (whole rows — a dead spatial region) and the upper Cin blocks of the
+    next one (dead feature blocks). Deterministic, so the smoke gate's
+    strict ``macs_block < macs_tile < macs_geo`` ordering is guaranteed."""
+    feats = np.array(feats)
+    gidx = np.asarray(tiles.gather_idx).reshape(tiles.n_tiles, tiles.bm)
+    sval = np.asarray(tiles.slot_valid).reshape(tiles.n_tiles, tiles.bm)
+    live = np.flatnonzero(np.asarray(tiles.tile_nz))
+    kill_tiles = live[::stride]
+    blk_tiles = live[1::stride]
+    kill_rows = (np.unique(np.concatenate(
+        [gidx[t][sval[t]] for t in kill_tiles]))
+        if len(kill_tiles) else np.zeros(0, np.int64))
+    feats[kill_rows] = 0.0
+    for t in blk_tiles:
+        rows = gidx[t][sval[t]]
+        # rows shared with a killed tile stay fully zero; the rest keep a
+        # live first block so the tile survives at tile grain
+        feats[rows[~np.isin(rows, kill_rows)], bk:] = 0.0
+    return feats
 
+
+def _mac_counts(feats, tiles, c_in: int, c_out_pad: int, bk: int) -> dict:
+    """The three SPAC grains, read off the same masks apply_tiles builds."""
+    row_nz = sparsity.row_nonzero(feats)
+    blk_nz = sparsity.row_block_nonzero(feats, bk) & row_nz[:, None]
+    tiles_geo = int(np.asarray(tiles.tile_nz).sum())
+    tiles_live = int(np.asarray(sg_ops.tile_liveness(tiles, row_nz)).sum())
+    blocks_live = int(np.asarray(
+        sg_ops.tile_block_liveness(tiles, blk_nz)).sum())
+    bm = tiles.bm
+    return {
+        "tiles_geo": tiles_geo, "tiles_live": tiles_live,
+        "blocks_live": blocks_live,
+        "blocks_geo": tiles_geo * (c_in // bk),
+        "macs_geo": tiles_geo * bm * c_in * c_out_pad,
+        "macs_tile": tiles_live * bm * c_in * c_out_pad,
+        "macs_block": blocks_live * bm * bk * c_out_pad,
+    }
+
+
+def _case(name: str, feats, w, plan, *, bk: int, impl: str,
+          iters: int = 5, warmup: int = 2, strict: bool = False) -> dict:
+    """Measure one (workload, Cin) case: MAC grains, wall clock on/off,
+    bit-identical parity. ``strict`` additionally requires the grain
+    ordering to be strict (the deterministic smoke construction)."""
+    c_in = feats.shape[1]
+    c_out = w.shape[-1]
+    c_out_pad = -(-c_out // 128) * 128
+    tiles, n_out = plan.tiles, plan.n_out
+    macs = _mac_counts(feats, tiles, c_in, c_out_pad, bk)
+    assert macs["macs_block"] <= macs["macs_tile"] <= macs["macs_geo"], macs
+    if strict:
+        assert macs["macs_block"] < macs["macs_tile"] < macs["macs_geo"], (
+            "deterministic kill construction must produce strict savings "
+            f"at both grains: {macs}")
+    reduction = {
+        "tile": 1.0 - macs["macs_tile"] / max(macs["macs_geo"], 1),
+        "block": 1.0 - macs["macs_block"] / max(macs["macs_geo"], 1),
+    }
+
+    f_on = jax.jit(lambda f: sg_ops.apply_tiles(
+        f, w, tiles, n_out=n_out, row_nz=sparsity.row_nonzero(f),
+        bk=bk, impl=impl))
+    f_off = jax.jit(lambda f: sg_ops.apply_tiles(
+        f, w, tiles, n_out=n_out, bk=bk, impl=impl))
+    out_on = np.asarray(f_on(feats))
+    out_off = np.asarray(f_off(feats))
+    parity = bool(np.array_equal(out_on, out_off))
+    if not parity:
+        raise AssertionError(
+            f"SPAC must be forward-lossless bit-identically ({name}, "
+            f"impl={impl}): max |d|={np.abs(out_on - out_off).max():.3e}")
+    t_on = time_fn(f_on, feats, iters=iters, warmup=warmup)
+    t_off = time_fn(f_off, feats, iters=iters, warmup=warmup)
+
+    stats = sparsity.sparsity_stats(feats, plan.kmap, c_out)
+    return {
+        "workload": name, "impl": impl, "c_in": c_in, "c_out": c_out,
+        "bm": tiles.bm, "bk": bk, "n_k": c_in // bk,
+        "n_maps": int((np.asarray(plan.kmap) >= 0).sum()),
+        "value_sparsity": float(stats.element_sparsity),
+        "row_elision": float(stats.map_elision),
+        **macs, "mac_reduction": reduction,
+        "us": {"spac_off": t_off * 1e6, "spac_on": t_on * 1e6},
+        "speedup": t_off / max(t_on, 1e-12),
+        "parity_bitexact": parity,
+    }
+
+
+def _epilogue_parity(feats, w, plan, valid, *, bk: int, impl: str) -> None:
+    """Fused BN/ReLU epilogue vs the unfused reference on the same plan.
+
+    The affine may round differently in-kernel (fused multiply-add), so the
+    output check is tight-allclose; the emitted ActSparsity however must be
+    *exactly* a fresh sweep of the kernel's own output — that is the
+    invariant the next layer's lossless elision rests on. ``valid`` is the
+    output-row mask (== the input mask for a subm plan)."""
+    rng = np.random.default_rng(7)
+    c_out = w.shape[-1]
+    scale = jnp.asarray(rng.standard_normal(c_out).astype(np.float32))
+    shift = jnp.asarray(rng.standard_normal(c_out).astype(np.float32))
+    tiles, n_out = plan.tiles, plan.n_out
+    epi = sg_ops.FusedEpilogue(scale=scale, shift=shift, valid=valid)
+    out, act = sg_ops.apply_tiles(feats, w, tiles, n_out=n_out,
+                                  row_nz=sparsity.row_nonzero(feats),
+                                  epilogue=epi, bk=bk, impl=impl)
+    base = sg_ops.apply_tiles(feats, w, tiles, n_out=n_out,
+                              row_nz=sparsity.row_nonzero(feats),
+                              bk=bk, impl=impl)
+    ref = np.where(np.asarray(valid)[:, None],
+                   np.maximum(np.asarray(base) * np.asarray(scale)
+                              + np.asarray(shift), 0.0), 0.0)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6,
+                               err_msg=f"fused epilogue drifted from the "
+                                       f"unfused math (impl={impl})")
+    out_np = np.asarray(out)
+    if not np.array_equal(np.asarray(act.row_nz), (out_np != 0).any(-1)):
+        raise AssertionError("epilogue-emitted row_nz drifted from a fresh "
+                             f"sweep of its own output (impl={impl})")
+
+
+def _smoke_cloud(n: int = 192, extent: int = 12, n_valid: int = 176,
+                 seed: int = 3):
+    """Tiny unique-coordinate cloud, padded with invalid rows."""
+    rng = np.random.default_rng(seed)
+    lin = rng.choice(extent ** 3, size=n, replace=False)
+    coords = np.stack([lin // extent ** 2, (lin // extent) % extent,
+                       lin % extent], axis=1).astype(np.int32)
+    batch = np.zeros(n, np.int32)
+    valid = np.arange(n) < n_valid
+    return (jnp.asarray(coords), jnp.asarray(batch), jnp.asarray(valid))
+
+
+def _workload_case(name: str, c_in: int, seed: int = 0):
+    vb = workload(name)
+    plan = planlib.subm3_plan(jnp.asarray(vb.coords), jnp.asarray(vb.batch),
+                              jnp.asarray(vb.valid),
+                              max_blocks=vb.coords.shape[0])
+    st = _post_relu_feats(vb, c_in, seed=seed)
+    # pick_bk keeps whole-Cin residency at these widths (n_k=1, block grain
+    # degenerates to tile grain); pin the paper's 16-wide MAC-array grain
+    # so the sweep measures block-grain elision wherever Cin allows it
+    bk = 16 if c_in % 16 == 0 else sg_ops.pick_bk(
+        c_in, bm=plan.tiles.bm, bn=128, bo=plan.tiles.bo,
+        c_out=-(-c_in // 128) * 128)
+    feats = _kill_structure(np.array(st.feats), plan.tiles, bk, stride=4)
+    feats[~np.asarray(vb.valid)] = 0.0
+    rng = np.random.default_rng(seed + 1)
+    w = rng.standard_normal((27, c_in, c_in)).astype(np.float32) * 0.05
+    return jnp.asarray(feats), jnp.asarray(w), plan, bk, int(vb.valid.sum())
+
+
+def run(full: bool = True) -> list[str]:
+    impl = sg_ops.kernel_impl()
+    rows, records = [], []
     for c_in in CINS if full else CINS[:2]:
-        st = _post_relu_feats(vb, c_in)
-        stats = sparsity.sparsity_stats(st.feats, kmap, c_in)
-        vs = float(stats.element_sparsity)
-        lat = cyclemodel.layer_latency(n_voxels, n_maps, c_in, c_in, vs)
-        pipe_gain = lat.coarse / lat.fine
-        spac_saving = 1.0 - lat.fine_spac / lat.fine
-        total_saving = 1.0 - lat.fine_spac / lat.coarse
-        tile_skip = float(1.0 - sparsity.block_mask(
-            jnp.asarray(st.feats), 8, min(c_in, 128)).mean())
+        feats, w, plan, bk, n_voxels = _workload_case("Seg(i)", c_in)
+        rec = _case(f"Seg(i)/cin{c_in}", feats, w, plan, bk=bk, impl=impl)
+        # ASIC-side Fig. 9(b) model on the same octent map counts
+        lat = cyclemodel.layer_latency(n_voxels, rec["n_maps"], c_in, c_in,
+                                       rec["value_sparsity"])
+        rec["model"] = {
+            "pipeline_gain": lat.coarse / lat.fine,
+            "spac_saving": 1.0 - lat.fine_spac / lat.fine,
+            "total_saving": 1.0 - lat.fine_spac / lat.coarse,
+        }
+        records.append(rec)
         rows.append(csv_row(
-            f"fig9b_sparsity/cin{c_in}", lat.fine_spac / cyclemodel.FREQ_HZ * 1e6,
-            f"value_sparsity={vs:.3f};pipeline_gain={pipe_gain:.2f}x;"
-            f"spac_saving={spac_saving:.3f};total_saving={total_saving:.3f};"
-            f"row_elision={float(stats.map_elision):.3f};"
-            f"tile_skip_8x{min(c_in, 128)}={tile_skip:.3f}"))
+            f"fig9b_sparsity/cin{c_in}",
+            lat.fine_spac / cyclemodel.FREQ_HZ * 1e6,
+            f"value_sparsity={rec['value_sparsity']:.3f};"
+            f"pipeline_gain={rec['model']['pipeline_gain']:.2f}x;"
+            f"spac_saving={rec['model']['spac_saving']:.3f};"
+            f"total_saving={rec['model']['total_saving']:.3f}"))
+        rows.append(csv_row(
+            f"spac/cin{c_in}", rec["us"]["spac_on"],
+            f"impl={impl};bk={bk};"
+            f"mac_reduction_tile={rec['mac_reduction']['tile']:.3f};"
+            f"mac_reduction_block={rec['mac_reduction']['block']:.3f};"
+            f"speedup={rec['speedup']:.2f}x;"
+            f"row_elision={rec['row_elision']:.3f};parity=bitexact"))
+        if rec["mac_reduction"]["block"] <= 0:
+            raise AssertionError(
+                f"no measured MAC reduction on the Fig. 3(b)-band workload "
+                f"(cin={c_in}): {rec['mac_reduction']}")
+    with open(OUT_JSON, "w") as f:
+        json.dump(records, f, indent=2)
     return rows
+
+
+def run_smoke() -> list[str]:
+    """CI gate (benchmarks/run.py --smoke): tiny octent plan, deterministic
+    tile/block kills, interpret + ref parity, MAC-reduction floor,
+    fused-epilogue parity."""
+    coords, batch, valid = _smoke_cloud()
+    n = coords.shape[0]
+    c_in, c_out, bk = 32, 24, 16
+    plan = planlib.subm3_plan(coords, batch, valid, max_blocks=n, bm=8,
+                              bo=32)
+    rng = np.random.default_rng(5)
+    feats = rng.standard_normal((n, c_in)).astype(np.float32)
+    feats[~np.asarray(valid)] = 0.0
+    feats = _kill_structure(feats, plan.tiles, bk, stride=3)
+    feats = jnp.asarray(feats)
+    w = jnp.asarray(rng.standard_normal((27, c_in, c_out))
+                    .astype(np.float32) * 0.05)
+
+    rows, records = [], []
+    for impl in ("interpret", "ref"):
+        rec = _case(f"smoke/{impl}", feats, w, plan, bk=bk, impl=impl,
+                    iters=2, warmup=1, strict=True)
+        if rec["mac_reduction"]["block"] < MAC_REDUCTION_FLOOR:
+            raise AssertionError(
+                f"smoke MAC reduction below floor: "
+                f"{rec['mac_reduction']['block']:.4f} < "
+                f"{MAC_REDUCTION_FLOOR}")
+        _epilogue_parity(feats, w, plan, valid, bk=bk, impl=impl)
+        records.append(rec)
+        rows.append(csv_row(
+            f"spac/smoke/{impl}", rec["us"]["spac_on"],
+            f"mac_reduction_block={rec['mac_reduction']['block']:.3f};"
+            f"mac_reduction_tile={rec['mac_reduction']['tile']:.3f};"
+            f"tiles={rec['tiles_live']}/{rec['tiles_geo']};"
+            f"blocks={rec['blocks_live']}/{rec['blocks_geo']};"
+            f"parity=bitexact;epilogue=ok"))
+    with open(OUT_JSON, "w") as f:
+        json.dump(records, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(full=False):
+        print(row)

@@ -44,7 +44,14 @@
 # bit-flipped / version-bumped / foreign / salt-mismatched snapshots,
 # journaled in-flight serve requests re-queued exactly once, and typed
 # "restart" sheds for the ones whose deadline died with the process
-# (DESIGN.md §13).
+# (DESIGN.md §13); and the SPAC gate (sparsity_saving.run_smoke): a
+# tiny octent-engine plan with deterministically killed tiles and Cin
+# blocks must show a measured MAC reduction above the floor with the
+# grain ordering macs_block < macs_tile < macs_geo, spac-on forward
+# bit-identical to spac-off under both interpret and ref impls, and
+# the fused BN/ReLU epilogue matching the unfused math with its
+# emitted ActSparsity exactly a fresh sweep of its own output
+# (DESIGN.md §14) — results in BENCH_spac.json.
 #
 # The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
 # benchmarks/README honest: internal anchors, referenced file paths, and
@@ -65,7 +72,7 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + search + cache + robustness + serving + persistence smoke gates =="
+echo "== rulebook + search + cache + robustness + serving + persistence + spac smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

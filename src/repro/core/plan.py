@@ -673,7 +673,9 @@ def tconv2_plan(gconv2_maps: StridedMaps, target_coords, target_batch,
 
 def execute(plan: ConvPlan, feats: jnp.ndarray, weights: jnp.ndarray,
             bias: jnp.ndarray | None = None, *, spac: bool = True,
-            impl: str | None = None, bn: int = 128) -> jnp.ndarray:
+            act: "sparsity.ActSparsity | None" = None,
+            epilogue: "sg_ops.FusedEpilogue | None" = None,
+            impl: str | None = None, bn: int = 128):
     """Run rulebook execution for ``plan`` over the current features.
 
     ``feats`` / ``weights`` / ``bias`` are stream-tier by design
@@ -685,19 +687,42 @@ def execute(plan: ConvPlan, feats: jnp.ndarray, weights: jnp.ndarray,
     tile machinery (kernels/spconv_gemm); 'xla' is the pure-XLA tap-scan
     oracle (rulebook.apply_kmap_gather) kept for parity testing. Default
     resolves via ops.kernel_impl().
+
+    ``act`` threads the previous layer's epilogue-emitted ActSparsity as
+    the SPAC liveness source (no HBM re-sweep); ``epilogue`` fuses
+    BN-inference + ReLU into the execution and changes the return value to
+    ``(out, ActSparsity)`` — inference-only, see sg_ops.FusedEpilogue.
+    SPAC elision (any grain) is forward-only lossless: every path here
+    differentiates through the un-elided geometry math (DESIGN.md §2).
     """
     impl = impl or sg_ops.kernel_impl()
     if impl == "xla":
-        kmap = plan.kmap
         if spac:
-            kmap = sparsity.compact_kmap(kmap, sparsity.row_nonzero(feats))
-        return rulebook.apply_kmap_gather(feats, weights, kmap, bias)
+            row_nz = act.row_nz if act is not None \
+                else sparsity.row_nonzero(feats)
+            # elision via the custom-VJP wrapper: the backward replays the
+            # un-compacted kmap (a plain compact_kmap here silently zeroed
+            # dfeats for exactly-zero rows)
+            out = rulebook.apply_kmap_gather_spac(feats, weights, plan.kmap,
+                                                  row_nz)
+        else:
+            out = rulebook.apply_kmap_gather(feats, weights, plan.kmap)
+        if epilogue is not None:
+            if bias is not None:
+                raise ValueError(
+                    "bias and epilogue together would apply the bias twice:"
+                    " fold it into the epilogue shift")
+            return sg_ops.apply_epilogue_xla(out, epilogue, bn=bn)
+        return out + bias if bias is not None else out
     if plan.tiles is None:
         raise ValueError(
             f"{plan.kind} plan was built with with_tiles=False (input-"
             f"stationary dataflow); rebuild it with tiles to execute the "
             f"fused path, or pass impl='xla'")
-    row_nz = sparsity.row_nonzero(feats) if spac else None
+    row_nz = None
+    if spac and act is None:
+        row_nz = sparsity.row_nonzero(feats)
     return sg_ops.apply_tiles(feats, weights, plan.tiles, bias,
-                              n_out=plan.n_out, row_nz=row_nz, bn=bn,
-                              impl=impl)
+                              n_out=plan.n_out, row_nz=row_nz,
+                              act=act if spac else None, epilogue=epilogue,
+                              bn=bn, impl=impl)

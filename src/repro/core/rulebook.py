@@ -100,6 +100,43 @@ def apply_kmap_gather(feats: jnp.ndarray, weights: jnp.ndarray,
     return acc
 
 
+@jax.custom_vjp
+def apply_kmap_gather_spac(feats: jnp.ndarray, weights: jnp.ndarray,
+                           kmap: jnp.ndarray,
+                           row_nz: jnp.ndarray) -> jnp.ndarray:
+    """SPAC map elision on the XLA tap-scan path, with the correct VJP.
+
+    Forward drops maps sourcing all-zero rows (``sparsity.compact_kmap``)
+    — lossless, those rows contribute exactly 0. Backward differentiates
+    the **un-elided** geometry math: d(out)/d(feats) of a zero row is
+    wᵀ·g, not 0, so replaying the VJP through the compacted kmap (the
+    pre-fix behavior of plan.execute) silently zeroed ``dfeats`` for every
+    exactly-zero row (DESIGN.md §2). Bias stays outside (add it after).
+    """
+    from repro.core import sparsity
+    return apply_kmap_gather(feats, weights,
+                             sparsity.compact_kmap(kmap, row_nz))
+
+
+def _akg_spac_fwd(feats, weights, kmap, row_nz):
+    out = apply_kmap_gather_spac(feats, weights, kmap, row_nz)
+    return out, (feats, weights, kmap, row_nz)
+
+
+def _akg_spac_bwd(res, g):
+    import numpy as np
+    feats, weights, kmap, row_nz = res
+    _, vjp = jax.vjp(lambda f, w: apply_kmap_gather(f, w, kmap),
+                     feats, weights)
+    dfeats, dw = vjp(g)
+    return (dfeats, dw,
+            np.zeros(kmap.shape, jax.dtypes.float0),
+            np.zeros(row_nz.shape, jax.dtypes.float0))
+
+
+apply_kmap_gather_spac.defvjp(_akg_spac_fwd, _akg_spac_bwd)
+
+
 @partial(jax.jit, static_argnames=("n_out", "n_taps"))
 def apply_maps_scatter(feats: jnp.ndarray, weights: jnp.ndarray,
                        maps: StridedMaps, bias: jnp.ndarray | None = None,

@@ -93,6 +93,7 @@ def init_batchnorm(c: int, dtype=jnp.float32) -> dict:
 def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
                method: str = "octree", grid_bits: int = 7,
                batch_bits: int = 4, spac: bool = True,
+               act: "object | None" = None,
                plan: planlib.ConvPlan | None = None,
                cache: planlib.PlanCache | None = None,
                impl: str | None = None, search_impl: str | None = None,
@@ -103,6 +104,8 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
     coordinate set, or ``plan`` to reuse an explicit prebuilt plan.
     ``impl`` selects the rulebook-execution backend, ``search_impl`` the
     OCTENT query backend (kernels/octent/ops.search_impl resolves None).
+    ``act`` threads the previous layer's epilogue-emitted ActSparsity as
+    the SPAC liveness source instead of a fresh row sweep (DESIGN.md §14).
     """
     if plan is None:
         plan = planlib.subm3_plan(st.coords, st.batch, st.valid,
@@ -111,9 +114,61 @@ def subm_conv3(st: SparseTensor, params: dict, *, max_blocks: int,
                                   bm=bm, bo=bo, search_impl=search_impl,
                                   cache=cache)
     out = planlib.execute(plan, st.feats, params["w"], params["b"],
-                          spac=spac, impl=impl)
+                          spac=spac, act=act, impl=impl)
     out = jnp.where(st.valid[:, None], out, 0)
     return st.replace_feats(out)
+
+
+def fold_bn_inference(conv_bias: jnp.ndarray | None, bn_params: dict, *,
+                      eps: float = 1e-5):
+    """Fold conv bias + inference BatchNorm into the fused-epilogue affine.
+
+    ``y = (conv_out + b - mean) * rsqrt(var + eps) * scale + bias`` becomes
+    ``y = conv_out * s + t`` with ``s = scale * rsqrt(var + eps)`` and
+    ``t = (b - mean) * s + bias`` — exactly :func:`batch_norm` in
+    inference mode (same eps, f32 math). Returns ``(s, t)`` float32.
+    """
+    s = (bn_params["scale"].astype(jnp.float32)
+         * jax.lax.rsqrt(bn_params["var"].astype(jnp.float32) + eps))
+    b = 0.0 if conv_bias is None else conv_bias.astype(jnp.float32)
+    t = (b - bn_params["mean"].astype(jnp.float32)) * s \
+        + bn_params["bias"].astype(jnp.float32)
+    return s, t
+
+
+def subm_conv3_bn_relu(st: SparseTensor, conv_params: dict, bn_params: dict,
+                       *, max_blocks: int, method: str = "octree",
+                       grid_bits: int = 7, batch_bits: int = 4,
+                       spac: bool = True, act: "object | None" = None,
+                       eps: float = 1e-5,
+                       plan: planlib.ConvPlan | None = None,
+                       cache: planlib.PlanCache | None = None,
+                       impl: str | None = None,
+                       search_impl: str | None = None, bm: int = 128,
+                       bo: int | None = None):
+    """Subm3 + inference BatchNorm + ReLU with the fused epilogue (§14).
+
+    The BN affine (conv bias folded in) and the ReLU run on the output
+    block while it is still VMEM-resident, and the kernel emits the next
+    layer's activation-sparsity masks in passing. Returns
+    ``(SparseTensor, ActSparsity)``; thread the act into the next Subm3's
+    ``act=`` to skip its liveness re-sweep. Inference-only — training
+    composes subm_conv3 + batch_norm + relu unfused.
+    """
+    from repro.kernels.spconv_gemm import ops as sg_ops
+    if plan is None:
+        plan = planlib.subm3_plan(st.coords, st.batch, st.valid,
+                                  max_blocks=max_blocks, method=method,
+                                  grid_bits=grid_bits, batch_bits=batch_bits,
+                                  bm=bm, bo=bo, search_impl=search_impl,
+                                  cache=cache)
+    scale, shift = fold_bn_inference(conv_params.get("b"), bn_params,
+                                     eps=eps)
+    epi = sg_ops.FusedEpilogue(scale=scale, shift=shift, valid=st.valid)
+    out, out_act = planlib.execute(plan, st.feats, conv_params["w"], None,
+                                   spac=spac, act=act, epilogue=epi,
+                                   impl=impl)
+    return st.replace_feats(out), out_act
 
 
 def gconv2(st: SparseTensor, params: dict, *, grid_bits: int = 7,

@@ -16,14 +16,31 @@ from repro.kernels.spconv_gemm.ops import kernel_impl
 def sparse_dense_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
                         bn: int = 128, bk: int = 128,
                         impl: str | None = None) -> jnp.ndarray:
-    """A @ B skipping all-zero (bm x bk) tiles of A (SPAC, §V-B)."""
+    """A @ B skipping all-zero (bm x bk) tiles of A (SPAC, §V-B).
+
+    Non-tile-multiple shapes are zero-padded up to the tile grid and the
+    output sliced back — padding rows/columns are all-zero, so they only
+    add skippable tiles (the pre-fix bare ``assert`` vanished under
+    ``python -O`` and fed the kernel misaligned shapes).
+    """
     impl = impl or kernel_impl()
-    mask = block_mask(a, bm, bk).astype(jnp.int32)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    mp, kp, npad = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    ap = a if (mp, kp) == (m, k) else jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = b if (kp, npad) == (k, n) else jnp.pad(b, ((0, kp - k),
+                                                    (0, npad - n)))
+    mask = block_mask(ap, bm, bk).astype(jnp.int32)
     if impl == "pallas":
-        return masked_matmul(a, b, mask, bm=bm, bn=bn, bk=bk)
-    if impl == "interpret":
-        return masked_matmul(a, b, mask, bm=bm, bn=bn, bk=bk, interpret=True)
-    return masked_matmul_ref(a, b, mask, bm=bm, bn=bn, bk=bk)
+        out = masked_matmul(ap, bp, mask, bm=bm, bn=bn, bk=bk)
+    elif impl == "interpret":
+        out = masked_matmul(ap, bp, mask, bm=bm, bn=bn, bk=bk,
+                            interpret=True)
+    else:
+        out = masked_matmul_ref(ap, bp, mask, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
 
 
 def tile_skip_fraction(a: jnp.ndarray, bm: int = 128, bk: int = 128):

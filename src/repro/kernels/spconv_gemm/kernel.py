@@ -143,10 +143,15 @@ def _row_dmas(do, gidx_ref, tile_run_ref, grp_skip_ref, grp_contig_ref,
                     cp(1, gidx_ref[base + g * grp + r], g * grp + r)
 
 
-def _os_kernel(tile_tap_ref, tile_nz_ref, tile_ob_ref, tile_first_ref,
-               tile_run_ref, grp_skip_ref, grp_contig_ref, gidx_ref,
-               scat_ref, feats_ref, w_ref, out_ref, rows_ref, acc_ref, sem,
-               *, bm: int, bn: int, bo: int, grp: int):
+def _os_kernel(tile_tap_ref, tile_nz_ref, tile_bk_ref, tile_ob_ref,
+               tile_first_ref, tile_last_ref, tile_run_ref, grp_skip_ref,
+               grp_contig_ref, gidx_ref, scat_ref, feats_ref, w_ref, *rest,
+               bm: int, bn: int, bo: int, grp: int, epilogue: bool):
+    if epilogue:
+        (scale_ref, shift_ref, valid_ref, out_ref, nz_ref,
+         rows_ref, acc_ref, sem) = rest
+    else:
+        out_ref, rows_ref, acc_ref, sem = rest
     i = pl.program_id(0)
     k = pl.program_id(1)
     j = pl.program_id(2)
@@ -164,31 +169,40 @@ def _os_kernel(tile_tap_ref, tile_nz_ref, tile_ob_ref, tile_first_ref,
         bm=bm, bk=bk, grp=grp)
 
     nz = tile_nz_ref[i] != 0
+    # Cin-block grain SPAC (DESIGN.md §14): a dead (tile, Cin-block) pair —
+    # every gathered row's bk-slice is exactly zero — costs neither the
+    # gather DMA nor the MAC. tile_bk_ref[i, k] <= tile_nz_ref[i] by
+    # construction (ops.tile_block_liveness), so a live block implies a
+    # live tile.
+    blk = tile_bk_ref[i, k] != 0
 
     # -- gather stage, double-buffered: step s+1's copies are started before
     # step s's compute, so the next tile/Cin-block fetch overlaps the MACs.
-    # Skipped tiles start no copies and wait on none; slot parity stays
-    # consistent because start and wait are gated by the same tile_nz entry.
+    # Dead blocks start no copies and wait on none; slot parity stays
+    # consistent because start and wait are gated by the same tile_bk entry.
     @pl.when(j == 0)
     def _dma_schedule():
-        @pl.when((s == 0) & nz)
+        @pl.when((s == 0) & blk)
         def _warmup():
             dmas(do="start", i2=i, k2=k, slot=slot)
 
         s1 = s + 1
         i1 = jnp.minimum(s1 // n_k, n_m - 1)
 
-        @pl.when((s1 < n_m * n_k) & (tile_nz_ref[i1] != 0))
+        @pl.when((s1 < n_m * n_k) & (tile_bk_ref[i1, s1 % n_k] != 0))
         def _prefetch_next():
             dmas(do="start", i2=i1, k2=s1 % n_k, slot=s1 % 2)
 
-        @pl.when(nz)
+        @pl.when(blk)
         def _arrived():
             dmas(do="wait", i2=i, k2=k, slot=slot)
 
     # -- MAC stage: (bm, bk) @ (bk, bn) MXU tiles, f32 accumulation over the
-    # Cin blocks in a VMEM scratch (never written back to HBM)
-    @pl.when(nz)
+    # Cin blocks in a VMEM scratch (never written back to HBM). A live tile
+    # whose k==0 block is dead still zero-initializes the accumulator slice
+    # (the skipped rows buffer holds garbage from an earlier tile — it must
+    # never be read, and the later live blocks need a clean base to add to).
+    @pl.when(blk)
     def _compute():
         partial = jax.lax.dot_general(
             rows_ref[slot], w_ref[0],
@@ -202,6 +216,10 @@ def _os_kernel(tile_tap_ref, tile_nz_ref, tile_ob_ref, tile_first_ref,
         @pl.when(k > 0)
         def _accum():
             acc_ref[:, pl.ds(j * bn, bn)] += partial
+
+    @pl.when(nz & ~blk & (k == 0))
+    def _init_dead_block():
+        acc_ref[:, pl.ds(j * bn, bn)] = jnp.zeros((bm, bn), jnp.float32)
 
     # -- arrangement stage: once per tile (at its last grid step), scatter
     # the accumulated (bm, Cout) partial sums into the output block that
@@ -241,19 +259,46 @@ def _os_kernel(tile_tap_ref, tile_nz_ref, tile_ob_ref, tile_first_ref,
             def _add():
                 out_ref[...] += contrib
 
+        # -- fused epilogue (DESIGN.md §14): when the closing tile of an
+        # output block's run lands, the finished block is still
+        # VMEM-resident — apply BN-inference scale/shift + ReLU in place
+        # and record the per-(row, bn-group) zero pattern, so the next
+        # layer's SPAC liveness refresh never re-sweeps the features in
+        # HBM. Runs for empty blocks too (shift can resurrect zero rows);
+        # invalid rows (block padding past n_out, masked-off voxels) are
+        # forced to zero so they stay dead in the emitted masks.
+        if epilogue:
+            @pl.when(tile_last_ref[i] != 0)
+            def _bn_relu():
+                y = (out_ref[...].astype(jnp.float32) * scale_ref[0][None, :]
+                     + shift_ref[0][None, :])
+                y = jnp.where(valid_ref[...] != 0, jnp.maximum(y, 0.0), 0.0)
+                yc = y.astype(out_ref.dtype)
+                out_ref[...] = yc
+                n_gr = nz_ref.shape[-1]
+                cols = [(yc[:, g * bn:(g + 1) * bn] != 0).any(
+                    axis=1, keepdims=True) for g in range(n_gr)]
+                nz_ref[...] = jnp.concatenate(cols, axis=1).astype(jnp.int32)
+
 
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bo", "bk", "n_out_pad",
-                              "interpret"))
+                              "epilogue", "interpret"))
 def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
                       gather_idx: jnp.ndarray, scatter_idx: jnp.ndarray,
                       tile_tap: jnp.ndarray, tile_nz: jnp.ndarray,
                       tile_ob: jnp.ndarray, tile_first: jnp.ndarray,
                       tile_run: jnp.ndarray, grp_skip: jnp.ndarray,
-                      grp_contig: jnp.ndarray, *, bm: int = 128,
+                      grp_contig: jnp.ndarray,
+                      tile_bk_nz: jnp.ndarray | None = None,
+                      tile_last: jnp.ndarray | None = None,
+                      epi_scale: jnp.ndarray | None = None,
+                      epi_shift: jnp.ndarray | None = None,
+                      epi_valid: jnp.ndarray | None = None, *, bm: int = 128,
                       bn: int = 128, bo: int = 128, bk: int | None = None,
-                      n_out_pad: int, interpret: bool = False) -> jnp.ndarray:
-    """Output-stationary gather-fused rulebook GEMM (DESIGN.md §6).
+                      n_out_pad: int, epilogue: bool = False,
+                      interpret: bool = False):
+    """Output-stationary gather-fused rulebook GEMM (DESIGN.md §6, §14).
 
     feats (N, Cin) stays whole in HBM; gather_idx (M_pad,) maps each slot to
     its source row; scatter_idx (M_pad,) maps it to its output row, which by
@@ -264,6 +309,15 @@ def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
     plan-built gather-run metadata (whole-tile runs, per-GRP-group
     contiguity and liveness bitmasks). Returns the scattered (n_out_pad,
     Cout) output — no (M_pad, Cin) gather copy, no (M_pad, Cout) partials.
+
+    ``tile_bk_nz`` (n_m, n_k) refines the tile skip to Cin-block grain
+    (ops.tile_block_liveness); entries must never be live where the tile is
+    dead. None falls back to tile grain. With ``epilogue=True`` the kernel
+    additionally applies ``y = relu(out * epi_scale + epi_shift)`` masked by
+    ``epi_valid`` to each finished output block in VMEM (``tile_last`` marks
+    each block run's closing tile) and returns ``(out, nz)`` where nz
+    (n_out_pad, Cout/bn) int32 is the next layer's per-(row, bn-group)
+    liveness — emitted in-kernel, no HBM re-sweep (DESIGN.md §14).
     """
     _, c_in = feats.shape
     k_taps, _, c_out = weights.shape
@@ -278,23 +332,52 @@ def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
     for t in (tile_tap, tile_nz, tile_ob, tile_first, tile_run, grp_skip,
               grp_contig):
         assert t.shape[0] == n_m, (t.shape, n_m)
+    if tile_bk_nz is None:
+        tile_bk_nz = jnp.repeat(tile_nz[:, None], n_k, axis=1)
+    assert tile_bk_nz.shape == (n_m, n_k), (tile_bk_nz.shape, n_m, n_k)
+    if tile_last is None:
+        tile_last = jnp.concatenate(
+            [(tile_ob[1:] != tile_ob[:-1]).astype(jnp.int32),
+             jnp.ones(1, jnp.int32)])
+
+    # index maps see the 10 scalar-prefetch refs appended; only tap/ob used
+    ob_map = lambda i, k, j, tap, nz, bk_nz, ob, *pf: (ob[i], 0)
+    in_specs = [
+        # per-slot output targets as a VMEM row per tile (vector read;
+        # the scalar-prefetch SMEM copy only feeds address computation)
+        pl.BlockSpec((1, bm), lambda i, k, j, *pf: (i, 0)),
+        # full feature array, un-blocked: rows are DMA'd on demand
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        # weight block chosen by the prefetched tap id and the Cin block
+        pl.BlockSpec((1, bk, bn), lambda i, k, j, tap, *pf: (tap[i], k, j)),
+    ]
+    operands = [tile_tap, tile_nz, tile_bk_nz, tile_ob, tile_first,
+                tile_last, tile_run, grp_skip, grp_contig, gather_idx,
+                scatter_idx.reshape(n_m, bm), feats, weights]
+    if epilogue:
+        assert epi_scale is not None and epi_shift is not None \
+            and epi_valid is not None
+        in_specs += [
+            pl.BlockSpec((1, c_out), lambda i, k, j, *pf: (0, 0)),
+            pl.BlockSpec((1, c_out), lambda i, k, j, *pf: (0, 0)),
+            pl.BlockSpec((bo, 1), ob_map),
+        ]
+        operands += [epi_scale.reshape(1, c_out).astype(jnp.float32),
+                     epi_shift.reshape(1, c_out).astype(jnp.float32),
+                     epi_valid.reshape(n_out_pad, 1).astype(jnp.int32)]
+        out_specs = [pl.BlockSpec((bo, c_out), ob_map),
+                     pl.BlockSpec((bo, n_n), ob_map)]
+        out_shape = [jax.ShapeDtypeStruct((n_out_pad, c_out), feats.dtype),
+                     jax.ShapeDtypeStruct((n_out_pad, n_n), jnp.int32)]
+    else:
+        out_specs = pl.BlockSpec((bo, c_out), ob_map)
+        out_shape = jax.ShapeDtypeStruct((n_out_pad, c_out), feats.dtype)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
+        num_scalar_prefetch=10,
         grid=(n_m, n_k, n_n),
-        in_specs=[
-            # per-slot output targets as a VMEM row per tile (vector read;
-            # the scalar-prefetch SMEM copy only feeds address computation)
-            pl.BlockSpec((1, bm),
-                         lambda i, k, j, *pf: (i, 0)),
-            # full feature array, un-blocked: rows are DMA'd on demand
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            # weight block chosen by the prefetched tap id and the Cin block
-            pl.BlockSpec((1, bk, bn),
-                         lambda i, k, j, tap, *pf: (tap[i], k, j)),
-        ],
-        out_specs=pl.BlockSpec(
-            (bo, c_out), lambda i, k, j, tap, nz, ob, *pf: (ob[i], 0)),
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((2, bm, bk), feats.dtype),
             pltpu.VMEM((bm, c_out), jnp.float32),
@@ -302,14 +385,14 @@ def spconv_gemm_fused(feats: jnp.ndarray, weights: jnp.ndarray,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_os_kernel, bm=bm, bn=bn, bo=bo, grp=grp),
+        functools.partial(_os_kernel, bm=bm, bn=bn, bo=bo, grp=grp,
+                          epilogue=epilogue),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_out_pad, c_out), feats.dtype),
+        out_shape=out_shape,
         # rows / acc scratch and the output block are carried across grid
         # steps, so every dimension must execute in order
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="spconv_gemm_fused",
-    )(tile_tap, tile_nz, tile_ob, tile_first, tile_run, grp_skip, grp_contig,
-      gather_idx, scatter_idx.reshape(n_m, bm), feats, weights)
+    )(*operands)

@@ -74,6 +74,15 @@ def hardware_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
+def spac_block_enabled() -> bool:
+    """Cin-block-grain SPAC toggle (``REPRO_SPAC_BLOCK``, runtime/flags.py).
+
+    Re-read per call like kernel_impl(); '0' drops the fused kernel back to
+    tile-grain skipping (the pre-§14 behavior) — output is identical either
+    way, only the elided DMA/MAC work changes."""
+    return os.environ.get("REPRO_SPAC_BLOCK", "1") != "0"
+
+
 class TapTiles(NamedTuple):
     """Output-blocked, tap-scheduled tile streams plus run metadata.
 
@@ -281,6 +290,24 @@ def tile_liveness(tiles: TapTiles, row_nz: jnp.ndarray) -> jnp.ndarray:
     return live.reshape(-1, tiles.bm).any(axis=1).astype(jnp.int32)
 
 
+def tile_block_liveness(tiles: TapTiles, blk_nz: jnp.ndarray) -> jnp.ndarray:
+    """(T, n_k) per-(tile, Cin-block) skip flags from per-row block liveness.
+
+    ``blk_nz`` is (N, Cin/bk) bool (sparsity.row_block_nonzero, or threaded
+    from the previous layer's fused epilogue via ActSparsity.block_liveness).
+    A (tile, Cin-block) pair is dead iff every valid slot's bk-slice is
+    exactly zero — the fused kernel then skips both the gather DMA and the
+    MAC of that block (DESIGN.md §14). Callers must keep ``blk_nz``
+    consistent with the ``row_nz`` used for tile liveness (AND it with
+    ``row_nz[:, None]``) so a live block never outlives its tile.
+    """
+    live = tiles.slot_valid[:, None] & jnp.take(blk_nz, tiles.gather_idx,
+                                                axis=0)
+    n_k = blk_nz.shape[1]
+    return live.reshape(tiles.n_tiles, tiles.bm, n_k).any(axis=1).astype(
+        jnp.int32)
+
+
 def pick_bk(c_in: int, *, bm: int, bn: int, bo: int, c_out: int,
             budget_bytes: int = VMEM_BUDGET_BYTES) -> int:
     """Largest Cin block dividing ``c_in`` that keeps the fused kernel's
@@ -324,59 +351,192 @@ def _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
-                tile_ob, tile_first, tile_run, grp_skip, grp_contig):
-    """Fused-kernel execution with an XLA-math backward (the Pallas kernel
-    has no transpose rule; the gradient re-derives through the oracle)."""
-    n_out, n_out_pad, bm, bn, bo, bk, interpret = cfg
+def _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz, tile_bk_nz,
+                tile_nz_geo, scatter_idx, tile_ob, tile_first, tile_run,
+                grp_skip, grp_contig):
+    """Fused execution (kernel or oracle) with the SPAC-correct backward.
+
+    ``tile_nz`` is the feature-refreshed (elided) liveness driving the
+    forward skips; ``tile_nz_geo`` is the geometry-only liveness. Elision
+    is forward-only lossless (DESIGN.md §2): a zero row contributes exactly
+    0, but d(out)/d(feats) of that row is wᵀ·g — so the backward
+    re-derives through the *un-elided* oracle math. The pre-fix code
+    replayed the VJP through ``tile_nz`` and silently zeroed ``dfeats``
+    for every exactly-zero row. cfg = (n_out, n_out_pad, bm, bn, bo, bk,
+    impl) — hashable, impl in ('pallas', 'interpret', 'ref').
+    """
+    n_out, n_out_pad, bm, bn, bo, bk, impl = cfg
+    if impl == "ref":
+        return _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz,
+                              scatter_idx, n_out=n_out, bm=bm, bn=bn)
     out = spconv_gemm_fused(feats, w, gather_idx, scatter_idx, tile_tap,
                             tile_nz, tile_ob, tile_first, tile_run,
-                            grp_skip, grp_contig, bm=bm, bn=bn, bo=bo,
-                            bk=bk, n_out_pad=n_out_pad, interpret=interpret)
+                            grp_skip, grp_contig, tile_bk_nz=tile_bk_nz,
+                            bm=bm, bn=bn, bo=bo, bk=bk, n_out_pad=n_out_pad,
+                            interpret=impl == "interpret")
     return out[:n_out]
 
 
-def _exec_fused_fwd(cfg, feats, w, gather_idx, tile_tap, tile_nz,
-                    scatter_idx, tile_ob, tile_first, tile_run, grp_skip,
-                    grp_contig):
+def _exec_fused_fwd(cfg, feats, w, gather_idx, tile_tap, tile_nz, tile_bk_nz,
+                    tile_nz_geo, scatter_idx, tile_ob, tile_first, tile_run,
+                    grp_skip, grp_contig):
     out = _exec_fused(cfg, feats, w, gather_idx, tile_tap, tile_nz,
-                      scatter_idx, tile_ob, tile_first, tile_run, grp_skip,
-                      grp_contig)
-    return out, (feats, w, gather_idx, tile_tap, tile_nz, scatter_idx,
-                 tile_ob, tile_first, tile_run, grp_skip, grp_contig)
+                      tile_bk_nz, tile_nz_geo, scatter_idx, tile_ob,
+                      tile_first, tile_run, grp_skip, grp_contig)
+    return out, (feats, w, gather_idx, tile_tap, tile_nz, tile_bk_nz,
+                 tile_nz_geo, scatter_idx, tile_ob, tile_first, tile_run,
+                 grp_skip, grp_contig)
 
 
 def _exec_fused_bwd(cfg, res, g):
     n_out, _, bm, bn, *_ = cfg
-    feats, w, gather_idx, tile_tap, tile_nz, scatter_idx, *ints = res
+    (feats, w, gather_idx, tile_tap, tile_nz, tile_bk_nz, tile_nz_geo,
+     scatter_idx, *ints) = res
+    # geometry liveness, NOT the elided tile_nz: see _exec_fused docstring
     _, vjp = jax.vjp(
-        lambda f, ww: _exec_ref_math(f, ww, gather_idx, tile_tap, tile_nz,
-                                     scatter_idx, n_out=n_out, bm=bm, bn=bn),
+        lambda f, ww: _exec_ref_math(f, ww, gather_idx, tile_tap,
+                                     tile_nz_geo, scatter_idx, n_out=n_out,
+                                     bm=bm, bn=bn),
         feats, w)
     dfeats, dw = vjp(g)
     zeros_i32 = [np.zeros(a.shape, jax.dtypes.float0)
-                 for a in (gather_idx, tile_tap, tile_nz, scatter_idx, *ints)]
+                 for a in (gather_idx, tile_tap, tile_nz, tile_bk_nz,
+                           tile_nz_geo, scatter_idx, *ints)]
     return (dfeats, dw, *zeros_i32)
 
 
 _exec_fused.defvjp(_exec_fused_fwd, _exec_fused_bwd)
 
 
+class FusedEpilogue(NamedTuple):
+    """BN-inference + ReLU folded into the fused kernel (DESIGN.md §14).
+
+    ``y = relu(out * scale + shift)`` applied to each finished output block
+    while it is still VMEM-resident, masked to zero on invalid rows.
+    Inference-only: differentiating through it raises (the pre-activation
+    output is never materialized). Build scale/shift with
+    spconv.fold_bn_inference — the conv bias folds into ``shift``, so pass
+    ``bias=None`` alongside.
+    """
+    scale: jnp.ndarray   # (Cout,) float32
+    shift: jnp.ndarray   # (Cout,) float32
+    valid: jnp.ndarray   # (n_out,) bool
+
+
+def _epilogue_math(out, scale, shift, valid, bn):
+    """XLA mirror of the in-kernel epilogue: same op order (f32 affine,
+    ReLU, valid mask, dtype cast) and the per-(row, bn-group) liveness
+    computed AFTER the cast, so the emitted masks are exactly a fresh
+    sweep of the returned output. The affine itself may differ from the
+    in-kernel result by an ulp (fused multiply-add rounding) — masks stay
+    self-consistent per path either way."""
+    y = (out.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+         + shift[None, :].astype(jnp.float32))
+    y = jnp.where(valid[:, None], jnp.maximum(y, 0.0), 0.0)
+    yc = y.astype(out.dtype)
+    n, c = yc.shape
+    g = -(-c // bn)
+    f = jnp.pad(yc, ((0, 0), (0, g * bn - c))) if g * bn != c else yc
+    blk_nz = jnp.any(f.reshape(n, g, bn) != 0, axis=-1)
+    return yc, blk_nz
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _epi_xla(bn, out, scale, shift, valid):
+    return _epilogue_math(out, scale, shift, valid, bn)
+
+
+def _epi_xla_fwd(bn, out, scale, shift, valid):
+    return _epi_xla(bn, out, scale, shift, valid), ()
+
+
+def _epi_xla_bwd(bn, res, g):
+    raise NotImplementedError(
+        "the fused BN/ReLU epilogue is inference-only: its backward would "
+        "differentiate through elided activation state. For training, "
+        "compose subm_conv3 + batch_norm + relu unfused.")
+
+
+_epi_xla.defvjp(_epi_xla_fwd, _epi_xla_bwd)
+
+
+def apply_epilogue_xla(out: jnp.ndarray, epilogue: FusedEpilogue, *,
+                       bn: int = 128):
+    """Apply a FusedEpilogue outside the kernel (the impl='xla' path).
+
+    Returns ``(y, ActSparsity)`` exactly matching what the in-kernel
+    epilogue emits. Inference-only (differentiation raises), like the
+    kernel path."""
+    yc, blk_nz = _epi_xla(bn, out, epilogue.scale, epilogue.shift,
+                          epilogue.valid)
+    return yc, _sparsity.ActSparsity(row_nz=blk_nz.any(-1), blk_nz=blk_nz,
+                                     blk=bn)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _exec_fused_epi(cfg, feats, w, scale, shift, valid_pad, gather_idx,
+                    tile_tap, tile_nz, tile_bk_nz, scatter_idx, tile_ob,
+                    tile_first, tile_run, grp_skip, grp_contig):
+    """Fused execution + in-kernel BN/ReLU epilogue and activation-sparsity
+    emission. Returns (out[:n_out], nz[:n_out]) where nz is the int32
+    per-(row, bn-group) liveness of the *next* layer's input. scale/shift
+    are Cout-padded f32; valid_pad is (n_out_pad,). Inference-only."""
+    n_out, n_out_pad, bm, bn, bo, bk, impl = cfg
+    if impl == "ref":
+        out = _exec_ref_math(feats, w, gather_idx, tile_tap, tile_nz,
+                             scatter_idx, n_out=n_out, bm=bm, bn=bn)
+        yc, blk_nz = _epilogue_math(out, scale, shift, valid_pad[:n_out], bn)
+        return yc, blk_nz.astype(jnp.int32)
+    out, nz = spconv_gemm_fused(feats, w, gather_idx, scatter_idx, tile_tap,
+                                tile_nz, tile_ob, tile_first, tile_run,
+                                grp_skip, grp_contig, tile_bk_nz=tile_bk_nz,
+                                epi_scale=scale, epi_shift=shift,
+                                epi_valid=valid_pad, bm=bm, bn=bn, bo=bo,
+                                bk=bk, n_out_pad=n_out_pad, epilogue=True,
+                                interpret=impl == "interpret")
+    return out[:n_out], nz[:n_out]
+
+
+def _exec_fused_epi_fwd(cfg, *args):
+    return _exec_fused_epi(cfg, *args), ()
+
+
+def _exec_fused_epi_bwd(cfg, res, g):
+    raise NotImplementedError(
+        "the fused BN/ReLU epilogue is inference-only: its backward would "
+        "differentiate through elided activation state. For training, "
+        "compose subm_conv3 + batch_norm + relu unfused.")
+
+
+_exec_fused_epi.defvjp(_exec_fused_epi_fwd, _exec_fused_epi_bwd)
+
+
 def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
                 bias: jnp.ndarray | None = None, *, n_out: int,
-                row_nz: jnp.ndarray | None = None, bn: int = 128,
-                bk: int | None = None,
-                impl: str | None = None) -> jnp.ndarray:
+                row_nz: jnp.ndarray | None = None,
+                act: "_sparsity.ActSparsity | None" = None,
+                epilogue: FusedEpilogue | None = None, bn: int = 128,
+                bk: int | None = None, impl: str | None = None):
     """Execute a rulebook from pre-built tiles (the ConvPlan hot path).
 
     feats stays un-gathered; the output-stationary fused kernel (or its
     oracle) pulls rows by ``tiles.gather_idx`` and scatter-adds in-kernel.
-    ``row_nz`` refreshes tile liveness for SPAC; when None the build-time
-    ``tile_nz`` is used as-is. C_out is zero-padded to a bn multiple for
-    the kernel and sliced back afterwards; the Cin block ``bk`` is picked
-    from the DESIGN.md §6 VMEM budget unless given. Differentiable under
-    every impl (the Pallas paths carry a custom VJP that re-derives the
-    gradient through the XLA oracle math).
+    ``row_nz`` refreshes tile liveness for SPAC; ``act`` threads the
+    previous layer's epilogue-emitted ActSparsity instead (row grain plus,
+    when its groups align with this layer's Cin blocking, block grain
+    without any HBM re-sweep); when both are None the build-time geometry
+    ``tile_nz`` is used as-is. Cin-block-grain skipping inside live tiles
+    engages whenever liveness is available and ``REPRO_SPAC_BLOCK`` is on.
+    C_out is zero-padded to a bn multiple for the kernel and sliced back
+    afterwards; the Cin block ``bk`` is picked from the DESIGN.md §6 VMEM
+    budget unless given. Differentiable under every impl — the custom VJP
+    re-derives the gradient through the *un-elided* XLA oracle math, so
+    SPAC stays forward-only (DESIGN.md §2).
+
+    With ``epilogue`` (inference-only) the fused BN/ReLU epilogue runs on
+    each finished output block and the return value becomes
+    ``(out, ActSparsity)`` for the next layer; ``bias`` must then be None
+    (fold it into the epilogue shift).
 
     Dispatch is guarded (runtime/guard.py, DESIGN.md §11): the resolved
     impl is retried once (a transient/injected fault recovers with the
@@ -387,32 +547,77 @@ def apply_tiles(feats: jnp.ndarray, weights: jnp.ndarray, tiles: TapTiles,
     impl = impl or kernel_impl()
     if impl not in ("pallas", "interpret", "ref"):
         raise ValueError(f"unknown kernel impl {impl!r}")
+    if epilogue is not None and bias is not None:
+        raise ValueError("bias and epilogue together would apply the bias "
+                         "twice: fold it into the epilogue shift "
+                         "(spconv.fold_bn_inference)")
     bm, bo = tiles.bm, tiles.bo
-    tile_nz = tiles.tile_nz if row_nz is None else tile_liveness(tiles, row_nz)
+    c_in = feats.shape[1]
     c_out = weights.shape[-1]
     w = _pad_cout(weights, bn)
+    c_out_pad = w.shape[-1]
+    bk_ = bk if bk is not None else pick_bk(c_in, bm=bm, bn=bn, bo=bo,
+                                            c_out=c_out_pad)
+    if c_in % bk_ != 0:
+        raise ValueError(f"bk={bk_} must divide Cin={c_in}")
+    n_k = c_in // bk_
+
+    if row_nz is None and act is not None:
+        row_nz = act.row_nz
+    tile_nz_geo = tiles.tile_nz
+    if row_nz is None:
+        tile_nz = tile_nz_geo
+        tile_bk_nz = jnp.repeat(tile_nz[:, None], n_k, axis=1)
+    else:
+        tile_nz = tile_liveness(tiles, row_nz)
+        blk_nz = None
+        if n_k > 1 and spac_block_enabled():
+            if act is not None:
+                blk_nz = act.block_liveness(c_in, bk_)
+            if blk_nz is None:
+                blk_nz = _sparsity.row_block_nonzero(feats, bk_)
+            # keep block liveness consistent with the (possibly coarser)
+            # row mask: a live block must never outlive its tile
+            blk_nz = blk_nz & row_nz[:, None]
+        if blk_nz is None:
+            tile_bk_nz = jnp.repeat(tile_nz[:, None], n_k, axis=1)
+        else:
+            tile_bk_nz = tile_block_liveness(tiles, blk_nz)
+    n_out_pad = -(-n_out // bo) * bo
+
+    if epilogue is not None:
+        scale = jnp.pad(epilogue.scale.astype(jnp.float32),
+                        (0, c_out_pad - c_out))
+        shift = jnp.pad(epilogue.shift.astype(jnp.float32),
+                        (0, c_out_pad - c_out))
+        valid_pad = jnp.pad(epilogue.valid.astype(jnp.int32),
+                            (0, n_out_pad - n_out))
 
     def _run(one: str):
         _fault.check("gemm")
-        if one in ("pallas", "interpret"):
-            c_out_pad = w.shape[-1]
-            bk_ = bk if bk is not None else pick_bk(
-                feats.shape[1], bm=bm, bn=bn, bo=bo, c_out=c_out_pad)
-            n_out_pad = -(-n_out // bo) * bo
-            cfg = (n_out, n_out_pad, bm, bn, bo, bk_, one == "interpret")
-            return _exec_fused(cfg, feats, w, tiles.gather_idx,
-                               tiles.tile_tap, tile_nz, tiles.scatter_idx,
-                               tiles.tile_ob, tiles.tile_first,
-                               tiles.tile_run, tiles.grp_skip,
-                               tiles.grp_contig)
-        return _exec_ref_math(feats, w, tiles.gather_idx, tiles.tile_tap,
-                              tile_nz, tiles.scatter_idx, n_out=n_out,
-                              bm=bm, bn=bn)
+        cfg = (n_out, n_out_pad, bm, bn, bo, bk_, one)
+        if epilogue is not None:
+            return _exec_fused_epi(cfg, feats, w, scale, shift, valid_pad,
+                                   tiles.gather_idx, tiles.tile_tap,
+                                   tile_nz, tile_bk_nz, tiles.scatter_idx,
+                                   tiles.tile_ob, tiles.tile_first,
+                                   tiles.tile_run, tiles.grp_skip,
+                                   tiles.grp_contig)
+        return _exec_fused(cfg, feats, w, tiles.gather_idx, tiles.tile_tap,
+                           tile_nz, tile_bk_nz, tile_nz_geo,
+                           tiles.scatter_idx, tiles.tile_ob,
+                           tiles.tile_first, tiles.tile_run, tiles.grp_skip,
+                           tiles.grp_contig)
 
     chain = _guard.FALLBACK_CHAINS["gemm"].get(impl, ())
-    out = _guard.dispatch("gemm", impl, chain, _run,
+    res = _guard.dispatch("gemm", impl, chain, _run,
                           key=(tuple(feats.shape), w.shape[-1], bm, bo))
-    out = out[:, :c_out]
+    if epilogue is not None:
+        out, nz = res
+        nzb = nz.astype(bool)
+        return out[:, :c_out], _sparsity.ActSparsity(
+            row_nz=nzb.any(-1), blk_nz=nzb, blk=bn)
+    out = res[:, :c_out]
     if bias is not None:
         out = out + bias
     return out
@@ -423,13 +628,18 @@ def apply_kmap_fused(feats: jnp.ndarray, weights: jnp.ndarray,
                      spac: bool = True, bm: int = 128, bn: int = 128,
                      bo: int | None = None, bk: int | None = None,
                      impl: str | None = None) -> jnp.ndarray:
-    """One-shot fused path: build output-blocked tiles (row elision folded
-    in when ``spac``) and execute without materializing the gathered lhs."""
+    """One-shot fused path: build geometry tiles and execute without
+    materializing the gathered lhs. SPAC liveness rides as a per-layer
+    refresh (``row_nz``), never folded into the build: build-time elision
+    would re-pack the tap segments (different summation order — no longer
+    bit-identical to spac=False) and bake the feature-dependent mask into
+    the gather stream where the backward could not undo it (DESIGN.md §2).
+    """
     impl = impl or kernel_impl()
     row_nz = _sparsity.row_nonzero(feats) if spac else None
-    tiles = build_tap_tiles(kmap, row_nz, bm=bm, bo=bo)
+    tiles = build_tap_tiles(kmap, None, bm=bm, bo=bo)
     return apply_tiles(feats, weights, tiles, bias, n_out=kmap.shape[0],
-                       bn=bn, bk=bk, impl=impl)
+                       row_nz=row_nz, bn=bn, bk=bk, impl=impl)
 
 
 def apply_kmap(feats: jnp.ndarray, weights: jnp.ndarray, kmap: jnp.ndarray,

@@ -33,6 +33,9 @@ class MinkUNetConfig:
     bm: int = 128                   # rulebook tile rows (kernel m-tile)
     bo: int | None = None           # output-stationary block rows (None:
                                     # build default, DESIGN.md §5)
+    fused_epilogue: bool = False    # fuse BN+ReLU into the Subm3 kernel and
+                                    # thread activation sparsity between
+                                    # stacked blocks (inference only, §14)
 
 
 SMALL = MinkUNetConfig()
@@ -70,14 +73,25 @@ def init_model(cfg: MinkUNetConfig, key) -> dict:
     return p
 
 
-def _apply_subm(st, params, cfg, training, n_max, cache, impl, plan=None):
+def _apply_subm(st, params, cfg, training, n_max, cache, impl, plan=None,
+                act=None):
+    """One Subm3 + BN + ReLU block. Returns ``(st, act)`` where act is the
+    fused epilogue's emitted ActSparsity (None on the unfused path) — feed
+    it to the next block at the same resolution so its SPAC liveness
+    refresh costs no HBM sweep (DESIGN.md §14)."""
+    if cfg.fused_epilogue and not training:
+        return spconv.subm_conv3_bn_relu(
+            st, params["conv"], params["bn"], max_blocks=n_max,
+            method=cfg.map_method, grid_bits=cfg.grid_bits,
+            batch_bits=cfg.batch_bits, spac=cfg.spac, act=act, plan=plan,
+            cache=cache, impl=impl, bm=cfg.bm, bo=cfg.bo)
     st = spconv.subm_conv3(st, params["conv"], max_blocks=n_max,
                            method=cfg.map_method, grid_bits=cfg.grid_bits,
                            batch_bits=cfg.batch_bits, spac=cfg.spac,
-                           plan=plan, cache=cache, impl=impl, bm=cfg.bm,
-                           bo=cfg.bo)
+                           act=act, plan=plan, cache=cache, impl=impl,
+                           bm=cfg.bm, bo=cfg.bo)
     st, _ = spconv.batch_norm(st, params["bn"], training=training)
-    return spconv.relu(st)
+    return spconv.relu(st), None
 
 
 class MinkPlans(NamedTuple):
@@ -177,8 +191,8 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
     n_max = st.n_max
     n_enc = len(cfg.enc)
     st = spconv.mask_feats(st)
-    st = _apply_subm(st, params["stem"], cfg, training, n_max, cache, impl,
-                     plan=plans.subm[0] if plans else None)
+    st, _ = _apply_subm(st, params["stem"], cfg, training, n_max, cache,
+                        impl, plan=plans.subm[0] if plans else None)
 
     skips, maps_stack = [st], []
     gb = cfg.grid_bits
@@ -191,10 +205,12 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
                                    bo=cfg.bo)
         down, _ = spconv.batch_norm(down, stage["down"]["bn"], training=training)
         st = spconv.relu(down)
+        act = None    # new resolution/channels: previous masks don't apply
         for b in range(cfg.blocks):
-            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
-                             cache, impl,
-                             plan=plans.subm[i + 1] if plans else None)
+            st, act = _apply_subm(st, stage[f"block{b}"], cfg, training,
+                                  n_max, cache, impl,
+                                  plan=plans.subm[i + 1] if plans else None,
+                                  act=act)
         maps_stack.append(maps)
         skips.append(st)
 
@@ -209,10 +225,12 @@ def forward(params, st: SparseTensor, cfg: MinkUNetConfig, *,
         up = spconv.relu(up)
         st = up.replace_feats(
             jnp.concatenate([up.feats, target.feats], axis=-1))
+        act = None    # concat changed the channel layout: masks are stale
         for b in range(cfg.blocks):
-            st = _apply_subm(st, stage[f"block{b}"], cfg, training, n_max,
-                             cache, impl,
-                             plan=plans.subm[n_enc - 1 - i] if plans else None)
+            st, act = _apply_subm(st, stage[f"block{b}"], cfg, training,
+                                  n_max, cache, impl,
+                                  plan=plans.subm[n_enc - 1 - i]
+                                  if plans else None, act=act)
 
     logits = st.feats @ params["head"]["w"][0] + params["head"]["b"]
     return jnp.where(st.valid[:, None], logits, 0)

@@ -22,6 +22,15 @@ the others bind at construction or import as noted):
     elsewhere. (The pure-XLA tap scan is not an env choice; request it
     per call with ``impl='xla'``.)
 
+``REPRO_SPAC_BLOCK``
+    Set to ``0`` to disable Cin-block-grain SPAC skipping inside live
+    tiles (DESIGN.md §14) — the fused kernel then falls back to
+    tile-grain skipping only. Forward output is bit-identical either
+    way; only the elided row-DMA/MAC work changes. Re-read per call by
+    :func:`repro.kernels.spconv_gemm.ops.spac_block_enabled` (never
+    frozen into a trace), consumed by
+    :func:`repro.kernels.spconv_gemm.ops.apply_tiles`.
+
 ``REPRO_PLANCACHE_CONTENT``
     Set to ``0`` to disable content-addressed PlanCache keys process-wide
     (identity-only, the pre-PR-5 behavior; DESIGN.md §10). Read by
