@@ -41,7 +41,13 @@ spac-on forward bit-identical to spac-off under interpret and ref
 impls, and the fused BN/ReLU epilogue matching the unfused math with
 its emitted ActSparsity exactly a fresh sweep of its own output —
 DESIGN.md §14; records in BENCH_spac.json, rendered by
-benchmarks/roofline.py --spac).
+benchmarks/roofline.py --spac). The final gate is the streaming gate
+(benchmarks/stream_replay.run_smoke: a low-turnover moving-sensor
+replay through two StreamSessions must keep the delta path bit-identical
+to the from-scratch path at the table, kmap, and forward-logit level on
+every frame, search strictly fewer rows on every post-warmup frame and
+under 0.5x overall, and cost zero stage-2 query rows on a repeated
+frame — DESIGN.md §15; records in BENCH_stream.json).
 """
 from __future__ import annotations
 
@@ -62,7 +68,8 @@ def main() -> None:
     from benchmarks import (cache_model, caching_energy, chaos,
                             overall_comparison, restart_replay,
                             rulebook_exec, search_speedup, serve_replay,
-                            sparsity_saving, weight_distribution)
+                            sparsity_saving, stream_replay,
+                            weight_distribution)
 
     if args.smoke:
         print("name,us_per_call,derived")
@@ -130,6 +137,14 @@ def main() -> None:
             print("spac_smoke,nan,ERROR", flush=True)
             sys.exit(1)
         print("spac_smoke,0.0,OK", flush=True)
+        try:
+            for row in stream_replay.run_smoke():
+                print(row, flush=True)
+        except Exception:                                # noqa: BLE001
+            traceback.print_exc()
+            print("stream_smoke,nan,ERROR", flush=True)
+            sys.exit(1)
+        print("stream_smoke,0.0,OK", flush=True)
         return
 
     suites = [
@@ -143,6 +158,7 @@ def main() -> None:
         ("robustness", chaos.run),
         ("serving", serve_replay.run),
         ("persistence", restart_replay.run),
+        ("streaming", stream_replay.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -51,7 +51,14 @@
 # bit-identical to spac-off under both interpret and ref impls, and
 # the fused BN/ReLU epilogue matching the unfused math with its
 # emitted ActSparsity exactly a fresh sweep of its own output
-# (DESIGN.md §14) — results in BENCH_spac.json.
+# (DESIGN.md §14) — results in BENCH_spac.json; and the streaming gate
+# (stream_replay.run_smoke): a low-turnover moving-sensor replay
+# through two StreamSessions — delta path vs from-scratch — must stay
+# bit-identical per frame at the QueryTable, kmap, and forward-logit
+# level, search strictly fewer rows than scratch on every post-warmup
+# frame and under 0.5x overall, and cost zero stage-2 query rows on a
+# byte-identical repeated frame (DESIGN.md §15) — results in
+# BENCH_stream.json.
 #
 # The docs gate (scripts/check_docs.py) keeps README/DESIGN/ROADMAP and
 # benchmarks/README honest: internal anchors, referenced file paths, and
@@ -72,7 +79,7 @@ python scripts/check_docs.py
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== rulebook + search + cache + robustness + serving + persistence + spac smoke gates =="
+echo "== rulebook + search + cache + robustness + serving + persistence + spac + streaming smoke gates =="
 python -m benchmarks.run --smoke
 
 echo "CI OK"

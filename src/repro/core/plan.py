@@ -90,6 +90,12 @@ def _octent_ops():
 
 MAPSEARCH_CALLS = [0]
 
+#: subm3 plans assembled from a streaming delta patch instead of a full
+#: map search (DESIGN.md §15) — the warm-start sibling of
+#: MAPSEARCH_CALLS, so streaming tests can assert a small-delta frame
+#: patched rather than searched.
+DELTA_PATCHES = [0]
+
 
 def mapsearch_call_count() -> int:
     """Map-search invocations since the last reset (trace-time count)."""
@@ -98,6 +104,15 @@ def mapsearch_call_count() -> int:
 
 def reset_mapsearch_counter() -> None:
     MAPSEARCH_CALLS[0] = 0
+
+
+def delta_patch_count() -> int:
+    """Warm-started (delta-patched) subm3 builds since the last reset."""
+    return DELTA_PATCHES[0]
+
+
+def reset_delta_patch_counter() -> None:
+    DELTA_PATCHES[0] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -493,11 +508,29 @@ def _require_out_capacity(overflow_flag, n_true, budget: int):
     return overflow
 
 
+class SubmWarmStart(NamedTuple):
+    """Delta warm-start for :func:`subm3_plan` (DESIGN.md §15).
+
+    ``patch()`` produces ``(kmap, table)`` for the *new* frame's
+    coordinate arrays by incrementally updating the previous frame's
+    structures (core/stream.py: directory/table splice + dirty-row
+    re-query) — bit-identical to a from-scratch build over the same
+    arrays, but paying only for the changed neighborhoods. It is only
+    invoked on a cache miss: the statics are unchanged from the scratch
+    build, so the content key of the new arrays is what distinguishes
+    "same geometry" (content hit — neither searched nor patched) from
+    "small delta" (miss — patched in place of a full search).
+    """
+
+    patch: object   # () -> (kmap (N, 27) int32, octent ops.QueryTable)
+
+
 def subm3_plan(coords, batch, valid, *, max_blocks: int,
                method: str = "octree", grid_bits: int = 7,
                batch_bits: int = 4, bm: int = 128, bo: int | None = None,
                search_impl: str | None = None,
-               cache: PlanCache | None = None) -> ConvPlan:
+               cache: PlanCache | None = None,
+               warm: SubmWarmStart | None = None) -> ConvPlan:
     """Submanifold 3x3x3 plan: outputs == inputs, 27 taps.
 
     Args:
@@ -517,6 +550,13 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
         block-key axes, else the Pallas kernel on TPU / its XLA
         bit-oracle elsewhere). 'xla' is the retained dense-table builder.
       cache: memoize per coordinate set (identity + content keys).
+      warm: a :class:`SubmWarmStart` whose ``patch()`` supplies
+        ``(kmap, table)`` incrementally from the previous frame
+        (DESIGN.md §15). Consulted only on a cache miss, and only for
+        the table-backed octree impls — other impls ignore it and build
+        from scratch. ``warm`` is deliberately *not* part of the cache
+        key: a patched plan is bit-identical to the scratch plan for the
+        same arrays, so both may serve the same key.
 
     Returns:
       A :class:`ConvPlan` with kind='subm3', 27 taps, out_* = None.
@@ -538,7 +578,6 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
 
     def build(fp):
         fault.check("plan")
-        MAPSEARCH_CALLS[0] += 1
         oct_ops = _octent_ops()
         offs = jnp.asarray(morton.subm3_offsets())
         overflow = None
@@ -554,6 +593,21 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
                 pin_key = ("qtable", fp, max_blocks, grid_bits, batch_bits,
                            sharding.mesh_fingerprint())
                 table = store.get(pin_key, anchor=anchor, verify=verify)
+            if warm is not None and simpl in ("pallas", "interpret", "ref"):
+                # streaming warm start (DESIGN.md §15): the patch derives
+                # the new frame's structures from the previous frame's —
+                # any dirty-row queries it runs are counted by
+                # octent.ops.QUERY_ROWS, not as a full map search
+                DELTA_PATCHES[0] += 1
+                kmap, table = warm.patch()
+                overflow = _require_block_capacity(table.n_blocks,
+                                                   max_blocks)
+                if pin_key is not None:
+                    store.put(pin_key, table, anchor=anchor)
+                tiles = sg_ops.build_tap_tiles(kmap, None, bm=bm, bo=bo)
+                return ConvPlan("subm3", kmap, tiles, coords.shape[0], 27,
+                                None, None, None, None, overflow)
+            MAPSEARCH_CALLS[0] += 1
             if simpl in ("pallas", "interpret", "ref") and table is None:
                 table = oct_ops.build_query_table(
                     coords, batch, valid, max_blocks=max_blocks,
@@ -566,6 +620,7 @@ def subm3_plan(coords, batch, valid, *, max_blocks: int,
                 offsets=offs, table=table)
             overflow = _require_block_capacity(n_blocks, max_blocks)
         elif method == "sorted":
+            MAPSEARCH_CALLS[0] += 1
             if not mapsearch.sorted_key_fits(grid_bits, batch_bits):
                 raise ValueError(
                     f"map search method 'sorted' needs the composite key "

@@ -1,0 +1,761 @@
+"""Streaming frames: incremental octree delta updates (DESIGN.md §15).
+
+Every workload the paper motivates (robotics, AV, AR/VR) is temporal, yet
+stage 1 + stage 2 of OCTENT rebuild the whole map per cloud. SpOctA's
+octree encoding makes deltas cheap: the directory is *sorted* block keys,
+so a frame-to-frame change localizes to contiguous directory ranges, and
+the compacted ``tkey``/``tval`` table is sorted by (block rank, local
+code), so whole untouched block ranges shift rank without re-sorting.
+This module is that delta path:
+
+  * :func:`diff_frame` — Morton-sorted set difference of frame t+1
+    against frame t's canonical slot layout: which slots are evicted,
+    which incoming voxels are inserted (assigned freed slots in Morton
+    order), which 16^3 blocks are dirty, and which voxel rows' 27-
+    neighborhoods touch a dirty block (only those need re-searching).
+  * :func:`apply_table_delta` — splice the insert/evict set into the
+    pinned stage-1 :class:`~repro.kernels.octent.ops.QueryTable`:
+    removed/added directory ranges merge in, kept block ranges of the
+    compacted table shift rank by a monotone remap, evicted entries
+    drop, inserted entries merge — bit-identical to a from-scratch
+    ``build_query_table`` over the same canonical arrays.
+  * :class:`StreamSession` — drives a full MinkUNet over a frame
+    sequence with one long-lived PinnedStore: per resolution level it
+    keeps slot-stable canonical arrays, delta-patches the subm3 plans
+    via :class:`~repro.core.plan.SubmWarmStart` + ``build_kmap(update=)``
+    (re-searching only the dirty rows), and rebuilds strided plans from
+    slot probes against the parent level's table.
+
+**The canonical slot contract** (what makes "incremental == from-scratch"
+a bit-identity, not an allclose): each level's coordinate arrays have a
+fixed row budget N and evolve slot-stably — a voxel present in both
+frames keeps its row; an evicted voxel frees its row (valid -> False,
+coords left stale); inserted voxels take freed rows in Morton (block key,
+local code) order, lowest free slot first. Both the delta path and the
+from-scratch oracle consume the *same* canonical arrays, so their tables
+and kmaps (whose values are slot indices) must match bit-for-bit —
+asserted per frame by tests/test_stream.py over generated sequences.
+
+The dirty-row re-search rule: a row must be re-queried iff it was
+inserted, evicted, or any of its 27 neighborhood offsets lands in a block
+whose membership changed. Rows failing all three have every query target
+in an unchanged block, where both membership *and* slot index are
+unchanged — their kmap rows are reused verbatim (kmap values are slots,
+immune to directory rank shifts).
+
+Flags (runtime/flags.py): ``REPRO_STREAM`` gates the delta path (default
+on; '0' forces every frame through the scratch path — the parity
+baseline), ``REPRO_STREAM_MAX_DIRTY`` is the dirty-row fraction above
+which a frame falls back to a full rebuild (default 0.5 — at high
+turnover the splice + partial query costs more than it saves).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning, mapsearch, morton, validate
+from repro.core import plan as planlib
+from repro.core.mapsearch import INVALID, StridedMaps
+from repro.kernels.octent import ops as oct_ops
+from repro.kernels.octent.kernel import LANE
+from repro.kernels.octent.ref import encode_queries, octent_query_ref
+from repro.kernels.spconv_gemm import ops as sg_ops
+from repro.runtime import guard, sharding
+
+
+#: membership/slot probes submitted since the last reset (the stage-1
+#: sibling of octent.ops.QUERY_ROWS): diff_frame probes every incoming
+#: row once per frame, and the canonical Gconv2 plan probes child
+#: parents against the parent level's table. Counted by the eager
+#: wrappers (never inside jit).
+PROBE_ROWS = [0]
+
+
+def probe_row_count() -> int:
+    """Slot-probe rows submitted since the last reset."""
+    return PROBE_ROWS[0]
+
+
+def reset_probe_row_counter() -> None:
+    PROBE_ROWS[0] = 0
+
+
+def stream_enabled() -> bool:
+    """REPRO_STREAM: '0' disables delta patching (scratch every frame)."""
+    return os.environ.get("REPRO_STREAM", "1") != "0"
+
+
+def max_dirty_frac() -> float:
+    """REPRO_STREAM_MAX_DIRTY: dirty-row fraction above which a frame is
+    rebuilt from scratch instead of delta-patched (default 0.5)."""
+    return float(os.environ.get("REPRO_STREAM_MAX_DIRTY", "0.5"))
+
+
+class FrameState(NamedTuple):
+    """One level's slot-stable geometry state (module doc contract)."""
+
+    coords: jnp.ndarray          # (N, 3) int32 canonical slot coords
+    batch: jnp.ndarray           # (N,) int32
+    valid: jnp.ndarray           # (N,) bool
+    table: oct_ops.QueryTable    # stage-1 structure over these arrays
+    kmap: jnp.ndarray            # (N, 27) int32 subm3 kernel map
+
+
+class FrameDelta(NamedTuple):
+    """Morton-sorted set difference of one frame against the previous
+    canonical layout (:func:`diff_frame`)."""
+
+    slot_of: jnp.ndarray        # (N,) int32 canonical slot per incoming
+                                # row; -1 for invalid/duplicate rows
+    inserted: jnp.ndarray       # (N,) bool, per canonical slot
+    evicted: jnp.ndarray        # (N,) bool, per canonical slot
+    dirty_rows: jnp.ndarray     # (N,) bool: must be re-searched
+    dirty_blocks: jnp.ndarray   # (max_blocks,) int32 sorted, INVALID pad
+    n_dirty_blocks: jnp.ndarray  # () int32 true count (may exceed
+                                 # max_blocks: the delta set truncated —
+                                 # callers must fall back to scratch)
+    n_inserted: jnp.ndarray     # () int32
+    n_evicted: jnp.ndarray      # () int32
+    n_dirty_rows: jnp.ndarray   # () int32
+    n_free: jnp.ndarray         # () int32 free slots before inserts
+
+
+def empty_state(n: int, *, max_blocks: int, grid_bits: int = 7,
+                batch_bits: int = 4) -> FrameState:
+    """The all-invalid frame-0 state: diffing the first real frame
+    against it makes frame 1 flow through the same code path as every
+    other frame (it is simply a 100 %-insert delta). Built by the
+    scratch builder itself so the bit-identity invariant holds from the
+    start."""
+    coords = jnp.zeros((n, 3), jnp.int32)
+    batch = jnp.zeros((n,), jnp.int32)
+    valid = jnp.zeros((n,), bool)
+    table = oct_ops.build_query_table(coords, batch, valid,
+                                      max_blocks=max_blocks,
+                                      grid_bits=grid_bits,
+                                      batch_bits=batch_bits)
+    kmap = jnp.full((n, 27), -1, jnp.int32)
+    return FrameState(coords, batch, valid, table, kmap)
+
+
+_ZERO_OFFSET = np.zeros((1, 3), np.int32)
+
+
+def probe_slots(table: oct_ops.QueryTable, coords, batch, valid, *,
+                grid_bits: int = 7, batch_bits: int = 4) -> jnp.ndarray:
+    """Membership/slot probe: the canonical slot of each (coord, batch)
+    in ``table``'s layout, -1 for misses/invalid rows. A single-offset
+    (0,0,0) OCTENT query — ``tval`` values *are* slot indices, so the
+    query engine doubles as the set-membership primitive of the diff."""
+    return octent_query_ref(coords, batch, valid,
+                            jnp.asarray(_ZERO_OFFSET), table.ublocks,
+                            table.tkey, table.tval, table.n_blocks,
+                            grid_bits=grid_bits,
+                            batch_bits=batch_bits)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("max_blocks", "grid_bits",
+                                             "batch_bits"))
+def _diff(sc, sb, sv, ublocks, n_blocks, tkey, tval, ic, ib, iv, *,
+          max_blocks: int, grid_bits: int, batch_bits: int):
+    n = sc.shape[0]
+    hb = 3 * grid_bits + batch_bits
+    limit = (1 << grid_bits) * morton.BLOCK_SIZE
+    # out-of-grid incoming rows (sensor drift past the boundary) can
+    # neither be probed nor keyed without aliasing: drop them here, so
+    # the canonical arrays stay in-grid by induction
+    iv = iv & jnp.all((ic >= 0) & (ic < limit), axis=-1)
+    table = oct_ops.QueryTable(ublocks, n_blocks, tkey, tval)
+    slot = probe_slots(table, ic, ib, iv, grid_bits=grid_bits,
+                       batch_bits=batch_bits)
+
+    seen = jnp.zeros((n,), bool)
+    seen = seen.at[jnp.where(slot >= 0, slot, n)].set(True, mode="drop")
+    evicted = sv & ~seen
+    is_new = iv & (slot < 0)
+
+    # dedupe repeated new keys (first occurrence wins — e.g. the parent
+    # level's incoming set, where up to 8 children share one parent)
+    hi = morton.block_key(ic, ib, grid_bits, batch_bits)
+    lo = morton.local_code(ic)
+    rep, _, _ = mapsearch.unique_pairs(hi, lo, is_new, n, hi_bits=hb)
+    is_rep = jnp.zeros((n,), bool)
+    is_rep = is_rep.at[jnp.where(rep >= 0, rep, n)].set(True, mode="drop")
+    is_new = is_new & is_rep
+    n_new = is_new.sum()
+
+    # inserts take freed slots in Morton (block key, local code) order,
+    # lowest free slot first — the canonical assignment both the delta
+    # and the scratch oracle agree on
+    order = binning.counting_lexsort(
+        (jnp.where(is_new, lo, 0),
+         jnp.where(is_new, hi, jnp.int32(1 << hb))),
+        (morton.LOCAL_CODE_BITS, hb + 1))
+    free = ~sv | evicted
+    n_free = free.sum()
+    fr = jnp.cumsum(free) - 1
+    free_slot = jnp.full((n,), n, jnp.int32)
+    free_slot = free_slot.at[jnp.where(free, fr, n)].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    j = jnp.arange(n, dtype=jnp.int32)
+    take = j < jnp.minimum(n_new, n_free)
+    tgt = jnp.where(take, free_slot, -1)
+    slot_new = jnp.full((n,), -1, jnp.int32).at[order].set(tgt)
+
+    inserted = jnp.zeros((n,), bool)
+    inserted = inserted.at[jnp.where(tgt >= 0, tgt, n)].set(True, mode="drop")
+    dst = jnp.where(tgt >= 0, tgt, n)
+    new_c = sc.at[dst].set(ic[order], mode="drop")
+    new_b = sb.at[dst].set(ib[order], mode="drop")
+    new_v = (sv & ~evicted) | inserted
+    slot_of = jnp.where(is_new, slot_new, slot)
+
+    # dirty blocks: any block whose membership changed
+    dk = jnp.concatenate([
+        jnp.where(evicted, morton.block_key(sc, sb, grid_bits, batch_bits),
+                  INVALID),
+        jnp.where(inserted, morton.block_key(new_c, new_b, grid_bits,
+                                             batch_bits), INVALID)])
+    dirty_blocks, n_dirty_blocks, _ = mapsearch.sorted_unique(
+        dk, max_blocks, nbits=hb)
+
+    # dirty rows: inserted/evicted slots, plus any row with a 27-
+    # neighborhood query landing in a dirty block (module doc rule)
+    offs = jnp.asarray(morton.subm3_offsets())
+    inb, qbk, _, _ = encode_queries(new_c, new_b, new_v, offs,
+                                    grid_bits=grid_bits)
+    pos = jnp.minimum(jnp.searchsorted(dirty_blocks, qbk).astype(jnp.int32),
+                      max_blocks - 1)
+    touch = jnp.any(inb & (dirty_blocks[pos] == qbk), axis=1)
+    dirty_rows = touch | inserted | evicted
+
+    delta = FrameDelta(slot_of, inserted, evicted, dirty_rows, dirty_blocks,
+                       n_dirty_blocks.astype(jnp.int32),
+                       n_new.astype(jnp.int32),
+                       evicted.sum().astype(jnp.int32),
+                       dirty_rows.sum().astype(jnp.int32),
+                       n_free.astype(jnp.int32))
+    return delta, new_c, new_b, new_v
+
+
+def diff_frame(state: FrameState, coords, batch, valid, *, max_blocks: int,
+               grid_bits: int = 7, batch_bits: int = 4):
+    """Diff an incoming frame against ``state``'s canonical layout.
+
+    Args:
+      state: the previous frame's :class:`FrameState` (its ``table``
+        must describe its arrays — the class invariant).
+      coords, batch, valid: the incoming frame, padded to the *same*
+        row budget N as the state (the slot contract needs one static
+        budget; with equal budgets the freed slots always suffice).
+      max_blocks: sizing for the dirty-block set; use the state table's
+        directory capacity.
+
+    Returns:
+      ``(delta, new_coords, new_batch, new_valid)`` — the
+      :class:`FrameDelta` plus the new canonical arrays. Out-of-grid
+      incoming rows are invalidated (not aliased); duplicate incoming
+      keys keep their first occurrence. When
+      ``delta.n_dirty_blocks > max_blocks`` the dirty set was truncated
+      and the frame must be rebuilt from scratch (StreamSession does).
+    """
+    n = state.coords.shape[0]
+    if coords.shape[0] != n:
+        raise ValueError(
+            f"streaming frames share one static row budget: state has "
+            f"{n} slots but the incoming frame has {coords.shape[0]} rows "
+            f"— repad the frame to the session budget")
+    PROBE_ROWS[0] += n
+    return _diff(state.coords, state.batch, state.valid,
+                 state.table.ublocks, state.table.n_blocks,
+                 state.table.tkey, state.table.tval,
+                 coords, batch, valid, max_blocks=max_blocks,
+                 grid_bits=grid_bits, batch_bits=batch_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("max_blocks", "grid_bits",
+                                             "batch_bits"))
+def _splice(ublocks, n_blocks, tkey, tval, sc, sb, evicted, nc, nb_arr,
+            inserted, dirty_blocks, *, max_blocks: int, grid_bits: int,
+            batch_bits: int):
+    mb = max_blocks
+    n = sc.shape[0]
+    sentinel = mb * morton.TABLE_SIZE
+    D = dirty_blocks
+
+    # (a) post-frame occupancy of each dirty block; live-after = kept
+    # (was live, not evicted) or inserted — the previous valid mask is
+    # recovered from the table itself, so no extra operand travels
+    bk_new = morton.block_key(nc, nb_arr, grid_bits, batch_bits)
+    posd = jnp.minimum(jnp.searchsorted(D, bk_new).astype(jnp.int32), mb - 1)
+    live_after = inserted | (~evicted & _live_slots(tval, n))
+    ind = jnp.where(live_after & (D[posd] == bk_new), posd, mb)
+    occ_new = jnp.zeros((mb,), jnp.int32).at[ind].add(1, mode="drop")
+
+    # (b) pre-frame directory membership of each dirty block
+    posb = jnp.minimum(jnp.searchsorted(ublocks, D).astype(jnp.int32), mb - 1)
+    present = (ublocks[posb] == D) & (D != INVALID)
+
+    removed_d = present & (occ_new == 0)
+    added_d = ~present & (occ_new > 0) & (D != INVALID)
+
+    # (c) compact to sorted removed/added key lists (D is sorted)
+    def compact(mask, src, fill):
+        p = jnp.cumsum(mask) - 1
+        out = jnp.full((mb,), fill, jnp.int32)
+        return out.at[jnp.where(mask, p, mb)].set(src, mode="drop"), p
+    removed_keys, _ = compact(removed_d, D, INVALID)
+    added_keys, apos = compact(added_d, D, INVALID)
+    n_rem = removed_d.sum()
+    n_add = added_d.sum()
+
+    # (d) merge the kept directory range with the added keys: both are
+    # sorted and disjoint, so final ranks come from two searchsorteds
+    pr = jnp.minimum(jnp.searchsorted(removed_keys, ublocks)
+                     .astype(jnp.int32), mb - 1)
+    keep_dir = (ublocks != INVALID) & (removed_keys[pr] != ublocks)
+    kpos = jnp.cumsum(keep_dir) - 1
+    kept_keys, _ = compact(keep_dir, ublocks, INVALID)
+    nr_kept = (kpos + jnp.searchsorted(added_keys, ublocks)).astype(jnp.int32)
+    nr_added = (apos + jnp.searchsorted(kept_keys, D)).astype(jnp.int32)
+    ub_new = jnp.full((mb,), INVALID, jnp.int32)
+    ub_new = ub_new.at[jnp.where(keep_dir, nr_kept, mb)].set(
+        ublocks, mode="drop")
+    ub_new = ub_new.at[jnp.where(added_d, nr_added, mb)].set(D, mode="drop")
+    nb_new = (jnp.asarray(n_blocks, jnp.int32) - n_rem + n_add) \
+        .astype(jnp.int32)
+
+    # (e) compacted table: kept entries shift rank by the monotone remap
+    # (staying sorted), evicted entries drop, inserted entries merge in
+    new_rank_of_old = jnp.where(keep_dir, nr_kept, mb)
+    npad = tkey.shape[0]
+    live = tval >= 0
+    keep_e = live & ~evicted[jnp.clip(tval, 0, n - 1)]
+    old_rank = jnp.clip(tkey >> 12, 0, mb - 1)
+    tk_shift = (new_rank_of_old[old_rank] * morton.TABLE_SIZE
+                + (tkey & (morton.TABLE_SIZE - 1)))
+    kp = jnp.cumsum(keep_e) - 1
+    a_key = jnp.full((npad,), sentinel, jnp.int32)
+    a_val = jnp.full((npad,), -1, jnp.int32)
+    adst = jnp.where(keep_e, kp, npad)
+    a_key = a_key.at[adst].set(tk_shift, mode="drop")
+    a_val = a_val.at[adst].set(tval, mode="drop")
+
+    rank_ins = jnp.searchsorted(ub_new, bk_new).astype(jnp.int32)
+    bank, row = morton.bank_and_row(morton.local_code(nc))
+    tk_ins = jnp.clip(rank_ins, 0, mb - 1) * morton.TABLE_SIZE \
+        + bank * morton.BANK_ROWS + row
+    tk_ins = jnp.where(inserted, tk_ins, sentinel)
+    order = binning.counting_argsort(tk_ins, sentinel.bit_length())
+    b_key = tk_ins[order]
+    b_val = jnp.where(b_key < sentinel, order, -1)
+
+    # two-way merge: real keys are distinct across A/B (an inserted key
+    # can never equal a kept key — same voxel would have probed a hit),
+    # so each real entry's final position is its own index plus the
+    # count of smaller real entries on the other side
+    pos_a = jnp.arange(npad, dtype=jnp.int32) \
+        + jnp.searchsorted(b_key, a_key).astype(jnp.int32)
+    pos_b = jnp.arange(n, dtype=jnp.int32) \
+        + jnp.searchsorted(a_key, b_key).astype(jnp.int32)
+    out_key = jnp.full((npad,), sentinel, jnp.int32)
+    out_val = jnp.full((npad,), -1, jnp.int32)
+    ra = jnp.where(a_key < sentinel, pos_a, npad)
+    rb = jnp.where(b_key < sentinel, pos_b, npad)
+    out_key = out_key.at[ra].set(a_key, mode="drop")
+    out_val = out_val.at[ra].set(a_val, mode="drop")
+    out_key = out_key.at[rb].set(b_key, mode="drop")
+    out_val = out_val.at[rb].set(b_val, mode="drop")
+    return oct_ops.QueryTable(ub_new, nb_new, out_key, out_val)
+
+
+def _live_slots(tval, n):
+    """(n,) bool: slots referenced by a live table entry — i.e. the
+    previous frame's valid mask, recovered from the table itself so the
+    splice needs no extra operand."""
+    live = jnp.zeros((n,), bool)
+    return live.at[jnp.where(tval >= 0, tval, n)].set(True, mode="drop")
+
+
+def apply_table_delta(table: oct_ops.QueryTable, delta: FrameDelta,
+                      old_coords, old_batch, new_coords, new_batch, *,
+                      max_blocks: int, grid_bits: int = 7,
+                      batch_bits: int = 4) -> oct_ops.QueryTable:
+    """Splice ``delta`` into the previous frame's stage-1 table.
+
+    Pure (eager): the input table is never mutated, so an overflow
+    raises *before* any pinned state could be corrupted — the caller's
+    ``with_replan`` rebuilds from scratch at escalated capacity while
+    the streaming session's state stays intact.
+
+    Returns a :class:`~repro.kernels.octent.ops.QueryTable` bit-
+    identical to ``build_query_table(new_coords, new_batch, new_valid,
+    max_blocks=...)`` over the canonical arrays ``delta`` was computed
+    for. Raises :class:`~repro.core.validate.CapacityOverflow` when the
+    dirty-block set was truncated or the new directory exceeds
+    ``max_blocks``.
+    """
+    n_dirty = int(delta.n_dirty_blocks)
+    if n_dirty > max_blocks:
+        raise validate.CapacityOverflow(
+            "block_table",
+            f"streaming dirty-block set overflow: the frame touches "
+            f"{n_dirty} 16^3 blocks but max_blocks={max_blocks}; the "
+            f"truncated delta cannot be spliced — rebuild from scratch "
+            f"at higher capacity", needed=n_dirty, capacity=max_blocks)
+    out = _splice(table.ublocks, table.n_blocks, table.tkey, table.tval,
+                  old_coords, old_batch, delta.evicted,
+                  new_coords, new_batch, delta.inserted, delta.dirty_blocks,
+                  max_blocks=max_blocks, grid_bits=grid_bits,
+                  batch_bits=batch_bits)
+    nb = int(out.n_blocks)
+    if nb > max_blocks:
+        raise validate.CapacityOverflow(
+            "block_table",
+            f"octree block table overflow mid-stream: the spliced frame "
+            f"occupies {nb} 16^3 blocks but max_blocks={max_blocks} — "
+            f"surfacing for with_replan instead of corrupting the pinned "
+            f"table", needed=nb, capacity=max_blocks)
+    return out
+
+
+def pack_dirty_rows(dirty_rows, budget: int) -> np.ndarray | None:
+    """-1-padded (budget,) int32 row list from a concrete dirty mask,
+    or None when the rows don't fit ``budget`` (caller goes scratch).
+    LANE-quantized budgets keep the jit shape set small."""
+    idx = np.flatnonzero(np.asarray(dirty_rows)).astype(np.int32)
+    if idx.size > budget:
+        return None
+    out = np.full((budget,), -1, np.int32)
+    out[:idx.size] = idx
+    return out
+
+
+def row_budget(n_dirty: int, n: int) -> int:
+    """LANE-rounded dirty-row budget, clipped to [LANE, n]."""
+    return int(min(max(LANE, -(-n_dirty // LANE) * LANE), n))
+
+
+# ---------------------------------------------------------------------------
+# Streaming session: a MinkUNet over a frame sequence
+# ---------------------------------------------------------------------------
+
+class StreamSession:
+    """Long-lived geometry state for replaying a frame sequence through
+    MinkUNet (launch/spconv_stream.py drives this).
+
+    Per resolution level r = 0 .. len(cfg.enc) the session keeps a
+    slot-stable :class:`FrameState`; :meth:`advance` diffs the incoming
+    frame level by level (level r+1's incoming set is level r's new
+    canonical coords >> 1), delta-patches each subm3 plan when the dirty
+    set is small (``warm=`` + ``build_kmap(update=)``), rebuilds from
+    scratch otherwise, and refreshes the strided (Gconv2/Tconv2) plans
+    from slot probes against the parent level's table. :meth:`forward`
+    scatters per-row features into the canonical slots and runs the
+    model with the prepared plans.
+
+    The per-level stage-1 tables are held by the session *and* pinned in
+    the cache's PinnedStore under refcounted keys (:meth:`acquire
+    <repro.runtime.feature_cache.PinnedStore.acquire>`), so byte-budget
+    pressure from other work evicts around the active stream instead of
+    through it; :meth:`close` releases the holds. Failures are atomic: a
+    :class:`~repro.core.validate.CapacityOverflow` escaping
+    ``with_replan`` leaves every level's state at the previous frame.
+
+    Args:
+      cfg: a ``models.minkunet.MinkUNetConfig`` (duck-typed: enc, dec,
+        grid_bits, batch_bits, bm, bo, map_method are read).
+      n: static row budget shared by every level and frame.
+      max_blocks: starting directory capacity per level (None: ``n``).
+      cache: a long-lived :class:`~repro.core.plan.PlanCache`; its
+        content keys are what turn an *identical* frame into a zero-
+        search content hit. None builds a private cache.
+      enabled: force the delta path on/off (None: :func:`stream_enabled`).
+      dirty_frac: full-rebuild threshold (None: :func:`max_dirty_frac`).
+      search_impl: table-backed OCTENT impl (pallas | interpret | ref);
+        None resolves via ``octent.ops.search_impl()`` and falls back to
+        'ref' if the resolved impl is not table-backed.
+      replan: wrap builds in ``guard.with_replan`` (None: on unless
+        ``REPRO_GUARD_REPLAN=0``).
+    """
+
+    def __init__(self, cfg, n: int, *, max_blocks: int | None = None,
+                 cache: planlib.PlanCache | None = None,
+                 enabled: bool | None = None,
+                 dirty_frac: float | None = None,
+                 search_impl: str | None = None,
+                 replan: bool | None = None):
+        self.cfg = cfg
+        self.n = n
+        self.levels = len(cfg.enc) + 1
+        self.cache = cache if cache is not None else planlib.PlanCache()
+        self.enabled = stream_enabled() if enabled is None else enabled
+        self.dirty_frac = max_dirty_frac() if dirty_frac is None \
+            else dirty_frac
+        simpl = search_impl or oct_ops.search_impl()
+        self.simpl = simpl if simpl in ("pallas", "interpret", "ref") \
+            else "ref"
+        self.replan = guard.replan_retries() > 0 if replan is None \
+            else replan
+        mb = n if max_blocks is None else max_blocks
+        self.mb = [mb] * self.levels
+        self.states = [empty_state(n, max_blocks=self.mb[r],
+                                   grid_bits=cfg.grid_bits,
+                                   batch_bits=cfg.batch_bits)
+                       for r in range(self.levels)]
+        self.pin_keys: list = [None] * self.levels
+        self.plans = None
+        self.slot_of = None
+        self.counters = {k: 0 for k in (
+            "frames", "delta_levels", "full_levels", "content_hit_levels",
+            "rows_searched", "rows_scratch", "kmap_rows_reused",
+            "kmap_rows_total", "table_refetches", "table_rebuilds")}
+
+    # -- per-level machinery -------------------------------------------------
+
+    def _pin_key(self, fp, mb):
+        if fp is None:
+            return None
+        return ("qtable", fp, mb, self.cfg.grid_bits, self.cfg.batch_bits,
+                sharding.mesh_fingerprint())
+
+    def _advance_level(self, r: int, ic, ib, iv):
+        """Diff + rebuild one level. Returns the new state, the subm3
+        plan, the delta, the capacity used, the pin key, and a dict of
+        counter *increments* — nothing on the session is mutated (the
+        caller owns atomicity)."""
+        cfg = self.cfg
+        gb, bb = cfg.grid_bits, cfg.batch_bits
+        st = self.states[r]
+        mb0 = self.mb[r]
+        delta, nc, nb_arr, nv = diff_frame(st, ic, ib, iv, max_blocks=mb0,
+                                           grid_bits=gb, batch_bits=bb)
+        n_dirty = int(delta.n_dirty_rows)
+        use_delta = (self.enabled
+                     and int(delta.n_dirty_blocks) <= mb0
+                     and n_dirty <= self.dirty_frac * self.n)
+        rows = pack_dirty_rows(delta.dirty_rows,
+                               row_budget(n_dirty, self.n)) \
+            if use_delta and n_dirty else None
+        built: dict = {}
+
+        def build(mb_now):
+            built.clear()
+            built["mb"] = mb_now
+
+            def patch():
+                if n_dirty == 0:
+                    # empty delta: the table and every kmap row are
+                    # unchanged — zero stage-2 query rows
+                    built["table"] = st.table
+                    built["kmap"] = st.kmap
+                    return st.kmap, st.table
+                table = apply_table_delta(st.table, delta, st.coords,
+                                          st.batch, nc, nb_arr,
+                                          max_blocks=mb_now, grid_bits=gb,
+                                          batch_bits=bb)
+                kmap, _ = oct_ops.build_kmap(
+                    nc, nb_arr, nv, max_blocks=mb_now, grid_bits=gb,
+                    batch_bits=bb, impl=self.simpl, table=table,
+                    update=oct_ops.KmapUpdate(st.kmap, jnp.asarray(rows)))
+                built["table"] = table
+                built["kmap"] = kmap
+                return kmap, table
+
+            # a capacity escalation invalidates the delta (the table
+            # address space is keyed by max_blocks): go scratch
+            warm = planlib.SubmWarmStart(patch) \
+                if use_delta and mb_now == mb0 else None
+            ms0 = planlib.MAPSEARCH_CALLS[0]
+            plan = planlib.subm3_plan(
+                nc, nb_arr, nv, max_blocks=mb_now, method=cfg.map_method,
+                grid_bits=gb, batch_bits=bb, bm=cfg.bm, bo=cfg.bo,
+                search_impl=self.simpl, cache=self.cache, warm=warm)
+            built["searched"] = planlib.MAPSEARCH_CALLS[0] > ms0
+            return plan
+
+        if self.replan:
+            plan = guard.with_replan(build, mb0,
+                                     key=("stream-subm3", r, self.n, gb, bb))
+        else:
+            plan = build(mb0)
+        mb_used = built.get("mb", mb0)
+        fp = planlib.content_fingerprint((nc, nb_arr, nv))
+        pin_key = self._pin_key(fp, mb_used)
+        store = self.cache.pinned
+
+        acct = {k: 0 for k in self.counters}
+        acct["kmap_rows_total"] += self.n
+        acct["rows_scratch"] += self.n
+
+        def fetch_or_rebuild():
+            t = store.get(pin_key) if pin_key is not None else None
+            if t is not None:
+                acct["table_refetches"] += 1
+                return t
+            acct["table_rebuilds"] += 1
+            t = oct_ops.build_query_table(nc, nb_arr, nv,
+                                          max_blocks=mb_used, grid_bits=gb,
+                                          batch_bits=bb)
+            if pin_key is not None:
+                store.put(pin_key, t)
+            return t
+
+        if "table" in built:
+            # warm delta patch ran
+            table, kmap = built["table"], built["kmap"]
+            acct["delta_levels"] += 1
+            acct["rows_searched"] += len(rows) if rows is not None else 0
+            acct["kmap_rows_reused"] += self.n - n_dirty
+        elif built.get("searched"):
+            # scratch path inside subm3_plan — it built + pinned the
+            # table; fetch it back for the session state
+            kmap = plan.kmap
+            acct["full_levels"] += 1
+            acct["rows_searched"] += self.n
+            table = fetch_or_rebuild()
+        else:
+            # cache hit (identity or content): the plan was served
+            # without building — zero searches this level
+            kmap = plan.kmap
+            acct["content_hit_levels"] += 1
+            acct["kmap_rows_reused"] += self.n
+            table = fetch_or_rebuild()
+        new_state = FrameState(nc, nb_arr, nv, table, kmap)
+        return new_state, plan, delta, mb_used, pin_key, acct
+
+    def _gconv2_stream_plan(self, child: FrameState, parent: FrameState):
+        """Canonical-slot Gconv2 plan: child rows map to their parent's
+        slot in the parent level's layout via a table probe (no
+        unique_pairs re-ranking — slot-stable across frames, so the
+        content cache hits whenever both levels' geometry repeats)."""
+        cfg = self.cfg
+        gb, bb = cfg.grid_bits, cfg.batch_bits
+        cc, cb, cv = child.coords, child.batch, child.valid
+        pc, pb, pv = parent.coords, parent.batch, parent.valid
+        n = self.n
+
+        def build(fp):
+            PROBE_ROWS[0] += n
+            out_idx = probe_slots(parent.table, cc >> 1, cb, cv,
+                                  grid_bits=gb, batch_bits=bb)
+            mvalid = cv & (out_idx >= 0)
+            maps = StridedMaps(
+                out_coords=pc, out_batch=pb, out_valid=pv,
+                n_out=pv.sum().astype(jnp.int32),
+                in_idx=jnp.arange(n, dtype=jnp.int32),
+                out_idx=jnp.where(mvalid, out_idx, 0).astype(jnp.int32),
+                tap=morton.child_octant(cc).astype(jnp.int32),
+                mvalid=mvalid)
+            kmap = mapsearch.strided_to_kmap(maps, n_out=n, n_taps=8)
+            tiles = sg_ops.build_tap_tiles(kmap, None, bm=cfg.bm, bo=cfg.bo)
+            return planlib.ConvPlan("gconv2", kmap, tiles, n, 8,
+                                    pc, pb, pv, maps)
+
+        return planlib._maybe_cached(
+            self.cache, (cc, cb, cv, pc, pb, pv),
+            ("gconv2stream", gb, bb, cfg.bm, cfg.bo), build)
+
+    # -- public API ----------------------------------------------------------
+
+    def advance(self, coords, batch, valid):
+        """Ingest one frame: update every level's canonical state and
+        rebuild the full MinkUNet plan set. Returns the level-0
+        :class:`FrameDelta` (its ``slot_of`` maps incoming rows to
+        canonical slots — :meth:`forward` applies it to the features).
+        Atomic: on overflow (replanning off/exhausted) no state changes.
+        """
+        cfg = self.cfg
+        policy = guard.validate_policy()
+        if policy is not None:
+            coords, batch, valid, _, _ = validate.sanitize_cloud(
+                coords, batch, valid, grid_bits=cfg.grid_bits,
+                batch_bits=cfg.batch_bits, policy=policy)
+        coords = jnp.asarray(coords, jnp.int32)
+        batch = jnp.asarray(batch, jnp.int32)
+        valid = jnp.asarray(valid, bool)
+
+        new_states, subms, mbs, pin_keys = [], [], [], []
+        pending = {k: 0 for k in self.counters}
+        delta0 = None
+        ic, ib, iv = coords, batch, valid
+        for r in range(self.levels):
+            state, plan, delta, mb_used, pin_key, acct = \
+                self._advance_level(r, ic, ib, iv)
+            for k, v in acct.items():
+                pending[k] += v
+            new_states.append(state)
+            subms.append(plan)
+            mbs.append(mb_used)
+            pin_keys.append(pin_key)
+            if r == 0:
+                delta0 = delta
+            ic, ib, iv = state.coords >> 1, state.batch, state.valid
+
+        downs = [self._gconv2_stream_plan(new_states[r], new_states[r + 1])
+                 for r in range(self.levels - 1)]
+        ups = []
+        for i in range(len(cfg.dec)):
+            t = new_states[self.levels - 2 - i]
+            ups.append(planlib.tconv2_plan(downs[-(i + 1)].maps, t.coords,
+                                           t.batch, t.valid, bm=cfg.bm,
+                                           bo=cfg.bo, cache=self.cache))
+
+        # commit (everything above is pure w.r.t. session state)
+        store = self.cache.pinned
+        for old, new in zip(self.pin_keys, pin_keys):
+            if new is not None:
+                store.acquire(new)
+            if old is not None:
+                store.release(old)
+        self.states = new_states
+        self.mb = mbs
+        self.pin_keys = pin_keys
+        self.slot_of = delta0.slot_of
+        from repro.models.minkunet import MinkPlans
+        self.plans = MinkPlans(tuple(subms), tuple(downs), tuple(ups))
+        for k, v in pending.items():
+            self.counters[k] += v
+        self.counters["frames"] += 1
+        return delta0
+
+    def forward(self, params, feats, *, training: bool = False,
+                impl: str | None = None):
+        """Scatter ``feats`` (aligned with the last :meth:`advance`'s
+        incoming rows) into the canonical slots and run MinkUNet with
+        the prepared plans. Returns (N, classes) logits in canonical
+        slot order (``delta.slot_of`` maps incoming rows to slots)."""
+        if self.plans is None:
+            raise RuntimeError("advance() a frame before forward()")
+        from repro.core.spconv import SparseTensor
+        from repro.models import minkunet
+        st0 = self.states[0]
+        f = scatter_rows(feats, self.slot_of, self.n)
+        st = SparseTensor(st0.coords, st0.batch, st0.valid, f)
+        return minkunet.forward(params, st, self.cfg, training=training,
+                                plans=self.plans, impl=impl)
+
+    def stats(self) -> dict:
+        return dict(self.counters)
+
+    def close(self) -> None:
+        """Release every refcounted table pin (idempotent)."""
+        store = self.cache.pinned
+        for key in self.pin_keys:
+            if key is not None:
+                store.release(key)
+        self.pin_keys = [None] * self.levels
+
+
+def scatter_rows(values, slot_of, n: int):
+    """Scatter per-incoming-row values into canonical slots (rows with
+    ``slot_of < 0`` — invalid or dropped duplicates — are dropped)."""
+    safe = jnp.where(slot_of >= 0, slot_of, n)
+    out = jnp.zeros((n,) + values.shape[1:], values.dtype)
+    return out.at[safe].set(values, mode="drop")

@@ -131,6 +131,69 @@ def voxelize(points: np.ndarray, voxel_size, origin, max_voxels: int,
     return coords, feats, labels
 
 
+def moving_sensor_sequence(rng: np.random.Generator, n_frames: int,
+                           max_voxels: int, *, window: int = 128,
+                           step: int = 8, depth: int = 32,
+                           density: float = 0.35,
+                           feat_ch: int = 4) -> list[VoxelBatch]:
+    """Temporal frame sequence: a translating sensor window over a static
+    world (DESIGN.md §15).
+
+    A persistent world occupancy is sampled once (a ground sheet plus
+    scattered boxes over an x-range long enough for the whole drive,
+    ``depth`` voxels deep in y, ``density`` controlling fill); each
+    frame contains the world voxels visible through an x-window of
+    width ``window`` that advances by ``step`` per frame. Coordinates
+    stay in the *world* frame, so voxels enter and leave only at the
+    window edges — per-frame turnover is ~``step/window`` (sensor-
+    relative coordinates would shift every voxel every frame, i.e.
+    100 % turnover, which is exactly the degenerate case streaming
+    cannot help). The default geometry keeps the dirty set to the two
+    16-wide edge block columns of an 8-column window, so the dirty-row
+    fraction stays well under the ``REPRO_STREAM_MAX_DIRTY`` rebuild
+    threshold. Features are a deterministic per-voxel hash so a
+    replayed frame is bit-reproducible.
+
+    Returns ``n_frames`` :class:`VoxelBatch` es padded to ``max_voxels``
+    (batch index 0 throughout); frames overflowing the budget keep the
+    lowest-key voxels, deterministically.
+    """
+    # static world: a ground layer + boxes, as world-voxel keys
+    extent = step * (n_frames - 1) + window if n_frames > 0 else window
+    occ = np.zeros((extent, depth, 8), bool)
+    occ[:, :, 0] = rng.random((extent, depth)) < density
+    for _ in range(int(rng.integers(12, 24))):
+        x0 = int(rng.integers(0, max(extent - 8, 1)))
+        y0 = int(rng.integers(0, max(depth - 8, 1)))
+        w, l, h = rng.integers(2, 8, 3)
+        occ[x0:x0 + w, y0:y0 + l, 1:1 + min(int(h), 7)] = True
+    wx, wy, wz = np.nonzero(occ)
+    world = np.stack([wx, wy, wz], axis=1).astype(np.int32)
+    order = np.lexsort((world[:, 2], world[:, 1], world[:, 0]))
+    world = world[order]
+    frames = []
+    for t in range(n_frames):
+        lo = t * step
+        vis = world[(world[:, 0] >= lo) & (world[:, 0] < lo + window)]
+        vis = vis[:max_voxels]
+        n = vis.shape[0]
+        coords = np.zeros((max_voxels, 3), np.int32)
+        bidx = np.zeros((max_voxels,), np.int32)
+        valid = np.zeros((max_voxels,), bool)
+        feats = np.zeros((max_voxels, feat_ch), np.float32)
+        labels = np.zeros((max_voxels,), np.int32)
+        coords[:n] = vis
+        valid[:n] = True
+        h = (vis[:, 0] * 73856093 ^ vis[:, 1] * 19349663
+             ^ vis[:, 2] * 83492791).astype(np.int64)
+        for c in range(feat_ch):
+            feats[:n, c] = (((h >> c) & 0xFF).astype(np.float32) / 255.0
+                            - 0.5)
+        labels[:n] = (vis[:, 2] > 0).astype(np.int32)
+        frames.append(VoxelBatch(coords, bidx, valid, feats, labels))
+    return frames
+
+
 def make_batch(rng: np.random.Generator, kind: str, batch_size: int,
                max_voxels: int, voxel_size: float = 0.05) -> VoxelBatch:
     """Padded multi-scene batch in the paper's sparse-tensor format."""

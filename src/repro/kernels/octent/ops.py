@@ -62,6 +62,38 @@ def hardware_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
+#: stage-2 query rows submitted since the last reset (trace-time count):
+#: a full :func:`build_kmap` adds its N voxel rows, an ``update=`` call
+#: adds only its (padded) dirty-row budget — the streaming parity
+#: benchmarks compare exactly this number against the from-scratch cost
+#: (DESIGN.md §15). Counted once per call, not per fallback retry.
+QUERY_ROWS = [0]
+
+
+def query_row_count() -> int:
+    """Stage-2 query rows submitted since the last reset."""
+    return QUERY_ROWS[0]
+
+
+def reset_query_row_counter() -> None:
+    QUERY_ROWS[0] = 0
+
+
+class KmapUpdate(NamedTuple):
+    """Incremental re-search request for :func:`build_kmap` (DESIGN.md §15).
+
+    ``kmap`` is the previous frame's (N, K) kernel map over the *same*
+    canonical slot layout as the coordinate stream being searched;
+    ``rows`` the -1-padded (Q,) int32 slot indices whose 27-neighborhood
+    touches a dirty block (core/stream.py computes them). Only those rows
+    are re-queried against the (already delta-updated) table and
+    scattered back; every other row's kmap entries are reused verbatim.
+    """
+
+    kmap: jnp.ndarray   # (N, K) int32 previous kernel map
+    rows: jnp.ndarray   # (Q,) int32 rows to re-search, -1 padded
+
+
 class QueryTable(NamedTuple):
     """Sort-free OCTENT search structure (kernel.py module doc).
 
@@ -152,7 +184,8 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
                impl: str | None = None, bq: int = 128,
                offsets: jnp.ndarray | None = None,
                binning_mode: str = "counting",
-               table: QueryTable | None = None
+               table: QueryTable | None = None,
+               update: KmapUpdate | None = None
                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Submanifold OCTENT map search: the full stage-1 + stage-2 engine.
 
@@ -176,6 +209,15 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
         runs. Accepted by the table-backed impls (pallas / interpret /
         ref) only; 'xla' and 'sharded' build their own structures and
         raise if one is passed.
+      update: a :class:`KmapUpdate` carrying the previous frame's kmap
+        and the -1-padded dirty-row indices (DESIGN.md §15): only those
+        rows are re-queried against ``table`` and scattered into a copy
+        of the previous kmap — untouched rows are reused bit-verbatim.
+        Requires ``table`` (the structure must already reflect the new
+        frame; this function never splices it) and therefore a
+        table-backed impl. Rows listed with ``valid[row] == False``
+        (evicted slots) re-resolve to all -1, matching a from-scratch
+        build over the same arrays.
 
     Returns:
       ``(kmap, n_blocks)``: kmap (N, K) int32 with -1 misses, exactly as
@@ -201,6 +243,13 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
             f"impl={impl!r} builds its own search structure; a prebuilt "
             f"QueryTable is only consumed by the table-backed impls "
             f"(pallas | interpret | ref)")
+    if update is not None and table is None:
+        raise ValueError(
+            "update= re-searches dirty rows against a delta-updated "
+            "QueryTable and never builds one itself: pass the table= the "
+            "stream spliced for this frame (core/stream.py does)")
+    QUERY_ROWS[0] += (update.rows.shape[0] if update is not None
+                      else coords.shape[0])
     if impl == "sharded":
         # configuration errors (no usable mesh) must surface to the
         # caller, not be served by the fallback chain
@@ -233,6 +282,31 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
             coords, batch, valid, max_blocks=max_blocks,
             grid_bits=grid_bits, batch_bits=batch_bits,
             binning_mode=binning_mode)
+        if update is not None:
+            # delta path: query only the dirty rows, splice into the
+            # previous kmap. The row gather/scatter (not the query math)
+            # is what differs from the full path, so any table-backed
+            # fallback stays bit-identical.
+            rows = update.rows
+            sel = jnp.where(rows >= 0, rows, 0)
+            qc, qb2 = coords[sel], batch[sel]
+            qv = valid[sel] & (rows >= 0)
+            if one == "ref":
+                sub = octent_query_ref(qc, qb2, qv, offsets,
+                                       qt.ublocks, qt.tkey, qt.tval,
+                                       qt.n_blocks, grid_bits=grid_bits,
+                                       batch_bits=batch_bits)
+            else:
+                qpack = _pack_queries(qc, qb2, qv, bq=bq)
+                out = octent_query(qpack, offsets.astype(jnp.int32),
+                                   qt.ublocks, qt.tkey, qt.tval,
+                                   qt.n_blocks, grid_bits=grid_bits,
+                                   batch_bits=batch_bits, bq=bq,
+                                   interpret=one == "interpret")
+                sub = out[:, :rows.shape[0]].T
+            safe = jnp.where(rows >= 0, rows, coords.shape[0])
+            kmap = update.kmap.at[safe].set(sub, mode="drop")
+            return kmap, qt.n_blocks
         if one == "ref":
             kmap = octent_query_ref(coords, batch, valid, offsets,
                                     qt.ublocks, qt.tkey, qt.tval,
@@ -252,4 +326,5 @@ def build_kmap(coords: jnp.ndarray, batch: jnp.ndarray, valid: jnp.ndarray,
     return _guard.dispatch(
         "search", impl, chain, _run,
         key=(coords.shape[0], offsets.shape[0], max_blocks,
-             grid_bits, batch_bits))
+             grid_bits, batch_bits,
+             update.rows.shape[0] if update is not None else None))

@@ -184,6 +184,18 @@ class PinnedStore:
     rehydrated entry is therefore anchorless, so a ``verify=True``
     reader conservatively drops it and rebuilds — warm restarts serve
     non-verifying readers (the default) only.
+
+    **Refcounted pins** (DESIGN.md §15): a streaming session references
+    its per-level search structures across frames, so plain FIFO
+    eviction under byte pressure could drop a table the delta chain is
+    about to refetch — the refetch would then silently rebuild from
+    scratch mid-sequence, masking the cross-frame reuse the session
+    exists to provide. :meth:`acquire` marks a key as held by an active
+    stream; eviction skips held entries (the store may transiently
+    exceed its byte budget when everything resident is held — counted
+    in ``evictions_skipped``), and :meth:`release` returns the entry to
+    normal FIFO life. Acquire/release are by key, not by entry, so a
+    key can be acquired before its first ``put``.
     """
 
     def __init__(self, capacity_bytes: int = 32 * 2 ** 20, *, persist=None):
@@ -191,10 +203,12 @@ class PinnedStore:
         self.persist = persist
         # key -> (pytree, bytes, anchor arrays | None)
         self._entries: OrderedDict = OrderedDict()
+        self._refs: dict = {}                # key -> active-stream refcount
         self.hits = 0
         self.misses = 0
         self.persist_hits = 0
         self.evictions = 0
+        self.evictions_skipped = 0
         self.collisions = 0
 
     def __len__(self) -> int:
@@ -270,12 +284,42 @@ class PinnedStore:
             self._entries.move_to_end(key)
             return
         while self._entries and self.resident_bytes() + size > self.capacity_bytes:
-            self._entries.popitem(last=False)
+            victim = next((k for k in self._entries
+                           if self._refs.get(k, 0) == 0), None)
+            if victim is None:
+                # every resident entry is held by an active stream: admit
+                # over budget rather than drop a table a delta chain will
+                # refetch (class doc) — the overshoot is observable
+                self.evictions_skipped += 1
+                break
+            del self._entries[victim]
             self.evictions += 1
         self._entries[key] = (value, size,
                               tuple(anchor) if anchor is not None else None)
         if self.persist is not None and _writethrough:
             self.persist.put(("pinned", key), value)
+
+    # -- refcounted pins for active streams (DESIGN.md §15) ------------------
+
+    def acquire(self, key) -> None:
+        """Mark ``key`` as held by an active streaming session: byte-
+        budget eviction will skip it until every holder releases. Safe
+        to call before the key is first ``put`` (the hold applies as
+        soon as the entry exists)."""
+        self._refs[key] = self._refs.get(key, 0) + 1
+
+    def release(self, key) -> None:
+        """Drop one hold on ``key``; at zero the entry rejoins normal
+        FIFO eviction. Releasing an unheld key is a no-op."""
+        c = self._refs.get(key, 0) - 1
+        if c <= 0:
+            self._refs.pop(key, None)
+        else:
+            self._refs[key] = c
+
+    def refcount(self, key) -> int:
+        """Active-stream holds on ``key`` (0 when unheld)."""
+        return self._refs.get(key, 0)
 
     def clear(self) -> None:
         self._entries.clear()
@@ -317,7 +361,9 @@ class PinnedStore:
                 "resident_bytes": self.resident_bytes(),
                 "hits": self.hits, "misses": self.misses,
                 "persist_hits": self.persist_hits,
-                "evictions": self.evictions, "collisions": self.collisions}
+                "evictions": self.evictions,
+                "evictions_skipped": self.evictions_skipped,
+                "held": len(self._refs), "collisions": self.collisions}
 
 
 _DEFAULT_STORE = PinnedStore()

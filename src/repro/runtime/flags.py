@@ -131,6 +131,23 @@ the others bind at construction or import as noted):
     Entries written under a different salt read as stale and cold-start;
     tests use this to model a code-version bump.
 
+``REPRO_STREAM``
+    Set to ``0`` to disable the streaming delta path (DESIGN.md §15) —
+    every frame of a :class:`repro.core.stream.StreamSession` is then
+    rebuilt from scratch (the parity baseline the delta path is gated
+    against). Re-read per session construction by
+    :func:`repro.core.stream.stream_enabled`; per-instance override via
+    ``StreamSession(enabled=...)``. Output is bit-identical either way;
+    only the searched-row count changes.
+
+``REPRO_STREAM_MAX_DIRTY``
+    Dirty-row fraction above which a streamed frame falls back to a
+    full from-scratch rebuild instead of a delta patch (default
+    ``0.5`` — at high turnover the table splice plus partial re-query
+    costs more than it saves). Re-read per session construction by
+    :func:`repro.core.stream.max_dirty_frac`; per-instance override via
+    ``StreamSession(dirty_frac=...)``.
+
 ``REPRO_BENCH_FAST``
     Set to ``1`` for the reduced benchmark sweep (CI); read by
     ``benchmarks/run.py``.

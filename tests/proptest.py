@@ -91,6 +91,104 @@ def random_cloud(rng: np.random.Generator, n: int, extent: int, batch: int = 1,
     return coords, bidx, valid
 
 
+#: per-frame mutation mixes of the streaming generator (tests/test_stream.py)
+FRAME_KINDS = ("churn", "insert_heavy", "evict_heavy", "jitter", "teleport",
+               "identical")
+
+
+def frame_sequence(rng: np.random.Generator, n_frames: int, n: int,
+                   extent: int, *, batch: int = 1, turnover: float = 0.15,
+                   kinds: tuple = FRAME_KINDS):
+    """Seeded temporal voxel sequence for streaming parity tests.
+
+    Yields ``n_frames`` padded ``(coords, batch, valid)`` clouds over one
+    static row budget ``n``. Frame 0 is a fresh cloud at ~60 % fill;
+    each later frame applies a mutation mix drawn from ``kinds``:
+
+      * ``churn``         — evict + insert ~``turnover`` of the live set
+      * ``insert_heavy``  — mostly inserts (up to the row budget)
+      * ``evict_heavy``   — mostly evictions (down toward empty)
+      * ``jitter``        — move ~``turnover`` voxels by ±1 per axis
+        (an evict + a nearby insert: the hardest case for the dirty-
+        block rule because source and target usually share blocks)
+      * ``teleport``      — move ~``turnover`` voxels to uniformly
+        random positions (max directory churn per moved voxel)
+      * ``identical``     — byte-identical repeat (the empty delta)
+
+    Each frame's live set is kept key-unique and in-grid; rows are
+    emitted in insertion order, NOT slot order — the consumer's slot
+    assignment is what is under test.
+    """
+    live: dict = {}
+
+    def key(b, c):
+        return (b, tuple(int(x) for x in c))
+
+    def sample(k):
+        while True:
+            c = rng.integers(0, extent, 3)
+            b = int(rng.integers(0, batch))
+            if key(b, c) not in live:
+                return b, c
+            k -= 1
+            if k < 0:
+                return None, None
+
+    def emit():
+        coords = np.zeros((n, 3), np.int32)
+        bidx = np.zeros((n,), np.int32)
+        valid = np.zeros((n,), bool)
+        for i, (b, c) in enumerate(live.values()):
+            coords[i] = c
+            bidx[i] = b
+            valid[i] = True
+        return coords, bidx, valid
+
+    def insert(count):
+        for _ in range(count):
+            if len(live) >= n:
+                return
+            b, c = sample(50)
+            if b is None:
+                return
+            live[key(b, c)] = (b, c)
+
+    def pick(count):
+        ks = list(live)
+        return [ks[i] for i in rng.permutation(len(ks))[:count]]
+
+    def evict(count):
+        for k in pick(count):
+            del live[k]
+
+    insert(int(n * 0.6))
+    yield emit()
+    for _ in range(n_frames - 1):
+        kind = kinds[int(rng.integers(0, len(kinds)))]
+        m = max(1, int(len(live) * turnover))
+        if kind == "churn":
+            evict(m)
+            insert(m)
+        elif kind == "insert_heavy":
+            insert(3 * m)
+        elif kind == "evict_heavy":
+            evict(3 * m)
+        elif kind in ("jitter", "teleport"):
+            for k in pick(m):
+                b, c = live.pop(k)
+                if kind == "jitter":
+                    c2 = np.clip(c + rng.integers(-1, 2, 3), 0, extent - 1)
+                else:
+                    c2 = rng.integers(0, extent, 3)
+                if key(b, c2) not in live:
+                    live[key(b, c2)] = (b, c2)
+        elif kind == "identical":
+            pass
+        else:
+            raise ValueError(f"unknown frame kind {kind!r}")
+        yield emit()
+
+
 #: the degenerate-cloud taxonomy exercised by tests/test_robustness.py
 DEGENERATE_KINDS = ("empty", "single", "all_duplicate", "all_out_of_grid",
                     "nan_coords")

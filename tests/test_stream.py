@@ -1,0 +1,473 @@
+"""Streaming delta updates vs from-scratch oracle (DESIGN.md §15).
+
+The contract under test is a *bit*-identity, not an allclose: for every
+frame of a generated sequence, the incrementally-updated stage-1
+QueryTable and subm3 kmap (core/stream.py) must equal a from-scratch
+``octent.ops`` build over the same canonical slot arrays — at the table
+level, the plan level, and the MinkUNet-forward level. The sequences
+come from :func:`tests.proptest.frame_sequence` (churn / insert-heavy /
+evict-heavy / jitter / teleport / identical mixes); the degenerate ends
+(empty delta, 100 % turnover, boundary drift, capacity overflow
+mid-sequence, rehydrated anchorless pins) each get a directed test.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as planlib
+from repro.core import stream, validate
+from repro.kernels.octent import ops as oct_ops
+from repro.models import minkunet
+from repro.runtime import feature_cache, persist
+from tests.proptest import forall, frame_sequence, random_cloud
+
+GB, BB = 5, 2            # 32 blocks/axis, 4 batches — small jit shapes
+TINY = minkunet.MinkUNetConfig(name="tiny", in_ch=3, classes=4, stem=8,
+                               enc=(8, 8), dec=(8, 8), blocks=1,
+                               grid_bits=GB, batch_bits=BB)
+
+
+def _assert_table_equal(a: oct_ops.QueryTable, b: oct_ops.QueryTable,
+                        msg: str = ""):
+    for name, x, y in zip(oct_ops.QueryTable._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} QueryTable.{name}")
+
+
+def _oracle(nc, nb, nv, mb):
+    """From-scratch stage-1 + stage-2 build over the canonical arrays."""
+    table = oct_ops.build_query_table(nc, nb, nv, max_blocks=mb,
+                                      grid_bits=GB, batch_bits=BB)
+    kmap, _ = oct_ops.build_kmap(nc, nb, nv, max_blocks=mb, grid_bits=GB,
+                                 batch_bits=BB, impl="ref", table=table)
+    return table, kmap
+
+
+def _delta_step(st: stream.FrameState, frame, mb):
+    """One frame through the raw delta path (diff + splice + partial
+    re-query) — the same calls StreamSession makes, without the session
+    so the test owns every intermediate."""
+    c, b, v = frame
+    delta, nc, nb, nv = stream.diff_frame(st, c, b, v, max_blocks=mb,
+                                          grid_bits=GB, batch_bits=BB)
+    n = st.coords.shape[0]
+    n_dirty = int(delta.n_dirty_rows)
+    if n_dirty == 0:
+        return delta, stream.FrameState(nc, nb, nv, st.table, st.kmap)
+    table = stream.apply_table_delta(st.table, delta, st.coords, st.batch,
+                                     nc, nb, max_blocks=mb, grid_bits=GB,
+                                     batch_bits=BB)
+    rows = stream.pack_dirty_rows(delta.dirty_rows,
+                                  stream.row_budget(n_dirty, n))
+    assert rows is not None
+    kmap, _ = oct_ops.build_kmap(nc, nb, nv, max_blocks=mb, grid_bits=GB,
+                                 batch_bits=BB, impl="ref", table=table,
+                                 update=oct_ops.KmapUpdate(
+                                     st.kmap, jnp.asarray(rows)))
+    return delta, stream.FrameState(nc, nb, nv, table, kmap)
+
+
+# ---------------------------------------------------------------------------
+# The property: incremental == from-scratch, bit for bit, every frame
+# ---------------------------------------------------------------------------
+
+@forall()
+def test_stream_parity_over_sequences(rng):
+    """25 seeds x 8 transitions = 200 generated frame transitions, each
+    asserted bit-identical to the direct ``octent.ops`` oracle (not to a
+    second run of the delta code — shared-bug blindness)."""
+    n, mb = 128, 64
+    st = stream.empty_state(n, max_blocks=mb, grid_bits=GB, batch_bits=BB)
+    for t, frame in enumerate(frame_sequence(rng, 9, n, 48, batch=2,
+                                             turnover=0.2)):
+        old = st
+        delta, st = _delta_step(st, frame, mb)
+        t_ref, k_ref = _oracle(st.coords, st.batch, st.valid, mb)
+        _assert_table_equal(st.table, t_ref, f"frame {t}")
+        np.testing.assert_array_equal(np.asarray(st.kmap),
+                                      np.asarray(k_ref),
+                                      err_msg=f"frame {t} kmap")
+        # the slot contract: surviving voxels keep their rows verbatim
+        kept = np.asarray(old.valid) & ~np.asarray(delta.evicted)
+        np.testing.assert_array_equal(np.asarray(st.coords)[kept],
+                                      np.asarray(old.coords)[kept])
+        assert np.asarray(st.valid)[kept].all()
+
+
+def _sessions(cfg, n, mb, **kw):
+    """A delta session and its scratch twin (enabled=False rebuilds every
+    level from scratch; content=False keeps the twin honest — no plan
+    could be served without searching)."""
+    d = stream.StreamSession(
+        cfg, n, max_blocks=mb, search_impl="ref", enabled=True,
+        cache=planlib.PlanCache(pinned=feature_cache.PinnedStore()), **kw)
+    s = stream.StreamSession(
+        cfg, n, max_blocks=mb, search_impl="ref", enabled=False,
+        cache=planlib.PlanCache(content=False,
+                                pinned=feature_cache.PinnedStore()), **kw)
+    return d, s
+
+
+@forall(4)
+def test_stream_session_plan_and_forward_parity(rng):
+    """Session-level parity: per-level state, subm3 plan kmaps, slot
+    assignment, and full MinkUNet logits, delta vs scratch."""
+    n, mb = 256, 64
+    d, s = _sessions(TINY, n, mb)
+    params = minkunet.init_model(TINY, jax.random.key(0))
+    for t, (c, b, v) in enumerate(frame_sequence(rng, 6, n, 32, batch=2,
+                                                 turnover=0.15)):
+        dd = d.advance(c, b, v)
+        ds = s.advance(c, b, v)
+        np.testing.assert_array_equal(np.asarray(dd.slot_of),
+                                      np.asarray(ds.slot_of))
+        for r in range(d.levels):
+            a, o = d.states[r], s.states[r]
+            np.testing.assert_array_equal(np.asarray(a.coords),
+                                          np.asarray(o.coords),
+                                          err_msg=f"frame {t} level {r}")
+            np.testing.assert_array_equal(np.asarray(a.valid),
+                                          np.asarray(o.valid))
+            _assert_table_equal(a.table, o.table, f"frame {t} level {r}")
+            np.testing.assert_array_equal(np.asarray(a.kmap),
+                                          np.asarray(o.kmap))
+            np.testing.assert_array_equal(
+                np.asarray(d.plans.subm[r].kmap),
+                np.asarray(s.plans.subm[r].kmap))
+        feats = rng.standard_normal((n, TINY.in_ch)).astype(np.float32)
+        la = d.forward(params, jnp.asarray(feats), impl="xla")
+        lb = s.forward(params, jnp.asarray(feats), impl="xla")
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"frame {t} logits")
+    d.close()
+    s.close()
+
+
+def test_stream_session_delta_coverage():
+    """A moving-sensor replay (edge-localized turnover — the workload
+    streaming exists for) must actually take the delta path, search
+    strictly fewer rows than its scratch twin, and stay bit-identical
+    at the forward level. Random uniform churn (above) dirties too many
+    blocks to guarantee coverage; this scene guarantees it."""
+    from repro.data.pointcloud import moving_sensor_sequence
+    n, mb = 512, 64
+    frames = moving_sensor_sequence(np.random.default_rng(5), 6, n,
+                                    window=128, step=8, depth=16,
+                                    density=0.2)
+    d, s = _sessions(TINY, n, mb)
+    params = minkunet.init_model(TINY, jax.random.key(1))
+    for t, f in enumerate(frames):
+        d.advance(f.coords, f.batch, f.valid)
+        s.advance(f.coords, f.batch, f.valid)
+        for r in range(d.levels):
+            _assert_table_equal(d.states[r].table, s.states[r].table,
+                                f"frame {t} level {r}")
+            np.testing.assert_array_equal(np.asarray(d.states[r].kmap),
+                                          np.asarray(s.states[r].kmap))
+        feats = jnp.asarray(f.feats[:, :TINY.in_ch])
+        np.testing.assert_array_equal(
+            np.asarray(d.forward(params, feats, impl="xla")),
+            np.asarray(s.forward(params, feats, impl="xla")),
+            err_msg=f"frame {t} logits")
+    ds, ss = d.stats(), s.stats()
+    assert ds["delta_levels"] > 0, "moving sensor never delta-patched"
+    assert ds["rows_searched"] < ss["rows_searched"], \
+        f"delta searched {ds['rows_searched']} rows, scratch " \
+        f"{ss['rows_searched']} — no saving"
+    d.close()
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# Degenerate ends of the turnover spectrum
+# ---------------------------------------------------------------------------
+
+def test_empty_delta_is_zero_query_rows():
+    """A byte-identical repeated frame must cost zero stage-2 query rows
+    on both no-op paths: the warm patch with n_dirty == 0 (content keys
+    off — the cache cannot serve it) and the content hit (keys on)."""
+    n, mb = 128, 64
+    frame = next(frame_sequence(np.random.default_rng(7), 1, n, 32))
+    for content in (False, True):
+        sess = stream.StreamSession(
+            TINY, n, max_blocks=mb, search_impl="ref", enabled=True,
+            cache=planlib.PlanCache(content=content,
+                                    pinned=feature_cache.PinnedStore()))
+        sess.advance(*frame)
+        before = sess.stats()
+        q0 = oct_ops.query_row_count()
+        d = sess.advance(*frame)
+        assert int(d.n_dirty_rows) == 0
+        assert oct_ops.query_row_count() == q0, \
+            f"identical frame re-queried rows (content={content})"
+        after = sess.stats()
+        key = "content_hit_levels" if content else "delta_levels"
+        assert after[key] - before[key] == sess.levels
+        assert after["rows_searched"] == before["rows_searched"]
+        assert after["kmap_rows_reused"] - before["kmap_rows_reused"] \
+            == sess.levels * n
+        sess.close()
+
+
+def test_full_turnover_matches_scratch():
+    """100 % turnover (disjoint frames) exceeds every delta threshold:
+    both sessions take the scratch path and still agree bit-for-bit."""
+    n, mb = 128, 64
+    rng = np.random.default_rng(11)
+    c1, b1, v1 = random_cloud(rng, n, 16, n_valid=96)
+    c2, b2, v2 = random_cloud(rng, n, 16, n_valid=96, origin=16)
+    d, s = _sessions(TINY, n, mb)
+    d.advance(c1, b1, v1)
+    s.advance(c1, b1, v1)
+    mid = d.stats()["full_levels"]      # frame 1 may delta from empty
+    d.advance(c2, b2, v2)
+    s.advance(c2, b2, v2)
+    for r in range(d.levels):
+        _assert_table_equal(d.states[r].table, s.states[r].table,
+                            f"level {r}")
+        np.testing.assert_array_equal(np.asarray(d.states[r].kmap),
+                                      np.asarray(s.states[r].kmap))
+    # level 0 (every row churned) must have rebuilt from scratch — upper
+    # levels may still legally delta-patch if their dirty set shrinks
+    assert d.stats()["full_levels"] > mid, \
+        "a 100%-turnover frame never took the scratch path"
+    t_ref, _ = _oracle(d.states[0].coords, d.states[0].batch,
+                       d.states[0].valid, mb)
+    _assert_table_equal(d.states[0].table, t_ref)
+    d.close()
+    s.close()
+
+
+def test_boundary_drift_drops_out_of_grid_rows():
+    """A sensor drifting past the grid limit: out-of-grid incoming rows
+    are invalidated inside the diff (never aliased into the table), and
+    the evolved state still matches the oracle over what remains."""
+    n, mb = 128, 64
+    limit = 16 << GB                                  # 512 for GB=5
+    st = stream.empty_state(n, max_blocks=mb, grid_bits=GB, batch_bits=BB)
+    rng = np.random.default_rng(13)
+    c, b, v = random_cloud(rng, n, 24, n_valid=80, origin=limit - 28)
+    for step in range(4):                             # march off the edge
+        cs = c + np.int32([8 * step, 0, 0])
+        delta, st = _delta_step(st, (cs, b, v), mb)
+        out = v & (cs >= limit).any(axis=1)
+        assert (np.asarray(delta.slot_of)[out] < 0).all(), \
+            "out-of-grid rows were assigned slots"
+        live = np.asarray(st.valid)
+        assert (np.asarray(st.coords)[live] < limit).all()
+        assert (np.asarray(st.coords)[live] >= 0).all()
+        t_ref, k_ref = _oracle(st.coords, st.batch, st.valid, mb)
+        _assert_table_equal(st.table, t_ref, f"step {step}")
+        np.testing.assert_array_equal(np.asarray(st.kmap),
+                                      np.asarray(k_ref))
+    assert int(st.valid.sum()) < int(v.sum())         # some fell off
+
+
+# ---------------------------------------------------------------------------
+# Capacity overflow mid-sequence
+# ---------------------------------------------------------------------------
+
+def _two_block_growth_frames(n):
+    """Frame 1 occupies 3 16^3 blocks; frame 2 keeps it and adds voxels
+    in 2 more — fits a dirty-block budget of 4 but overflows a 4-entry
+    directory only at splice time (the mid-stream overflow case)."""
+    rng = np.random.default_rng(17)
+    c = np.zeros((n, 3), np.int32)
+    b = np.zeros((n,), np.int32)
+    v = np.zeros((n,), bool)
+    seen = set()
+    blocks1 = [(0, 0, 0), (1, 0, 0), (0, 1, 0)]
+    i = 0
+    while i < 20:
+        bl = blocks1[int(rng.integers(0, 3))]
+        p = tuple(int(x) * 16 + int(y) for x, y in
+                  zip(bl, rng.integers(0, 14, 3)))
+        if p in seen:
+            continue
+        seen.add(p)
+        c[i], v[i] = p, True
+        i += 1
+    c2, v2 = c.copy(), v.copy()
+    for j, bl in enumerate([(1, 1, 0), (1, 1, 0), (0, 0, 1)]):
+        c2[i + j] = [x * 16 + 4 + j for x in bl]
+        v2[i + j] = True
+    return (c, b, v), (c2, b, v2)
+
+
+def test_overflow_mid_sequence_is_atomic():
+    """With replanning off, a block-table overflow surfaces as
+    CapacityOverflow and the session state is untouched — the stream
+    resumes at the previous frame as if the bad frame never arrived."""
+    n = 64
+    f1, f2 = _two_block_growth_frames(n)
+    sess = stream.StreamSession(
+        TINY, n, max_blocks=4, search_impl="ref", enabled=True,
+        replan=False,
+        cache=planlib.PlanCache(pinned=feature_cache.PinnedStore()))
+    sess.advance(*f1)
+    snap_valid = np.asarray(sess.states[0].valid).copy()
+    snap_stats = sess.stats()
+    with pytest.raises(validate.CapacityOverflow):
+        sess.advance(*f2)
+    assert sess.stats() == snap_stats, "counters committed on failure"
+    np.testing.assert_array_equal(np.asarray(sess.states[0].valid),
+                                  snap_valid)
+    assert sess.mb[0] == 4
+    # the pinned table was not corrupted: the same frame still replays
+    d = sess.advance(*f1)
+    assert int(d.n_dirty_rows) == 0
+    sess.close()
+
+
+def test_overflow_recovers_with_replan():
+    """With replanning on, the same overflow escalates max_blocks and
+    rebuilds from scratch (the delta is invalidated by the capacity
+    change), bit-identical to an oracle at the escalated capacity."""
+    n = 64
+    f1, f2 = _two_block_growth_frames(n)
+    sess = stream.StreamSession(
+        TINY, n, max_blocks=4, search_impl="ref", enabled=True,
+        replan=True,
+        cache=planlib.PlanCache(pinned=feature_cache.PinnedStore()))
+    sess.advance(*f1)
+    sess.advance(*f2)
+    assert sess.mb[0] > 4, "overflow did not escalate capacity"
+    st = sess.states[0]
+    t_ref, k_ref = _oracle(st.coords, st.batch, st.valid, sess.mb[0])
+    _assert_table_equal(st.table, t_ref)
+    np.testing.assert_array_equal(np.asarray(st.kmap), np.asarray(k_ref))
+    # and the stream continues: the next small delta patches again (one
+    # voxel jittered — identical would be a content hit, not a patch)
+    c3 = np.asarray(f2[0]).copy()
+    c3[22, 2] += 1
+    before = sess.stats()["delta_levels"]
+    sess.advance(c3, f2[1], f2[2])
+    assert sess.stats()["delta_levels"] > before
+    st = sess.states[0]
+    t_ref, _ = _oracle(st.coords, st.batch, st.valid, sess.mb[0])
+    _assert_table_equal(st.table, t_ref)
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# Persistence rehydration + pinned-store refcounts
+# ---------------------------------------------------------------------------
+
+def test_delta_over_rehydrated_anchorless_pin(tmp_path):
+    """Crash-restart mid-stream: tables rehydrated from a SnapshotStore
+    are anchorless, so a verify=True session must drop and rebuild them
+    (counted) rather than trust them — and the frames that follow still
+    delta-patch with full parity."""
+    n, mb = 128, 64
+    frames = list(frame_sequence(np.random.default_rng(19), 3, n, 32,
+                                 turnover=0.1))
+    snap = persist.SnapshotStore(str(tmp_path))
+    s1 = feature_cache.PinnedStore()
+    sess1 = stream.StreamSession(
+        TINY, n, max_blocks=mb, search_impl="ref", enabled=True,
+        cache=planlib.PlanCache(pinned=s1))
+    sess1.advance(*frames[0])
+    assert s1.save(snap) > 0
+    sess1.close()
+
+    s2 = feature_cache.PinnedStore(persist=snap)
+    assert s2.load() > 0
+    sess2 = stream.StreamSession(
+        TINY, n, max_blocks=mb, search_impl="ref", enabled=True,
+        cache=planlib.PlanCache(verify=True, pinned=s2))
+    sess2.advance(*frames[0])
+    assert s2.misses >= 1, \
+        "verify=True consumed a rehydrated anchorless table"
+    for frame in frames[1:]:
+        sess2.advance(*frame)
+        st = sess2.states[0]
+        t_ref, k_ref = _oracle(st.coords, st.batch, st.valid, mb)
+        _assert_table_equal(st.table, t_ref)
+        np.testing.assert_array_equal(np.asarray(st.kmap),
+                                      np.asarray(k_ref))
+    assert sess2.stats()["delta_levels"] > 0
+    sess2.close()
+
+
+def test_pinned_refcount_blocks_eviction():
+    """An acquired key survives byte-budget pressure: eviction skips
+    held entries (refetching around the stream, not through it), admits
+    over budget when everything is held, and resumes after release."""
+    arr = jnp.arange(2048, dtype=jnp.int32)
+    store = feature_cache.PinnedStore(capacity_bytes=2 * arr.nbytes)
+    store.put("a", arr)
+    store.put("b", arr + 1)
+    store.acquire("a")
+    store.acquire("b")
+    store.put("c", arr + 2)                 # nothing evictable
+    assert store.evictions_skipped >= 1
+    assert store.get("a") is not None and store.get("b") is not None
+    assert store.get("c") is not None       # admitted over budget
+    store.release("a")
+    assert store.refcount("a") == 0 and store.refcount("b") == 1
+    store.put("d", arr + 3)                 # "a" is now the FIFO victim
+    assert store.get("a") is None
+    assert store.get("b") is not None, "eviction went through a held pin"
+    st = store.stats()
+    assert st["held"] == 1 and st["evictions_skipped"] >= 1
+
+
+def test_session_close_releases_pins():
+    n, mb = 128, 64
+    store = feature_cache.PinnedStore()
+    sess = stream.StreamSession(
+        TINY, n, max_blocks=mb, search_impl="ref", enabled=True,
+        cache=planlib.PlanCache(pinned=store))
+    frame = next(frame_sequence(np.random.default_rng(23), 1, n, 32))
+    sess.advance(*frame)
+    assert any(store.refcount(k) for k in sess.pin_keys if k is not None)
+    sess.close()
+    sess.close()                            # idempotent
+    assert store.stats()["held"] == 0
+
+
+# ---------------------------------------------------------------------------
+# build_kmap(update=) unit behavior
+# ---------------------------------------------------------------------------
+
+def test_build_kmap_update_requires_table():
+    c, b, v = random_cloud(np.random.default_rng(0), 64, 32)
+    upd = oct_ops.KmapUpdate(jnp.full((64, 27), -1, jnp.int32),
+                             jnp.full((64,), -1, jnp.int32))
+    with pytest.raises(ValueError, match="update"):
+        oct_ops.build_kmap(jnp.asarray(c), jnp.asarray(b), jnp.asarray(v),
+                           max_blocks=64, grid_bits=GB, batch_bits=BB,
+                           impl="ref", update=upd)
+
+
+@forall(8)
+def test_build_kmap_update_restores_dirty_rows(rng):
+    """Listing rows as dirty re-resolves exactly those rows; unlisted
+    rows pass through bit-verbatim (even deliberately corrupted ones —
+    proof the update never touches them)."""
+    n = 128
+    c, b, v = random_cloud(rng, n, 48, batch=2)
+    c, b, v = jnp.asarray(c), jnp.asarray(b), jnp.asarray(v)
+    table = oct_ops.build_query_table(c, b, v, max_blocks=64, grid_bits=GB,
+                                      batch_bits=BB)
+    full, _ = oct_ops.build_kmap(c, b, v, max_blocks=64, grid_bits=GB,
+                                 batch_bits=BB, impl="ref", table=table)
+    dirty = np.sort(rng.choice(n, size=int(rng.integers(1, 64)),
+                               replace=False)).astype(np.int32)
+    prev = np.asarray(full).copy()
+    prev[dirty] = -7                        # corrupt exactly the dirty rows
+    rows = np.full((n,), -1, np.int32)
+    rows[:dirty.size] = dirty
+    out, _ = oct_ops.build_kmap(c, b, v, max_blocks=64, grid_bits=GB,
+                                batch_bits=BB, impl="ref", table=table,
+                                update=oct_ops.KmapUpdate(
+                                    jnp.asarray(prev), jnp.asarray(rows)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(full))
+    # an empty row list is a pure passthrough of the previous kmap
+    none_rows = jnp.full((n,), -1, jnp.int32)
+    out2, _ = oct_ops.build_kmap(c, b, v, max_blocks=64, grid_bits=GB,
+                                 batch_bits=BB, impl="ref", table=table,
+                                 update=oct_ops.KmapUpdate(
+                                     jnp.asarray(prev), none_rows))
+    np.testing.assert_array_equal(np.asarray(out2), prev)
